@@ -1,0 +1,76 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import image_batch
+
+
+def timed(fn: Callable, *args, repeats: int = 3):
+    """(result, us_per_call) — median wall time."""
+    fn(*args)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else out
+        times.append(time.perf_counter() - t0)
+    return out, float(np.median(times) * 1e6)
+
+
+def train_image_classifier(params, apply_fn, *, steps: int, batch: int,
+                           n_classes: int, hw: int, channels: int,
+                           lr: float = 2e-3, seed: int = 0,
+                           eval_batches: int = 4, noise: float = 0.35):
+    """Small-step Adam training on the synthetic class-blob task.
+
+    Returns (trained params, accuracy, loss_history). The task is linearly
+    separable-ish, so relative accuracy between operator modes mirrors the
+    paper's Table I ordering at a laptop-scale budget.
+    """
+    from repro.configs.base import TrainConfig
+    from repro.train import optimizer as opt_mod
+
+    tcfg = TrainConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                       total_steps=steps, weight_decay=0.0)
+    opt = opt_mod.make_adamw(tcfg)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        logits = apply_fn(p, x)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    @jax.jit
+    def step_fn(p, s, x, y, i):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        g, _ = opt_mod.clip_by_global_norm(g, 1.0)
+        upd, s = opt.update(g, s, p, i)
+        return opt_mod.apply_updates(p, upd), s, loss
+
+    hist = []
+    for i in range(steps):
+        x, y = image_batch(batch, n_classes, hw, channels, i, seed=seed,
+                           noise=noise)
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(x), jnp.asarray(y),
+                                          jnp.asarray(i))
+        hist.append(float(loss))
+
+    @jax.jit
+    def acc_fn(p, x, y):
+        return jnp.mean(jnp.argmax(apply_fn(p, x), -1) == y)
+
+    accs = []
+    for j in range(eval_batches):
+        x, y = image_batch(batch, n_classes, hw, channels, 10_000 + j,
+                           seed=seed, noise=noise)
+        accs.append(float(acc_fn(params, jnp.asarray(x), jnp.asarray(y))))
+    return params, float(np.mean(accs)), hist

@@ -1,0 +1,35 @@
+"""Kernel micro-benchmarks: MF dual-matmul vs typical matmul cost, and the
+CIM MAV kernel vs its einsum reference (CPU wall time; the TPU story is in
+the dry-run roofline where MF costs exactly 2x matmul FLOPs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core.cim import CimConfig, cim_mf_matmul
+from repro.core.mf import mf_correlate_ref
+
+
+def run(quick: bool = True):
+    rows = []
+    m = 256 if quick else 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
+
+    reg = jax.jit(lambda a, b: a @ b)
+    mf = jax.jit(mf_correlate_ref)
+    _, us_reg = timed(reg, x, w, repeats=5)
+    _, us_mf = timed(mf, x, w, repeats=5)
+    rows.append(("kernel_regular_matmul", us_reg, f"{m}x512x512"))
+    rows.append(("kernel_mf_dual_matmul", us_mf,
+                 f"ratio_vs_regular={us_mf / us_reg:.2f} (2.0 = FLOP model)"))
+
+    cim = jax.jit(lambda a, b: cim_mf_matmul(
+        a, b, CimConfig(8, 8, 5, 31)))
+    xs, ws = x[:32], w[:, :64]
+    _, us_cim = timed(cim, xs, ws, repeats=3)
+    rows.append(("kernel_cim_bitplane_sim", us_cim, "32x512x64 8b/5b"))
+    return rows

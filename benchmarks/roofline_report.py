@@ -1,0 +1,65 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/*.json and emits one row per (arch x shape x mesh)
+with the three roofline terms, the dominant bottleneck, MODEL_FLOPS
+ratio, and per-device memory. Also writes artifacts/roofline.md for
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_records(art_dir: str = ART_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | coll s | "
+             "dominant | useful ratio | peak GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("tag"):
+            continue
+        rf = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        peak = ma.get("peak_memory_in_bytes", 0) if isinstance(ma, dict) \
+            else 0
+        ratio = (r["model_flops_per_chip"] / rf["flops"]
+                 if rf["flops"] else float("nan"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {ratio:.3f} | {peak / 1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    ok = [r for r in recs if r.get("status") == "ok" and not r.get("tag")]
+    err = [r for r in recs if r.get("status") != "ok"]
+    rows.append(("roofline_cells_ok", 0.0, str(len(ok))))
+    rows.append(("roofline_cells_error", 0.0, str(len(err))))
+    for r in ok:
+        rf = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+            f"dom={rf['dominant']} bound={max(rf['compute_s'], rf['memory_s'], rf['collective_s']):.4f}s "
+            f"c/m/x={rf['compute_s']:.3f}/{rf['memory_s']:.3f}/"
+            f"{rf['collective_s']:.3f}"))
+    md = markdown_table(recs)
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.md", "w") as f:
+        f.write(md + "\n")
+    return rows

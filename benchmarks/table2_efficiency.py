@@ -1,0 +1,48 @@
+"""Table II: macro-level TOPS/W of the compute-in-SRAM µArrays.
+
+Model-derived (Eq. 4 with calibrated constants — see core/energy.py):
+paper design points 8x62 -> ~105 TOPS/W (5-bit ADC), 8x30 -> ~84 TOPS/W
+(4-bit ADC). Also reports the paper's comparison rows and the Fig. 6
+energy split / hold-voltage trade-off.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core.cim import CimConfig
+from repro.core import energy as E
+
+
+def run(quick: bool = True):
+    rows = []
+    cfg62 = CimConfig(w_bits=8, x_bits=8, adc_bits=5, m_columns=31)
+    cfg30 = CimConfig(w_bits=8, x_bits=8, adc_bits=4, m_columns=15)
+
+    (v62, us62) = timed(E.tops_per_watt, cfg62)
+    (v30, us30) = timed(E.tops_per_watt, cfg30)
+    rows.append(("table2_tops_w_8x62", us62, f"{v62:.2f} (paper ~105)"))
+    rows.append(("table2_tops_w_8x30", us30, f"{v30:.2f} (paper ~84)"))
+    rows.append(("table2_latency_cycles_8x62", 0.0,
+                 f"{E.unit_op_cycles(cfg62)} (=W_P*(1+2A_P))"))
+    rows.append(("table2_unit_energy_pJ_8x62", 0.0,
+                 f"{E.unit_op_energy_j(cfg62) * 1e12:.3f}"))
+
+    split = E.energy_split(cfg62)
+    rows.append(("fig6b_energy_split", 0.0,
+                 f"mav={split['mav']:.2f} digit={split['digitization']:.2f} "
+                 f"leak={split['leakage']:.4f} (paper 0.44/0.55/<0.01)"))
+    for v in (0.3, 0.4, 0.5):
+        rows.append((f"fig6a_hold_{v}V", 0.0,
+                     f"leak={E.leakage_vs_hold_voltage(v) * 1e9:.2f}nW "
+                     f"t_dis={E.discharge_time_vs_hold_voltage(v) * 1e12:.0f}ps"))
+
+    # paper comparison rows (their reported numbers, for the table)
+    rows.append(("table2_ref_su_isscc20_28nm", 0.0, "7 TOPS/W"))
+    rows.append(("table2_ref_yue_isscc20_65nm", 0.0, "2.96 TOPS/W"))
+    rows.append(("table2_ref_dong_isscc20_7nm_4b", 0.0, "321 TOPS/W"))
+    rows.append(("table2_ref_c3sram_65nm_1b", 0.0, "671.5 TOPS/W"))
+    rows.append(("table2_advantage_vs_28nm", 0.0,
+                 f"{v62 / 7:.1f}x (paper 15x)"))
+    rows.append(("table2_advantage_vs_65nm", 0.0,
+                 f"{v62 / 2.96:.1f}x (paper 35x)"))
+    return rows

@@ -1,0 +1,55 @@
+"""Batched serving with continuous batching (slot recycling).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+
+Runs the serve engine (smoke config) over a wave of synthetic requests:
+prompts are ingested through the same jitted decode step, finished slots
+are recycled for waiting requests. Works for every decode-capable arch,
+including the recurrent ones (O(1) decode state).
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    if cfg.family == "encdec":
+        raise SystemExit("enc-dec serving: see the whisper decode path in "
+                         "tests/test_models.py")
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, slots=args.slots, max_len=64,
+                         temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(map(int, rng.integers(
+        0, cfg.vocab_size, args.prompt_len))),
+        max_new_tokens=args.new_tokens) for _ in range(args.requests)]
+    t0 = time.time()
+    done = engine.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"[serve] arch={args.arch} {len(done)}/{args.requests} requests "
+          f"done, {toks} new tokens in {dt:.2f}s -> {toks / dt:.1f} tok/s "
+          f"with {args.slots} slots")
+    for i, r in enumerate(done[:3]):
+        print(f"[serve] req{i} out[:8] = {r.out[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Config schema: architecture, MF-technique, parallelism, and shapes.
+
+Every assigned architecture is a `ModelConfig` in its own module under
+`repro/configs/`; `repro.configs.registry` maps ``--arch <id>`` to it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.cim import CimConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0              # expert hidden dim
+    capacity_factor: float = 1.25
+    expert_capacity_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MFTechniqueConfig:
+    """How the paper's technique is applied to this architecture."""
+
+    enabled: bool = True
+    mode: str = "mf"                  # 'mf' | 'mf_kernel' | 'cim_sim'
+    threshold: float = 2.0            # ops/param mixed-mapping threshold
+    cim: CimConfig = dataclasses.field(default_factory=CimConfig)
+    # Which projection groups run MF when enabled (mixed mapping; embeds,
+    # logits and routers are always digital, matching the paper).
+    attn_qkv: bool = True
+    attn_out: bool = True
+    mlp: bool = True
+    experts: bool = True
+    delta_sigma: float = 0.5
+    delta_coeff: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # lm | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention flavour
+    attn_type: str = "gqa"            # 'gqa' | 'mla'
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    window: Optional[int] = None      # sliding window for local attention
+    # mlp flavour
+    mlp_type: str = "silu_glu"        # silu_glu | geglu | gelu | sq_relu
+    norm_type: str = "rmsnorm"        # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # block pattern for hybrid archs; None -> all-attention
+    block_pattern: Optional[tuple[str, ...]] = None
+    # subconfigs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    # encoder-decoder (whisper): n_layers counts DECODER layers
+    encoder_layers: int = 0
+    max_decoder_len: int = 448
+    # vlm stub frontend
+    vision_tokens: int = 0
+    vision_embed_dim: int = 0
+    # rg-lru / xlstm
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # MF technique
+    mf: MFTechniqueConfig = dataclasses.field(default_factory=MFTechniqueConfig)
+    # numerics
+    dtype: Any = jnp.bfloat16
+    attn_block: int = 1024            # online-softmax KV block
+    # statically skip fully-masked (q,kv) block pairs (§Perf; exact)
+    attn_block_skip: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        return self.block_pattern or ("attn",)
+
+    def layer_kinds(self) -> list[str]:
+        pat = self.pattern
+        return [pat[i % len(pat)] for i in range(self.n_layers)]
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode state is O(window) or O(1) — long_500k eligible."""
+        return set(self.layer_kinds()) <= {"rglru", "local_attn", "mlstm",
+                                           "slstm"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell: an input-shape point for an architecture."""
+
+    name: str                         # train_4k | prefill_32k | ...
+    seq_len: int
+    global_batch: int
+    kind: str                         # 'train' | 'prefill' | 'decode'
+
+
+LM_SHAPES: tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh axis usage. Axis names must exist in the active mesh."""
+
+    dp_axes: tuple[str, ...] = ("data",)   # ('pod','data') multi-pod
+    tp_axis: str = "model"
+    fsdp: bool = True                      # shard params over dp (ZeRO-3)
+    use_ep: bool = True                    # expert parallelism for MoE
+    # EP mesh axes: ('model',) = 16-way; ('data','model') = wide 256-way EP
+    # (DeepSeek-style — one expert per chip, all_to_all stays intra-pod).
+    ep_axes: tuple[str, ...] = ("model",)
+    seq_shard_cache: bool = True           # flash-decode KV sharding
+    remat: str = "block"                   # 'none' | 'block'
+    microbatches: int = 1                  # grad-accum pipeline
+    # Fully unroll the layer scan. Used by the dry-run's cost-measurement
+    # variants: XLA cost_analysis counts a while-loop body ONCE, so
+    # roofline FLOPs/bytes are extrapolated from unrolled shallow models.
+    scan_unroll: bool = False
+    # Wide-EP fast path when one expert lives per shard (§Perf iteration).
+    moe_fuse_single_expert: bool = True
+    # Serving layout (§Perf HC3): weight-stationary mega-axis TP — shard
+    # projection OUT dims over (data x model) where divisible (fallback:
+    # model only) and never the contraction dim, so decode moves ~MB of
+    # activations per layer instead of all-gathering GBs of weights.
+    serve_tp_megaaxis: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_compression: Optional[str] = None  # None | 'int8_ef'
+    opt_state_dtype: str = "float32"        # 'float32' | 'int8' (quantised)

@@ -1,0 +1,33 @@
+"""internvl2-76b [vlm] — InternViT (stub) + Llama3-70B-class LM backbone.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 [arXiv:2404.16821].
+The ViT frontend is a STUB: `input_specs` provides precomputed patch
+embeddings (B, 256, 3200) that the model projects to d_model and prepends.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    vision_tokens=256,
+    vision_embed_dim=3200,
+    mlp_type="silu_glu",
+    rope_theta=5e5,
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=128,
+                            vision_tokens=4, vision_embed_dim=24,
+                            dtype=jnp.float32)

@@ -1,0 +1,34 @@
+"""llama4-scout-17b-a16e [moe] — 16 routed experts top-1 + 1 shared.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192/expert vocab=202048
+[hf:meta-llama/Llama-4-Scout-17B-16E]. Early-fusion multimodal frontend is
+out of scope for the LM shapes (text backbone only).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    moe=MoEConfig(n_experts=16, top_k=1, n_shared=1, d_ff_expert=8192),
+    rope_theta=5e5,
+    mlp_type="silu_glu",
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64,
+    vocab_size=128, moe=MoEConfig(n_experts=4, top_k=1, n_shared=1,
+                                  d_ff_expert=64),
+    dtype=jnp.float32,
+)

@@ -1,0 +1,31 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA, head_dim 128, tied embeddings.
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936 [hf:Qwen/Qwen3].
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="lm",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    tie_embeddings=True,
+    mlp_type="silu_glu",
+    rope_theta=1e6,
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=128,
+                            head_dim=16, dtype=jnp.float32)

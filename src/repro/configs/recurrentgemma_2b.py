@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2 pattern.
+
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000, window 2048
+[arXiv:2402.19427]. Sub-quadratic: runs the long_500k shape.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256000,
+    window=2048,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    lru_width=2560,
+    conv_width=4,
+    mlp_type="geglu",
+    rope_theta=1e4,
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=3, d_model=64, n_heads=4,
+                            n_kv_heads=1, d_ff=128, vocab_size=128,
+                            window=16, lru_width=64, dtype=jnp.float32)

@@ -1,0 +1,109 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (+ smoke variant),
+shape applicability, and ShapeDtypeStruct input specs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig
+
+_ARCH_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "starcoder2-7b": "starcoder2_7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-base": "whisper_base",
+    "internvl2-76b": "internvl2_76b",
+    "xlstm-350m": "xlstm_350m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+# The paper's own evaluation networks (convnets; run by benchmarks/examples,
+# not the LM dry-run).
+PAPER_MODELS = ("paper-mnist-lenet5", "paper-cifar10-cnn",
+                "paper-cifar100-mobilenetv2")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_applicability(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> tuple[bool, str]:
+    """(applicable, reason-if-not) for one (arch x shape) cell."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("full-attention arch: 500k decode needs sub-quadratic "
+                       "attention (DESIGN.md skip note)")
+    return True, ""
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[ShapeConfig]:
+    return [s for s in LM_SHAPES if shape_applicability(cfg, s)[0]]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation. For decode cells
+    the cache specs come from `eval_shape` over the cache initialiser.
+    """
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            t_dec = min(cfg.max_decoder_len, t)
+            return {
+                "frames": jax.ShapeDtypeStruct((b, t, cfg.d_model),
+                                               cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((b, t_dec), i32),
+                "targets": jax.ShapeDtypeStruct((b, t_dec), i32),
+            }
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((b, t, cfg.d_model),
+                                                   cfg.dtype)}
+        # decode: one token against a seq_len-deep self-attn cache plus
+        # the encoder cross-cache
+        from repro.models import encdec as E
+        cache = jax.eval_shape(
+            lambda: E.encdec_init_cache(cfg, b, t, enc_len=t))
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32), "cache": cache}
+
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.vision_tokens:
+            specs["tokens"] = jax.ShapeDtypeStruct(
+                (b, t - cfg.vision_tokens), i32)
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.vision_embed_dim), cfg.dtype)
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct(
+                specs["tokens"].shape, i32)
+        return specs
+
+    # decode
+    from repro.models import transformer as T
+    cache = jax.eval_shape(lambda: T.lm_init_cache(cfg, b, t))
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32), "cache": cache}
+
+
+def all_cells(smoke: bool = False):
+    """Every (arch, shape) cell with applicability annotations."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=smoke)
+        full = get_config(arch, smoke=False)
+        for shape in LM_SHAPES:
+            ok, reason = shape_applicability(full, shape)
+            cells.append((arch, shape, ok, reason))
+    return cells

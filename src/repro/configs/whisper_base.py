@@ -1,0 +1,30 @@
+"""whisper-base [audio] — enc-dec backbone; conv/mel frontend is a STUB.
+
+6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865 [arXiv:2212.04356].
+`input_specs` provides precomputed frame embeddings (B, T, d_model).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    encoder_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    norm_type="layernorm",
+    mlp_type="gelu",
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=2, encoder_layers=2, d_model=64,
+                            n_heads=4, n_kv_heads=4, d_ff=128,
+                            vocab_size=128, dtype=jnp.float32)

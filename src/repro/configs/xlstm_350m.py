@@ -1,0 +1,31 @@
+"""xlstm-350m [ssm] — mLSTM + sLSTM blocks, 7:1 ratio.
+
+24L d_model=1024 4H d_ff=0 (projections live inside the blocks)
+vocab=50304 [arXiv:2405.04517]. Sub-quadratic: runs long_500k.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    conv_width=4,
+    norm_type="layernorm",
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = dataclasses.replace(CONFIG, n_layers=4, d_model=32, n_heads=2,
+                            n_kv_heads=2, vocab_size=128,
+                            block_pattern=("mlstm", "mlstm", "mlstm",
+                                           "slstm"), dtype=jnp.float32)

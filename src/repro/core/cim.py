@@ -1,0 +1,194 @@
+"""Behavioural compute-in-SRAM simulator (paper Sec. IV).
+
+Models the µArray execution of the MF operator bit-for-bit:
+
+  * operands quantised to W_P-bit weights / X_P-bit inputs (sign-magnitude),
+  * |w| bitplanes stored as rows, one output channel per µArray,
+  * the K contraction dim split into column chunks of M (µArray half width);
+    padded columns store 0 so they never discharge (denominator stays M),
+  * per (chunk, plane): multiply-average MAV = (1/M) sum_j bit_pj * step_j,
+  * SA-ADC digitisation of each MAV to A_P bits (uniform mid-tread code on
+    [0, 1]; code = round(MAV * (2^A_P - 1)) — exactly lossless when
+    2^A_P >= M + 1, reproducing the paper's 8x62 -> 5-bit / 8x30 -> 4-bit
+    pairings),
+  * Eq. 2 recombination with the two residues: sum|x| via an ADC'd dummy
+    all-ones row, sum|w| as an exact digital weight statistic.
+
+Optional process variability (core/variability.py) perturbs the charge
+averaging with per-column capacitor mismatch and adds comparator offset
+before digitisation.
+
+This path is forward-only hardware emulation; ``cim_mf_matmul_ste`` wraps it
+with a straight-through estimator whose backward is the float MF surrogate
+gradient, enabling hardware-in-the-loop QAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.mf import mf_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class CimConfig:
+    """Geometry + precision of a compute-in-SRAM macro.
+
+    The paper's two design points:
+      8x62 µArray: m_columns=31 (per half), adc_bits=5  (~105 TOPS/W)
+      8x30 µArray: m_columns=15 (per half), adc_bits=4  (~84 TOPS/W)
+    """
+
+    w_bits: int = 8          # weight precision W_P (sign + W_P-1 planes)
+    x_bits: int = 8          # input precision
+    adc_bits: int = 5        # SA-ADC precision A_P
+    m_columns: int = 31      # columns per µArray half (vector-parallelism l)
+    use_kernel: bool = False  # route the MAV loop through the Pallas kernel
+
+    @property
+    def w_planes(self) -> int:
+        return self.w_bits - 1
+
+    @property
+    def x_planes(self) -> int:
+        return self.x_bits - 1
+
+
+def adc_quantize(mav: jax.Array, adc_bits: int,
+                 comparator_offset: Optional[jax.Array] = None) -> jax.Array:
+    """SA-ADC transfer: uniform A_P-bit code on [0,1], returned dequantised.
+
+    code = clip(round(mav * (2^A_P - 1))): the capacitive-DAC binary search
+    settles on the nearest of 2^A_P evenly spaced reference levels. A
+    comparator offset (fraction of full scale) shifts every comparison.
+    """
+    levels = 2 ** adc_bits - 1
+    v = mav if comparator_offset is None else mav + comparator_offset
+    code = jnp.clip(jnp.round(v * levels), 0, levels)
+    return code / levels
+
+
+def _chunk(v: jax.Array, m: int, axis_len: int) -> jax.Array:
+    """Pad the contraction axis (last) to a multiple of m and fold it."""
+    pad = (-axis_len) % m
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    return v.reshape(v.shape[:-1] + ((axis_len + pad) // m, m))
+
+
+def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
+                  cap_weights: Optional[jax.Array] = None,
+                  comparator_offset: Optional[jax.Array] = None) -> jax.Array:
+    """Hardware-faithful MF correlation x:(...,K) (+) w:(K,N) -> (...,N).
+
+    cap_weights: optional (K_padded,) positive per-column capacitor weights
+    (1.0 = nominal) applied to the charge averaging (variability injection).
+    comparator_offset: optional scalar/broadcastable offset in full-scale
+    fractions added inside the ADC.
+    """
+    K, N = w.shape
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+
+    sw = quant.calibrate_scale(w, cfg.w_bits)
+    sx = quant.calibrate_scale(x2, cfg.x_bits)
+    wq = quant.quantize(w, sw, cfg.w_bits)          # (K, N) int
+    xq = quant.quantize(x2, sx, cfg.x_bits)         # (B, K) int
+
+    # Sign bits are stored SEPARATELY from the magnitude planes in the
+    # µArray (sign row + W_P-1 magnitude rows), so they come from the
+    # ORIGINAL operand sign — a weight whose magnitude truncates to zero
+    # keeps its true sign bit (quantising first would flip small negative
+    # weights to +, a large systematic error at low W_P).
+    step_w = (w >= 0).astype(jnp.float32)           # (K, N)
+    step_x = (x2 >= 0).astype(jnp.float32)          # (B, K)
+    abs_w = jnp.abs(wq)
+    abs_x = jnp.abs(xq)
+
+    w_planes = quant.bitplanes(abs_w, cfg.w_bits)   # (Pw, K, N)
+    x_planes = quant.bitplanes(abs_x, cfg.x_bits)   # (Px, B, K)
+
+    m = cfg.m_columns
+    nchunks = -(-K // m)
+
+    if cfg.use_kernel and cap_weights is None and comparator_offset is None:
+        # Fused Pallas path (no variability injection): per-chunk MAV + ADC
+        # + plane recombination without materialising the MAV tensor.
+        from repro.kernels import ops as kops
+        s1 = kops.cim_mav(step_x, w_planes, m_columns=m,
+                          adc_bits=cfg.adc_bits)                     # (B, N)
+        s2 = kops.cim_mav(step_w.T, jnp.moveaxis(x_planes, 1, -1),
+                          m_columns=m, adc_bits=cfg.adc_bits).T      # (B, N)
+        r_x = kops.cim_mav(jnp.ones((1, K), jnp.float32),
+                           jnp.moveaxis(x_planes, 1, -1),
+                           m_columns=m, adc_bits=cfg.adc_bits).T     # (B, 1)
+        r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
+        y = (sw * (2.0 * s1 - r_w) + sx * (2.0 * s2 - r_x))
+        return y.reshape(batch_shape + (N,)).astype(x.dtype)
+
+    if cap_weights is None:
+        cap = jnp.ones((nchunks, m), jnp.float32)
+    else:
+        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
+    cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
+
+    def adc(mav: jax.Array) -> jax.Array:
+        return adc_quantize(mav, cfg.adc_bits, comparator_offset)
+
+    # --- term S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator) ----------
+    # planes of |w| against the step(x) column gates, charge-averaged per
+    # (chunk, plane) with the (possibly mismatched) column capacitors.
+    wp = _chunk(jnp.moveaxis(w_planes, -1, 0), m, K)             # (N, Pw, C, m)
+    gx = _chunk(step_x, m, K)                                    # (B, C, m)
+    num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
+    mavs1 = adc(num1 / cap_sum[None, None, None, :])             # (B, N, Pw, C)
+    pw = 2.0 ** jnp.arange(cfg.w_planes)
+    s1 = m * jnp.einsum("bnpc,p->bn", mavs1, pw)
+
+    # --- term S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator) ----------
+    xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
+    gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
+    num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
+    mavs2 = adc(num2 / cap_sum[None, None, None, :])             # (Px, B, N, C)
+    px = 2.0 ** jnp.arange(cfg.x_planes)
+    s2 = m * jnp.einsum("pbnc,p->bn", mavs2, px)
+
+    # --- residues ---------------------------------------------------------
+    # R_x = sum_k |x|_k via the dummy all-ones row (also ADC'd in hardware;
+    # shared across every weight vector, so computed once per input).
+    num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
+    mavs_rx = adc(num_rx / cap_sum[None, None, :])               # (Px, B, C)
+    r_x = m * jnp.einsum("pbc,p->b", mavs_rx, px)[:, None]       # (B, 1)
+    # R_w = sum_k |w|_kn, precomputed digitally (exact).
+    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
+
+    # Eq. 2 recombination, then dequantise each side with its own scale.
+    sum_sign_x_abs_w = 2.0 * s1 - r_w          # sum sign(x)|w|
+    sum_sign_w_abs_x = 2.0 * s2 - r_x          # sum sign(w)|x|
+    y = sw * sum_sign_x_abs_w + sx * sum_sign_w_abs_x
+    return y.reshape(batch_shape + (N,)).astype(x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cim_mf_matmul_ste(x: jax.Array, w: jax.Array, cfg: CimConfig) -> jax.Array:
+    """CIM forward with straight-through MF surrogate backward (QAT)."""
+    return cim_mf_matmul(x, w, cfg)
+
+
+def _cim_ste_fwd(x, w, cfg):
+    return cim_mf_matmul(x, w, cfg), (x, w)
+
+
+def _cim_ste_bwd(cfg, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda a, b: mf_matmul(a, b, 0.5, 1.0), x, w)
+    return vjp(g)
+
+
+cim_mf_matmul_ste.defvjp(_cim_ste_fwd, _cim_ste_bwd)

@@ -1,0 +1,98 @@
+"""Fused bitplane-MAV + SA-ADC Pallas TPU kernel.
+
+Emulates the µArray inner loop of the CIM macro for one side of the MF
+operator: given 1-bit column gates G (B x K, e.g. step(x)) and weight
+magnitude bitplanes P (Pw x K x N, bit p of |w|), compute
+
+    S[b, n] = sum_p 2^p * sum_chunks M * ADC( (1/M) * sum_{j in chunk}
+                                              G[b, j] * P[p, j, n] )
+
+i.e. the digitised step-side partial sum of Eq. 2, with the SA-ADC's
+uniform (2^A_P - 1)-level transfer applied per (chunk, plane) MAV — exactly
+what `core/cim.py` computes, but fused so the (B, N, Pw, C) MAV tensor is
+never materialised in HBM.
+
+Hardware mapping: a µArray chunk holds M (e.g. 31) columns. M is not
+lane-aligned, so the K axis is laid out as C chunks padded to CHUNK_PAD=32
+lanes (pad columns store 0 bits: they never discharge, and the ADC divides
+by the true M). A 128-lane K tile therefore carries 4 chunks; the kernel
+does 4 (bb x 32) @ (32 x bn) MXU calls per tile and ADC-quantises each
+chunk's MAV before accumulating, scaled by 2^p * M.
+
+Grid: (B/bb, N/bn, Pw, C/4), plane+chunk innermost so the accumulator
+stays resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK_PAD = 32          # lanes per µArray chunk after padding
+CHUNKS_PER_TILE = 4     # 128-lane K tile carries 4 chunks
+
+
+def _cim_mav_kernel(g_ref, p_ref, o_ref, acc_ref, *, m_columns: int,
+                    adc_levels: int, n_planes: int, c_steps: int):
+    plane = pl.program_id(2)
+    chunk = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(plane == 0, chunk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...]            # (bb, 128) gates for 4 chunks
+    p = p_ref[0]              # (128, bn) bitplane for 4 chunks
+    scale = jnp.exp2(plane.astype(jnp.float32))
+    inv_m = 1.0 / m_columns
+    for s in range(CHUNKS_PER_TILE):
+        gs = g[:, s * CHUNK_PAD:(s + 1) * CHUNK_PAD]
+        ps = p[s * CHUNK_PAD:(s + 1) * CHUNK_PAD, :]
+        counts = jnp.dot(gs, ps, preferred_element_type=jnp.float32)
+        mav = counts * inv_m
+        code = jnp.clip(jnp.round(mav * adc_levels), 0.0, adc_levels)
+        acc_ref[...] += (scale * m_columns / adc_levels) * code
+
+    @pl.when(jnp.logical_and(plane == n_planes - 1, chunk == c_steps - 1))
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_columns", "adc_bits", "bb", "bn",
+                                    "interpret"))
+def cim_mav_pallas(gates: jax.Array, planes: jax.Array, *, m_columns: int,
+                   adc_bits: int, bb: int = 8, bn: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """gates: (B, K_pad) in {0,1}; planes: (Pw, K_pad, N) in {0,1}.
+
+    K_pad must be a multiple of 128 with chunk layout described above
+    (`ops.cim_mav` builds it). Returns (B, N) f32 digitised partial sums.
+    """
+    b, k_pad = gates.shape
+    n_planes, k2, n = planes.shape
+    assert k_pad == k2 and k_pad % (CHUNK_PAD * CHUNKS_PER_TILE) == 0
+    assert b % bb == 0 and n % bn == 0, (gates.shape, planes.shape, (bb, bn))
+    c_steps = k_pad // (CHUNK_PAD * CHUNKS_PER_TILE)
+    grid = (b // bb, n // bn, n_planes, c_steps)
+    kernel = functools.partial(
+        _cim_mav_kernel, m_columns=m_columns,
+        adc_levels=2 ** adc_bits - 1, n_planes=n_planes, c_steps=c_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, CHUNK_PAD * CHUNKS_PER_TILE),
+                         lambda i, j, p, c: (i, c)),
+            pl.BlockSpec((1, CHUNK_PAD * CHUNKS_PER_TILE, bn),
+                         lambda i, j, p, c: (p, c, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, p, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        interpret=interpret,
+    )(gates, planes)

@@ -1,0 +1,97 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape padding/unpadding, batch-dim flattening, block-size
+selection, and the CPU fallback (interpret mode) so models can call these
+unconditionally. On CPU hosts (tests, this container) the kernels run in
+interpret mode; on TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cim_mav import CHUNK_PAD, CHUNKS_PER_TILE, cim_mav_pallas
+from repro.kernels.mf_matmul import mf_matmul_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _pick_block(dim: int, preferred: int, align: int) -> int:
+    """Largest aligned block <= preferred that keeps padding overhead sane."""
+    if dim >= preferred:
+        return preferred
+    return max(align, _round_up(dim, align))
+
+
+def mf_matmul(x: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
+              bk: int = 128) -> jax.Array:
+    """Fused MF correlation x:(...,K) (+) w:(K,N) -> (...,N).
+
+    Pads every dim to its block multiple (sign/abs of zero-padding
+    contribute nothing: sign(0)*|w| + |0|*sign(w) = 0).
+    """
+    batch_shape = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm = _pick_block(m, bm, 8)
+    bn = _pick_block(n, bn, 128)
+    bk = _pick_block(k, bk, 128)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xpad = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wpad = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    y = mf_matmul_pallas(xpad, wpad, bm=bm, bn=bn, bk=bk,
+                         interpret=_on_cpu())
+    return y[:m, :n].reshape(batch_shape + (n,))
+
+
+def pack_chunks(v: jax.Array, m_columns: int) -> jax.Array:
+    """Lay out the last (K) axis as chunks of CHUNK_PAD lanes.
+
+    Splits K into µArray chunks of ``m_columns`` real lanes, zero-pads each
+    chunk to CHUNK_PAD, and pads the chunk count to a multiple of
+    CHUNKS_PER_TILE so the kernel's 128-lane tiles line up.
+    """
+    assert m_columns <= CHUNK_PAD, m_columns
+    k = v.shape[-1]
+    c = -(-k // m_columns)
+    kp = c * m_columns
+    v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, kp - k)])
+    v = v.reshape(v.shape[:-1] + (c, m_columns))
+    v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, CHUNK_PAD - m_columns)],
+                )  # pad lanes within chunk
+    cpad = _round_up(c, CHUNKS_PER_TILE) - c
+    v = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, cpad), (0, 0)])
+    return v.reshape(v.shape[:-2] + (v.shape[-2] * CHUNK_PAD,))
+
+
+def cim_mav(gates: jax.Array, planes: jax.Array, *, m_columns: int,
+            adc_bits: int, bb: int = 8, bn: int = 128) -> jax.Array:
+    """Digitised step-side partial sum (see kernels/cim_mav.py).
+
+    gates: (B, K) {0,1}; planes: (Pw, K, N) {0,1} — un-packed layout;
+    this wrapper packs chunks and pads B/N.
+    """
+    b = gates.shape[0]
+    n_planes, _, n = planes.shape
+    g = pack_chunks(gates, m_columns)
+    p = pack_chunks(jnp.moveaxis(planes, -1, 1), m_columns)    # (Pw, N, Kp)
+    p = jnp.moveaxis(p, 1, -1)                                  # (Pw, Kp, N)
+    bb = _pick_block(b, bb, 8)
+    bn = _pick_block(n, bn, 128)
+    bp, npad = _round_up(b, bb), _round_up(n, bn)
+    g = jnp.pad(g, ((0, bp - b), (0, 0)))
+    p = jnp.pad(p, ((0, 0), (0, 0), (0, npad - n)))
+    y = cim_mav_pallas(g, p, m_columns=m_columns, adc_bits=adc_bits,
+                       bb=bb, bn=bn, interpret=_on_cpu())
+    return y[:b, :n]

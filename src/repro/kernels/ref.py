@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function computes exactly what the corresponding kernel computes,
+with no tiling, padding, or fusion — tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mf_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for kernels.mf_matmul: sign(x)@|w| + |x|@sign(w)."""
+    acc = (jnp.sign(x).astype(jnp.float32) @ jnp.abs(w).astype(jnp.float32)
+           + jnp.abs(x).astype(jnp.float32) @ jnp.sign(w).astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def cim_mav_ref(gates: jax.Array, planes: jax.Array, *, m_columns: int,
+                adc_bits: int, chunk_pad: int = 32) -> jax.Array:
+    """Oracle for kernels.cim_mav.
+
+    gates: (B, K_pad) {0,1}; planes: (Pw, K_pad, N) {0,1} with the K axis
+    laid out as C chunks of ``chunk_pad`` lanes (first ``m_columns`` real).
+    """
+    b, k_pad = gates.shape
+    n_planes, _, n = planes.shape
+    c = k_pad // chunk_pad
+    g = gates.reshape(b, c, chunk_pad)
+    p = planes.reshape(n_planes, c, chunk_pad, n)
+    counts = jnp.einsum("bcm,pcmn->bpcn", g, p)
+    levels = 2 ** adc_bits - 1
+    code = jnp.clip(jnp.round(counts / m_columns * levels), 0, levels)
+    mavq = code / levels * m_columns
+    scales = 2.0 ** jnp.arange(n_planes)
+    return jnp.einsum("bpcn,p->bn", mavq, scales).astype(jnp.float32)

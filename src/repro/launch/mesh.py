@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — `pod` spans the
+DCN link between pods; `data`/`model` span ICI within a pod.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
+    """Small mesh over whatever devices exist (tests/smokes)."""
+    n = len(jax.devices())
+    data_axis = max(1, min(data_axis, n // model_axis))
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

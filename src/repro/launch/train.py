@@ -1,0 +1,111 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Single-host it runs the smoke-scale config on the local devices; on a real
+pod the same driver runs per-host (jax.distributed handles the rest). The
+loop is restart-safe: checkpoints + stateless data make `--resume` exact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (full configs need a pod)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--task", default="copy")
+    ap.add_argument("--mf", default="on", choices=["on", "off", "cim"],
+                    help="paper technique: on (MF operator), off (typical),"
+                         " cim (bitplane+ADC hardware sim)")
+    args = ap.parse_args()
+
+    import dataclasses
+
+    from repro.configs.base import (MFTechniqueConfig, ParallelConfig,
+                                    TrainConfig)
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import DataConfig, lm_batch
+    from repro.train import checkpoint as ckpt_mod
+    from repro.train import train_loop as TL
+    from repro.train.ft import PreemptionHandler, StepWatchdog
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mf_map = {"on": MFTechniqueConfig(enabled=True, mode="mf"),
+              "off": MFTechniqueConfig(enabled=False),
+              "cim": MFTechniqueConfig(enabled=True, mode="cim_sim")}
+    cfg = dataclasses.replace(cfg, mf=mf_map[args.mf])
+    tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr,
+                       warmup_steps=max(args.steps // 20, 1),
+                       total_steps=args.steps)
+    pcfg = ParallelConfig(microbatches=args.microbatches, remat="none")
+    print(f"[train] arch={cfg.name} mf={args.mf} steps={args.steps}")
+
+    state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = ckpt_mod.CheckpointManager(args.ckpt_dir)
+        if args.resume and ckpt_mod.latest_step(args.ckpt_dir) is not None:
+            start_step = ckpt_mod.latest_step(args.ckpt_dir)
+            state = ckpt_mod.restore(args.ckpt_dir, state, step=start_step)
+            print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(TL.make_train_step(cfg, pcfg, tcfg),
+                      donate_argnums=(0,))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, task=args.task)
+    preempt = PreemptionHandler().install()
+    watchdog = StepWatchdog(log=print)
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = jax.tree.map(jnp.asarray, lm_batch(dcfg, step))
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(step),
+                (batch["tokens"].shape[0], cfg.vision_tokens,
+                 cfg.vision_embed_dim), cfg.dtype)
+        if cfg.family == "encdec":
+            batch = {"frames": jax.random.normal(
+                jax.random.PRNGKey(step),
+                (batch["tokens"].shape[0], args.seq_len, cfg.d_model),
+                cfg.dtype),
+                "tokens": batch["tokens"], "targets": batch["targets"]}
+        state, metrics = step_fn(state, batch)
+        watchdog.tick(step)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"[train] step {step} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({watchdog.median_step_s:.3f}s/step)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step + 1, state)
+        if preempt.preempted():
+            print("[train] preempted: writing emergency checkpoint")
+            if mgr:
+                mgr.save_blocking(step + 1, state)
+            return
+    if mgr:
+        mgr.save_blocking(args.steps, state)
+    print(f"[train] done in {time.time() - t0:.1f}s; "
+          f"straggler events: {len(watchdog.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""The paper's own evaluation networks (Sec. III / Fig. 9).
+
+  * LeNet-5 for MNIST: 2 conv + 2 FC, max-pooling. Mixed config: conv1,
+    conv2, fc1 MF; fc2 (classifier) typical — 98.6% in the paper.
+  * CIFAR10 CNN: 5 conv + 2 FC with batch-norm-free GN-ish normalisation
+    (we use per-channel scale after conv; the paper's BN folds into
+    inference weights). Mixed: convs MF, FCs typical — 90.2%.
+  * MobileNetV2 (CIFAR100): inverted-residual bottlenecks; mixed config
+    makes the bottleneck (BN1-BN7) blocks MF, stem/final conv + FC typical
+    — 66.9%.
+
+Every conv/fc accepts an ExecMode so the same network runs as
+'regular' (digital), 'mf'/'mf_kernel' (the proposed operator), or
+'cim_sim' (bitplane + SA-ADC hardware emulation) — that triple is exactly
+the paper's Table I / Fig. 9 comparison axis. Per-layer (params, ops)
+stats feed the Fig. 9 mapping tables.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import CimConfig
+from repro.core.mapping import LayerStat
+from repro.core.mf import ExecMode, mf_conv2d, mf_matmul
+from repro.core import cim as cim_mod
+from repro.models import blocks
+
+
+def conv_init(key: jax.Array, kh: int, kw: int, cin: int, cout: int, *,
+              mf: bool, dtype: Any = jnp.float32) -> dict:
+    fan_in = kh * kw * cin
+    p = {"w": (jax.random.normal(key, (kh, kw, cin, cout))
+               * math.sqrt(2.0 / fan_in)).astype(dtype),
+         "b": jnp.zeros((cout,), dtype)}
+    if mf:
+        p["alpha"] = jnp.full((cout,), 1.0 / math.sqrt(2.0 * fan_in), dtype)
+    return p
+
+
+def conv_apply(p: dict, x: jax.Array, mode: ExecMode | str, *,
+               stride: tuple[int, int] = (1, 1), padding: str = "SAME",
+               groups: int = 1, cim_cfg: Optional[CimConfig] = None
+               ) -> jax.Array:
+    mode = ExecMode(mode)
+    w = p["w"]
+    if mode == ExecMode.BNN:
+        # binarized weights, straight-through gradient (Table I baseline)
+        from repro.core.mf import hw_sign
+        wq = w + jax.lax.stop_gradient(hw_sign(w) - w)
+        y = jax.lax.conv_general_dilated(
+            x, wq, stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    elif mode == ExecMode.REGULAR:
+        y = jax.lax.conv_general_dilated(
+            x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    elif groups > 1:
+        # depthwise conv: per-channel correlation via patches
+        y = _depthwise_mf(p, x, w, stride, padding, mode, cim_cfg)
+    elif mode in (ExecMode.MF, ExecMode.MF_KERNEL):
+        y = mf_conv2d(x, w, stride=stride, padding=padding)
+    else:  # CIM_SIM
+        kh, kw_, cin, cout = w.shape
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (kh, kw_), stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw_, cout)
+        b, oh, ow, _ = patches.shape
+        flat = patches.reshape(-1, cin * kh * kw_)
+        y = cim_mod.cim_mf_matmul_ste(flat, w2, cim_cfg or CimConfig())
+        y = y.reshape(b, oh, ow, cout)
+    if mode != ExecMode.REGULAR and "alpha" in p:
+        y = y * p["alpha"]
+    return y + p["b"]
+
+
+def _depthwise_mf(p, x, w, stride, padding, mode, cim_cfg):
+    """Depthwise conv under the MF operator (per-channel patches)."""
+    kh, kw_, cin_per_g, cmul = w.shape[0], w.shape[1], 1, w.shape[3]
+    c = x.shape[-1]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw_), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b, oh, ow, _ = patches.shape
+    # feature dim ordered (C, kh*kw)
+    pt = patches.reshape(b * oh * ow, c, kh * kw_)
+    wv = w.reshape(kh * kw_, c).T                     # (C, kh*kw)
+    y = jnp.sum(jnp.sign(pt) * jnp.abs(wv)[None]
+                + jnp.abs(pt) * jnp.sign(wv)[None], axis=-1)
+    return y.reshape(b, oh, ow, c)
+
+
+def fc_init(key: jax.Array, din: int, dout: int, *, mf: bool,
+            dtype: Any = jnp.float32) -> dict:
+    return blocks.proj_init(key, din, dout, bias=True, mf=mf, dtype=dtype)
+
+
+def fc_apply(p: dict, x: jax.Array, mode: ExecMode | str,
+             cim_cfg: Optional[CimConfig] = None) -> jax.Array:
+    return blocks.proj_apply(p, x, mode, cim_cfg=cim_cfg)
+
+
+def maxpool(x: jax.Array, k: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def norm_scale_init(c: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def norm_scale(p: dict, x: jax.Array) -> jax.Array:
+    # inference-style folded BN: per-channel affine after normalising over
+    # batch+space statistics (train-mode batch statistics).
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (MNIST)
+# ---------------------------------------------------------------------------
+
+LENET_LAYERS = ("conv1", "conv2", "fc1", "fc2")
+
+
+def lenet_init(key: jax.Array, mf_layers: Sequence[str] = LENET_LAYERS[:3],
+               dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    mf = lambda n: n in mf_layers
+    return {
+        "conv1": conv_init(ks[0], 5, 5, 1, 6, mf=mf("conv1"), dtype=dtype),
+        "conv2": conv_init(ks[1], 5, 5, 6, 16, mf=mf("conv2"), dtype=dtype),
+        "fc1": fc_init(ks[2], 16 * 7 * 7, 120, mf=mf("fc1"), dtype=dtype),
+        "fc2": fc_init(ks[3], 120, 10, mf=mf("fc2"), dtype=dtype),
+    }
+
+
+def lenet_apply(params: dict, x: jax.Array,
+                modes: Optional[dict[str, str]] = None,
+                cim_cfg: Optional[CimConfig] = None) -> jax.Array:
+    """x: (B, 28, 28, 1). modes: layer name -> ExecMode (default: paper's
+    mixed config — MF everywhere except the fc2 classifier)."""
+    modes = modes or {"conv1": "mf", "conv2": "mf", "fc1": "mf",
+                      "fc2": "regular"}
+    h = conv_apply(params["conv1"], x, modes["conv1"], cim_cfg=cim_cfg)
+    # MF operator is itself nonlinear (phi = identity); typical layers tanh
+    if ExecMode(modes["conv1"]) == ExecMode.REGULAR:
+        h = jnp.tanh(h)
+    h = maxpool(h)
+    h = conv_apply(params["conv2"], h, modes["conv2"], cim_cfg=cim_cfg)
+    if ExecMode(modes["conv2"]) == ExecMode.REGULAR:
+        h = jnp.tanh(h)
+    h = maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = fc_apply(params["fc1"], h, modes["fc1"], cim_cfg)
+    if ExecMode(modes["fc1"]) == ExecMode.REGULAR:
+        h = jax.nn.relu(h)
+    return fc_apply(params["fc2"], h, modes["fc2"], cim_cfg)
+
+
+def lenet_layer_stats(img: int = 28) -> list[LayerStat]:
+    """(params, ops) per layer for the Fig. 9a mapping table."""
+    return [
+        LayerStat("conv1", 5 * 5 * 1 * 6 + 6, 2 * 5 * 5 * 1 * 6 * 28 * 28),
+        LayerStat("conv2", 5 * 5 * 6 * 16 + 16, 2 * 5 * 5 * 6 * 16 * 14 * 14),
+        LayerStat("fc1", 16 * 7 * 7 * 120 + 120, 2 * 16 * 7 * 7 * 120),
+        LayerStat("fc2_classifier", 120 * 10 + 10, 2 * 120 * 10),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# CIFAR10 CNN: 5 conv + 2 FC (paper Sec. III)
+# ---------------------------------------------------------------------------
+
+CIFAR_CHANNELS = (64, 64, 128, 128, 256)
+
+
+def cifar_cnn_init(key: jax.Array, mf_convs: bool = True,
+                   dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    chans = (3,) + CIFAR_CHANNELS
+    p = {}
+    for i in range(5):
+        p[f"conv{i+1}"] = conv_init(ks[i], 3, 3, chans[i], chans[i + 1],
+                                    mf=mf_convs, dtype=dtype)
+        p[f"norm{i+1}"] = norm_scale_init(chans[i + 1], dtype)
+    p["fc1"] = fc_init(ks[5], 256 * 4 * 4, 256, mf=False, dtype=dtype)
+    p["fc2"] = fc_init(ks[6], 256, 10, mf=False, dtype=dtype)
+    return p
+
+
+def cifar_cnn_apply(params: dict, x: jax.Array, conv_mode: str = "mf",
+                    fc_mode: str = "regular",
+                    cim_cfg: Optional[CimConfig] = None) -> jax.Array:
+    """x: (B, 32, 32, 3). Paper mixed config: convs MF, FCs typical."""
+    h = x
+    pool_after = {2, 4, 5}
+    for i in range(1, 6):
+        h = conv_apply(params[f"conv{i}"], h, conv_mode, cim_cfg=cim_cfg)
+        h = norm_scale(params[f"norm{i}"], h)
+        if ExecMode(conv_mode) == ExecMode.REGULAR:
+            h = jax.nn.relu(h)
+        if i in pool_after:
+            h = maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(fc_apply(params["fc1"], h, fc_mode, cim_cfg))
+    return fc_apply(params["fc2"], h, fc_mode, cim_cfg)
+
+
+def cifar_layer_stats() -> list[LayerStat]:
+    chans = (3,) + CIFAR_CHANNELS
+    sizes = (32, 32, 16, 16, 8)
+    out = []
+    for i in range(5):
+        par = 9 * chans[i] * chans[i + 1]
+        ops = 2 * par * sizes[i] * sizes[i]
+        out.append(LayerStat(f"conv{i+1}", par, ops))
+    out.append(LayerStat("fc1", 256 * 16 * 256, 2 * 256 * 16 * 256))
+    out.append(LayerStat("fc2_classifier", 2560, 2 * 2560))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (CIFAR100) — inverted residual bottlenecks
+# ---------------------------------------------------------------------------
+
+# (expansion t, out channels c, repeats n, stride s) — CIFAR-adapted
+MBV2_CFG = ((1, 16, 1, 1), (6, 24, 2, 1), (6, 32, 3, 2), (6, 64, 4, 2),
+            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1))
+
+
+def _bottleneck_init(key, cin, cout, t, mf, dtype):
+    ks = jax.random.split(key, 3)
+    hid = cin * t
+    return {
+        "expand": conv_init(ks[0], 1, 1, cin, hid, mf=mf, dtype=dtype),
+        "dw": conv_init(ks[1], 3, 3, 1, hid, mf=mf, dtype=dtype),
+        "project": conv_init(ks[2], 1, 1, hid, cout, mf=mf, dtype=dtype),
+        "n1": norm_scale_init(hid, dtype), "n2": norm_scale_init(hid, dtype),
+        "n3": norm_scale_init(cout, dtype),
+    }
+
+
+def _bottleneck_apply(p, x, stride, mode, cim_cfg):
+    h = conv_apply(p["expand"], x, mode, cim_cfg=cim_cfg)
+    h = norm_scale(p["n1"], h)
+    if ExecMode(mode) == ExecMode.REGULAR:
+        h = jax.nn.relu6(h)
+    h = conv_apply(p["dw"], h, mode, stride=(stride, stride),
+                   groups=h.shape[-1], cim_cfg=cim_cfg)
+    h = norm_scale(p["n2"], h)
+    if ExecMode(mode) == ExecMode.REGULAR:
+        h = jax.nn.relu6(h)
+    h = conv_apply(p["project"], h, mode, cim_cfg=cim_cfg)
+    h = norm_scale(p["n3"], h)
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def mobilenetv2_init(key: jax.Array, n_classes: int = 100,
+                     mf_bottlenecks: bool = True, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(MBV2_CFG) + 3)
+    p = {"stem": conv_init(ks[0], 3, 3, 3, 32, mf=False, dtype=dtype),
+         "stem_n": norm_scale_init(32, dtype)}
+    cin = 32
+    for bi, (t, c, n, s) in enumerate(MBV2_CFG):
+        blocks_p = []
+        bkeys = jax.random.split(ks[bi + 1], n)
+        for i in range(n):
+            blocks_p.append(_bottleneck_init(
+                bkeys[i], cin, c, t, mf_bottlenecks, dtype))
+            cin = c
+        p[f"bn{bi+1}"] = blocks_p
+    p["head"] = conv_init(ks[-2], 1, 1, cin, 1280, mf=False, dtype=dtype)
+    p["head_n"] = norm_scale_init(1280, dtype)
+    p["classifier"] = fc_init(ks[-1], 1280, n_classes, mf=False, dtype=dtype)
+    return p
+
+
+def mobilenetv2_apply(params: dict, x: jax.Array, bn_mode: str = "mf",
+                      cim_cfg: Optional[CimConfig] = None) -> jax.Array:
+    """Paper's CIFAR100 mixed config: bottlenecks MF; stem/head/fc typical."""
+    h = jax.nn.relu6(norm_scale(params["stem_n"],
+                                conv_apply(params["stem"], x, "regular")))
+    for bi, (t, c, n, s) in enumerate(MBV2_CFG):
+        for i in range(n):
+            h = _bottleneck_apply(params[f"bn{bi+1}"][i], h,
+                                  s if i == 0 else 1, bn_mode, cim_cfg)
+    h = jax.nn.relu6(norm_scale(params["head_n"],
+                                conv_apply(params["head"], h, "regular")))
+    h = jnp.mean(h, axis=(1, 2))
+    return fc_apply(params["classifier"], h, "regular")

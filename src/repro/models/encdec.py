@@ -1,0 +1,266 @@
+"""Encoder-decoder backbone (whisper-base shape).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings (B, T_enc, d_model) directly. The backbone is
+faithful: sinusoidal-positioned bidirectional encoder, causal decoder with
+self-attention + cross-attention, pre-LN, GELU MLPs. Projections are
+MF-able like every other arch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mf import ExecMode
+from repro.models import attention, blocks
+from repro.models.transformer import ParallelContext, resolve_modes, _mf_kw
+
+
+def _sinusoid(t: int, d: int) -> jax.Array:
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg: ModelConfig, mf: bool):
+    return attention.attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.resolved_head_dim, qkv_bias=False,
+                               qk_norm=False, mf=mf, dtype=cfg.dtype)
+
+
+def _enc_layer_init(key, cfg: ModelConfig, mf: bool):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "attn": _xattn_init(k1, cfg, mf),
+        "ln2": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "mlp": blocks.mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", mf=mf,
+                               dtype=cfg.dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, mf: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "self_attn": _xattn_init(k1, cfg, mf),
+        "ln_x": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "cross_attn": _xattn_init(k2, cfg, mf),
+        "ln2": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "mlp": blocks.mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu", mf=mf,
+                               dtype=cfg.dtype),
+    }
+
+
+def encdec_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    mf = cfg.mf.enabled
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": blocks.embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                   cfg.dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, mf))(
+            jax.random.split(ks[1], cfg.encoder_layers)),
+        "enc_norm": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, mf))(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "dec_norm": blocks.layernorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+def _mha(p, xq, xkv, *, cfg, mode, causal, positions_q, positions_kv, cache=None,
+         **kw):
+    """Self- or cross-attention via the blocked kernel (no RoPE: whisper
+    uses learned/sinusoidal absolute embeddings added to the stream)."""
+    b, tq, _ = xq.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = blocks.proj_apply(p["q"], xq, mode, **kw).reshape(b, tq, h, hd)
+    if cache is not None and "k" in cache and cache.get("static", False):
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        tk = xkv.shape[1]
+        k = blocks.proj_apply(p["k"], xkv, mode, **kw).reshape(b, tk, hkv, hd)
+        v = blocks.proj_apply(p["v"], xkv, mode, **kw).reshape(b, tk, hkv, hd)
+        new_cache = None
+    if cache is not None and not cache.get("static", False):
+        idx = cache["len"]
+        k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), idx)
+        v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache["v"], v.astype(cache["v"].dtype), idx)
+        s = k.shape[1]
+        valid = jnp.arange(s)[None, :] < (idx + 1)[:, None]
+        m, l, o = attention.decode_attention_partial(q[:, 0], k, v, valid)
+        out = (o / jnp.maximum(l, 1e-30)[..., None])[:, None].astype(q.dtype)
+        new_cache = {"k": k, "v": v, "len": idx + 1}
+        return blocks.proj_apply(p["o"], out.reshape(b, tq, h * hd), mode,
+                                 **kw), new_cache
+    out = attention.blocked_attention(q, k, v, causal=causal,
+                                      block=cfg.attn_block,
+                                      block_skip=cfg.attn_block_skip)
+    y = blocks.proj_apply(p["o"], out.reshape(b, tq, h * hd), mode, **kw)
+    return y, new_cache
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           pctx: ParallelContext = ParallelContext()) -> jax.Array:
+    """frames: (B, T_enc, d_model) stub embeddings -> encoder states."""
+    modes = resolve_modes(cfg)
+    kw = _mf_kw(cfg)
+    b, t, d = frames.shape
+    x = frames + _sinusoid(t, d).astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body_full(h, lp):
+        hn = blocks.layernorm(lp["ln1"], h)
+        a, _ = _mha(lp["attn"], hn, hn, cfg=cfg, mode=modes["attn"],
+                    causal=False, positions_q=pos, positions_kv=pos, **kw)
+        h = h + a
+        h = h + blocks.mlp_apply(lp["mlp"], blocks.layernorm(lp["ln2"], h),
+                                 "gelu", modes["mlp"], **kw)
+        return h, None
+
+    x, _ = jax.lax.scan(body_full, x, params["enc"],
+                        unroll=pctx.cfg.scan_unroll)
+    return blocks.layernorm(params["enc_norm"], x)
+
+
+def decode_train(params: dict, enc_out: jax.Array, tokens: jax.Array,
+                 cfg: ModelConfig,
+                 pctx: ParallelContext = ParallelContext()) -> jax.Array:
+    """Teacher-forced decoder. tokens: (B, T_dec) -> logits."""
+    modes = resolve_modes(cfg)
+    kw = _mf_kw(cfg)
+    b, t = tokens.shape
+    x = blocks.embed_apply(params["embed"], tokens)
+    x = x + _sinusoid(t, cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    pos_kv = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                              (b, enc_out.shape[1]))
+
+    def body(h, lp):
+        hn = blocks.layernorm(lp["ln1"], h)
+        a, _ = _mha(lp["self_attn"], hn, hn, cfg=cfg, mode=modes["attn"],
+                    causal=True, positions_q=pos, positions_kv=pos, **kw)
+        h = h + a
+        c, _ = _mha(lp["cross_attn"], blocks.layernorm(lp["ln_x"], h),
+                    enc_out, cfg=cfg, mode=modes["attn"], causal=False,
+                    positions_q=pos, positions_kv=pos_kv, **kw)
+        h = h + c
+        h = h + blocks.mlp_apply(lp["mlp"], blocks.layernorm(lp["ln2"], h),
+                                 "gelu", modes["mlp"], **kw)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec"],
+                        unroll=pctx.cfg.scan_unroll)
+    x = blocks.layernorm(params["dec_norm"], x)
+    return x @ params["embed"]["table"].T       # tied head (whisper)
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelConfig,
+                pctx: ParallelContext = ParallelContext()
+                ) -> tuple[jax.Array, dict]:
+    from repro.models.transformer import _sharded_ce
+    enc_out = encode(params, batch["frames"], cfg, pctx)
+    logits = decode_train(params, enc_out, batch["tokens"], cfg, pctx)
+    targets = batch["targets"]
+    loss = _sharded_ce(logits, jnp.maximum(targets, 0), targets >= 0)
+    return loss, {"loss": loss}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int) -> dict:
+    """Self-attn KV ring + per-layer static cross-attn K/V."""
+    hd = cfg.resolved_head_dim
+    one_self = attention.init_kv_cache(batch, max_len, cfg.n_kv_heads, hd,
+                                       dtype=cfg.dtype)
+    n = cfg.n_layers
+    stack = lambda v: jnp.broadcast_to(v, (n,) + v.shape).copy()
+    return {
+        "self": jax.tree.map(stack, one_self),
+        "cross_k": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads, hd),
+                             cfg.dtype),
+        "cross_v": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads, hd),
+                             cfg.dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_cache_pspecs(cfg: ModelConfig, cache_tree, pcfg,
+                        axis_sizes: dict):
+    """Spec tree matching `encdec_init_cache`: batch over DP, cache
+    sequence dims over `model` (flash-decode SP)."""
+    from jax.sharding import PartitionSpec as P
+    dp = pcfg.dp_axes if len(pcfg.dp_axes) > 1 else pcfg.dp_axes[0]
+    tp = pcfg.tp_axis
+    return {
+        "self": {"k": P(None, dp, tp, None, None),
+                 "v": P(None, dp, tp, None, None),
+                 "len": P(None, dp)},
+        "cross_k": P(None, dp, tp, None, None),
+        "cross_v": P(None, dp, tp, None, None),
+        "pos": P(dp),
+    }
+
+
+def encdec_prefill_cross(params: dict, cache: dict, enc_out: jax.Array,
+                         cfg: ModelConfig) -> dict:
+    """Project encoder states into the per-layer static cross K/V cache."""
+    modes = resolve_modes(cfg)
+    kw = _mf_kw(cfg)
+    b, tk, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def per_layer(lp):
+        k = blocks.proj_apply(lp["cross_attn"]["k"], enc_out, modes["attn"],
+                              **kw).reshape(b, tk, hkv, hd)
+        v = blocks.proj_apply(lp["cross_attn"]["v"], enc_out, modes["attn"],
+                              **kw).reshape(b, tk, hkv, hd)
+        return k.astype(cache["cross_k"].dtype), v.astype(
+            cache["cross_v"].dtype)
+
+    ks, vs = jax.lax.map(per_layer, params["dec"])
+    return dict(cache, cross_k=ks, cross_v=vs)
+
+
+def encdec_decode_step(params: dict, cache: dict, tokens: jax.Array,
+                       cfg: ModelConfig,
+                       pctx: ParallelContext = ParallelContext()
+                       ) -> tuple[jax.Array, dict]:
+    """One decoder step against precomputed cross K/V."""
+    modes = resolve_modes(cfg)
+    kw = _mf_kw(cfg)
+    b = tokens.shape[0]
+    x = blocks.embed_apply(params["embed"], tokens[:, None])
+    max_len = cache["self"]["k"].shape[2]
+    table = _sinusoid(max_len, cfg.d_model)
+    x = x + table[cache["pos"]][:, None].astype(x.dtype)
+
+    def body(h, inp):
+        lp, self_c, ck, cv = inp
+        hn = blocks.layernorm(lp["ln1"], h)
+        a, new_self = _mha(lp["self_attn"], hn, hn, cfg=cfg,
+                           mode=modes["attn"], causal=True, positions_q=None,
+                           positions_kv=None, cache=self_c, **kw)
+        h = h + a
+        c, _ = _mha(lp["cross_attn"], blocks.layernorm(lp["ln_x"], h), None,
+                    cfg=cfg, mode=modes["attn"], causal=False,
+                    positions_q=None, positions_kv=None,
+                    cache={"k": ck, "v": cv, "static": True}, **kw)
+        h = h + c
+        h = h + blocks.mlp_apply(lp["mlp"], blocks.layernorm(lp["ln2"], h),
+                                 "gelu", modes["mlp"], **kw)
+        return h, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]), unroll=pctx.cfg.scan_unroll)
+    x = blocks.layernorm(params["dec_norm"], x)
+    logits = (x @ params["embed"]["table"].T)[:, 0]
+    new_cache = dict(cache, self=new_self, pos=cache["pos"] + 1)
+    return logits, new_cache

@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Queries and keys/values are low-rank-compressed:
+
+    c_q  = norm(x W_dq)                    (q_lora_rank)
+    q    = c_q W_uq  -> per-head [q_nope | q_rope]
+    c_kv = norm(x W_dkv)                   (kv_lora_rank)
+    k_nope = c_kv W_uk, v = c_kv W_uv      (per head)
+    k_rope = x W_kr                        (shared across heads)
+
+Prefill/train: decompress and run blocked attention with QK dim
+(nope+rope) and V dim v_head_dim.
+
+Decode: the latent cache stores only (c_kv, k_rope) — 576 floats/token for
+V3 — and uses weight absorption:
+    score_h = (q_nope_h W_uk_h^T) . c_kv + q_rope_h . k_rope
+    out_h   = (softmax . c_kv) W_uv_h
+Absorption relies on linearity, so W_uq/W_uk/W_uv stay in the typical
+operator; the MF technique applies to the down-projections W_dq/W_dkv
+(the dominant prefill FLOPs) and the output projection
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.core.mf import ExecMode
+from repro.models import blocks
+from repro.models.attention import blocked_attention, NEG_INF
+
+
+def mla_init(key: jax.Array, d_model: int, n_heads: int, mla: MLAConfig, *,
+             mf: bool, dtype: Any = jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    mk = lambda k, i, o, use_mf: blocks.proj_init(k, i, o, bias=False,
+                                                  mf=use_mf, dtype=dtype)
+    return {
+        "dq": mk(ks[0], d_model, mla.q_lora_rank, mf),
+        "q_norm": blocks.rmsnorm_init(mla.q_lora_rank, dtype),
+        "uq": mk(ks[1], mla.q_lora_rank, n_heads * (dn + dr), False),
+        "dkv": mk(ks[2], d_model, mla.kv_lora_rank, mf),
+        "kv_norm": blocks.rmsnorm_init(mla.kv_lora_rank, dtype),
+        "kr": mk(ks[3], d_model, dr, False),
+        "uk": mk(ks[4], mla.kv_lora_rank, n_heads * dn, False),
+        "uv": mk(ks[5], mla.kv_lora_rank, n_heads * dv, False),
+        "o": mk(ks[6], n_heads * dv, d_model, mf),
+    }
+
+
+def mla_apply(p: dict, x: jax.Array, *, n_heads: int, mla: MLAConfig,
+              rope_theta: float, positions: jax.Array,
+              mode: ExecMode | str = ExecMode.REGULAR,
+              cache: Optional[dict] = None, attn_block: int = 1024,
+              attn_block_skip: bool = False, **kw
+              ) -> tuple[jax.Array, Optional[dict]]:
+    b, t, _ = x.shape
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+
+    cq = blocks.rmsnorm(p["q_norm"], blocks.proj_apply(p["dq"], x, mode, **kw))
+    q = blocks.proj_apply(p["uq"], cq).reshape(b, t, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = blocks.apply_rope(q_rope, positions, rope_theta)
+
+    ckv = blocks.rmsnorm(p["kv_norm"],
+                         blocks.proj_apply(p["dkv"], x, mode, **kw))
+    k_rope = blocks.apply_rope(
+        blocks.proj_apply(p["kr"], x)[:, :, None, :], positions, rope_theta)
+
+    if cache is None:
+        # ---- prefill/train: decompress, blocked attention ---------------
+        k_nope = blocks.proj_apply(p["uk"], ckv).reshape(b, t, n_heads, dn)
+        v = blocks.proj_apply(p["uv"], ckv).reshape(b, t, n_heads, dv)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, t, n_heads, dr))], axis=-1)
+        out = blocked_attention(q_full, k_full, v, causal=True,
+                                block=attn_block,
+                                block_skip=attn_block_skip)
+        new_cache = None
+    else:
+        # ---- decode: latent cache + weight absorption --------------------
+        idx = cache["len"]
+        ckv_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache["ckv"], ckv.astype(cache["ckv"].dtype), idx)
+        kr_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache["kr"],
+                           k_rope[:, :, 0, :].astype(cache["kr"].dtype), idx)
+        s = ckv_cache.shape[1]
+        w_uk = p["uk"]["w"].reshape(-1, n_heads, dn)        # (rank, H, dn)
+        q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scores = (jnp.einsum("bhr,bsr->bhs", q_abs,
+                             ckv_cache.astype(jnp.float32))
+                  + jnp.einsum("bhd,bsd->bhs",
+                               q_rope[:, 0].astype(jnp.float32),
+                               kr_cache.astype(jnp.float32)))
+        scores = scores / math.sqrt(dn + dr)
+        valid = jnp.arange(s)[None, :] < (idx + 1)[:, None]
+        scores = jnp.where(valid[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", probs,
+                         ckv_cache.astype(jnp.float32))     # (B,H,rank)
+        w_uv = p["uv"]["w"].reshape(-1, n_heads, dv)
+        out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+        out = out[:, None].astype(x.dtype)                  # (B,1,H,dv)
+        new_cache = {"ckv": ckv_cache, "kr": kr_cache, "len": idx + 1}
+
+    y = blocks.proj_apply(p["o"], out.reshape(b, t, n_heads * dv), mode, **kw)
+    return y, new_cache
+
+
+def mla_init_cache(batch: int, max_len: int, mla: MLAConfig,
+                   dtype: Any = jnp.bfloat16) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, mla.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, mla.qk_rope_head_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,145 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (Griffin recurrent block):
+
+    x -> [linear -> conv1d(w=4) -> RG-LRU] (.) [linear -> GeLU] -> linear
+
+RG-LRU (real-gated linear recurrent unit), per channel:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))  in (0,1),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal-linear in h, so prefill/train uses
+`jax.lax.associative_scan` (O(log T) depth — this is what makes the 500k
+shape practical) and decode is a single O(1) state update.
+
+The in/out/gate projections are MF-able weight-activation products; the
+elementwise recurrence itself has no weight matmul and stays in the
+typical operator (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mf import ExecMode
+from repro.models import blocks
+
+_C = 8.0
+
+
+def rglru_init(key: jax.Array, d_model: int, width: int, conv_width: int,
+               *, mf: bool, dtype: Any = jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_x": blocks.proj_init(ks[0], d_model, width, bias=False, mf=mf,
+                                 dtype=dtype),
+        "in_gate": blocks.proj_init(ks[1], d_model, width, bias=False, mf=mf,
+                                    dtype=dtype),
+        "out": blocks.proj_init(ks[2], width, d_model, bias=False, mf=mf,
+                                dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, width))
+                   * (1.0 / math.sqrt(conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        # gates are small diagonal-ish projections; keep digital (f32)
+        "w_a": (jax.random.normal(ks[4], (width, width)) * (1.0 / math.sqrt(
+            width))).astype(dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": (jax.random.normal(ks[5], (width, width)) * (1.0 / math.sqrt(
+            width))).astype(dtype),
+        "b_x": jnp.zeros((width,), jnp.float32),
+        # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, width)) / _C)).astype(jnp.float32),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B,T,C), w: (W,C). Returns (y, new_state).
+
+    state: (B, W-1, C) trailing inputs from the previous segment.
+    """
+    wlen = w.shape[0]
+    bsz, t, c = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, wlen - 1, c), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)
+    y = sum(xin[:, i:i + t, :] * w[i] for i in range(wlen)) + b
+    return y.astype(x.dtype), xin[:, -(wlen - 1):, :]
+
+
+def _rglru_gates(p: dict, xc: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """a_t (decay) and gated input for the linear recurrence."""
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_x"].astype(jnp.float32)
+                       + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(p: dict, xc: jax.Array, h0: Optional[jax.Array] = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Parallel prefix over time. xc: (B,T,C) -> (h_seq, h_last)."""
+    a, gated = _rglru_gates(p, xc)
+    if h0 is not None:
+        # fold carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(gated.dtype), gated],
+                                axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, xc: jax.Array, h_prev: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Single decode step. xc: (B,1,C); h_prev: (B,C)."""
+    a, gated = _rglru_gates(p, xc)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + gated[:, 0]
+    return h[:, None].astype(xc.dtype), h
+
+
+def rglru_block_apply(p: dict, x: jax.Array, *,
+                      mode: ExecMode | str = ExecMode.REGULAR,
+                      state: Optional[dict] = None, **kw
+                      ) -> tuple[jax.Array, Optional[dict]]:
+    """Full Griffin recurrent block. state holds {'conv', 'h'} for decode."""
+    xb = blocks.proj_apply(p["in_x"], x, mode, **kw)
+    gate = jax.nn.gelu(blocks.proj_apply(p["in_gate"], x, mode, **kw))
+    if state is None:
+        xc, _ = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        h, _ = rglru_scan(p, xc)
+        new_state = None
+    else:
+        xc, conv_state = _causal_conv(xb, p["conv_w"], p["conv_b"],
+                                      state["conv"])
+        h, h_last = rglru_step(p, xc, state["h"])
+        new_state = {"conv": conv_state, "h": h_last}
+    y = blocks.proj_apply(p["out"], h * gate, mode, **kw)
+    return y, new_state
+
+
+def rglru_init_state(batch: int, width: int, conv_width: int,
+                     dtype: Any = jnp.bfloat16) -> dict:
+    return {"conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+            "h": jnp.zeros((batch, width), jnp.float32)}

@@ -1,0 +1,233 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Per arXiv:2405.04517, simplified to the recurrences' essentials:
+
+mLSTM (parallelisable; here chunk-free recurrent-scan form):
+    C_t = f_t * C_{t-1} + i_t * (v_t k_t^T)      per head, C: (dh, dh)
+    n_t = f_t * n_{t-1} + i_t * k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exponential input gate stabilised in log space via m_t:
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    i'_t = exp(log i_t - m_t),  f'_t = exp(log f_t + m_{t-1} - m_t)
+
+sLSTM (sequential): scalar memory per channel with recurrent kernel R:
+    z = tanh(Wz x + Rz h),  i = exp(Wi x + Ri h),  f = exp(Wf x + Rf h)
+    o = sigmoid(Wo x + Ro h); c = f*c + i*z; n = f*n + i; h = o * c/n
+(stabilised identically via a running max m).
+
+Block wrappers follow the paper: pre-LN, up-projection (factor 2),
+causal conv(4) on the recurrent path, gated output, down-projection.
+q/k/v/gate/up/down projections are MF-able; the state updates are
+elementwise/outer-product ops with no weight matmul and stay typical
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mf import ExecMode
+from repro.models import blocks
+from repro.models.rglru import _causal_conv
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, d_model: int, n_heads: int, *, mf: bool,
+               conv_width: int = 4, dtype: Any = jnp.float32) -> dict:
+    d_inner = 2 * d_model
+    ks = jax.random.split(key, 8)
+    mk = lambda k, i, o: blocks.proj_init(k, i, o, bias=False, mf=mf,
+                                          dtype=dtype)
+    return {
+        "norm": blocks.layernorm_init(d_model, dtype),
+        "up": mk(ks[0], d_model, d_inner),
+        "gate": mk(ks[1], d_model, d_inner),
+        "q": mk(ks[2], d_inner, d_inner),
+        "k": mk(ks[3], d_inner, d_inner),
+        "v": mk(ks[4], d_inner, d_inner),
+        "igate": blocks.proj_init(ks[5], d_inner, n_heads, bias=True,
+                                  mf=False, dtype=jnp.float32),
+        "fgate": blocks.proj_init(ks[6], d_inner, n_heads, bias=True,
+                                  mf=False, dtype=jnp.float32),
+        "conv_w": (jax.random.normal(ks[7], (conv_width, d_inner))
+                   * (1.0 / math.sqrt(conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "out_norm": blocks.rmsnorm_init(d_inner, dtype),
+        "down": mk(jax.random.fold_in(key, 99), d_inner, d_model),
+    }
+
+
+def _mlstm_cell_scan(q, k, v, log_i, log_f, state=None):
+    """q/k/v: (B,T,H,dh); log gates: (B,T,H). Recurrent lax.scan over T."""
+    b, t, h, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp            # (B,H,dh), ..., (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        # first step: m == -inf -> f_ = exp(-inf)=0, i_ = exp(0)=1 at max
+        f_ = jnp.where(jnp.isfinite(m), f_, 0.0)[..., None]
+        i_ = i_[..., None]
+        kt = kt * scale
+        c = f_[..., None] * c + (i_[..., None] * vt[..., :, None]
+                                 * kt[..., None, :])
+        n = f_ * n + i_ * kt
+        num = jnp.einsum("bhij,bhj->bhi", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)), 1.0)
+        h_t = num / den[..., None]
+        return (c, n, m_new), h_t
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), {"c": c, "n": n, "m": m}
+
+
+def mlstm_apply(p: dict, x: jax.Array, n_heads: int, *,
+                mode: ExecMode | str = ExecMode.REGULAR,
+                state: Optional[dict] = None, **kw
+                ) -> tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    xn = blocks.layernorm(p["norm"], x)
+    up = blocks.proj_apply(p["up"], xn, mode, **kw)
+    gate = blocks.proj_apply(p["gate"], xn, mode, **kw)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(up, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    d_inner = up.shape[-1]
+    dh = d_inner // n_heads
+    split = lambda v: v.reshape(b, t, n_heads, dh)
+    q = split(blocks.proj_apply(p["q"], xc, mode, **kw))
+    k = split(blocks.proj_apply(p["k"], xc, mode, **kw))
+    v = split(blocks.proj_apply(p["v"], up, mode, **kw))
+    log_i = blocks.proj_apply(p["igate"], xc.astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(
+        blocks.proj_apply(p["fgate"], xc.astype(jnp.float32)))
+    cell_state = None if state is None else state["cell"]
+    h, new_cell = _mlstm_cell_scan(q, k, v, log_i, log_f, cell_state)
+    h = h.reshape(b, t, d_inner).astype(x.dtype)
+    h = blocks.rmsnorm(p["out_norm"], h) * jax.nn.silu(gate)
+    y = blocks.proj_apply(p["down"], h, mode, **kw)
+    new_state = None if state is None else {"conv": new_conv,
+                                            "cell": new_cell}
+    return y, new_state
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int,
+                     conv_width: int = 4, dtype: Any = jnp.bfloat16) -> dict:
+    d_inner = 2 * d_model
+    dh = d_inner // n_heads
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "cell": {"c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                 "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+                 "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, d_model: int, n_heads: int, *, mf: bool,
+               dtype: Any = jnp.float32) -> dict:
+    ks = jax.random.split(key, 10)
+    mk = lambda k, i, o, b=False: blocks.proj_init(k, i, o, bias=b, mf=mf,
+                                                   dtype=dtype)
+    dh = d_model // n_heads
+    # recurrent kernels are block-diagonal per head: (H, dh, dh)
+    rk = lambda k: (jax.random.normal(k, (n_heads, dh, dh))
+                    * (1.0 / math.sqrt(dh))).astype(jnp.float32)
+    p = {
+        "norm": blocks.layernorm_init(d_model, dtype),
+        "wz": mk(ks[0], d_model, d_model), "rz": rk(ks[1]),
+        "wi": mk(ks[2], d_model, d_model), "ri": rk(ks[3]),
+        "wf": mk(ks[4], d_model, d_model), "rf": rk(ks[5]),
+        "wo": mk(ks[6], d_model, d_model), "ro": rk(ks[7]),
+        "out_norm": blocks.rmsnorm_init(d_model, dtype),
+        "up": mk(ks[8], d_model, (4 * d_model) // 3),
+        "down": mk(ks[9], (4 * d_model) // 3, d_model),
+    }
+    return p
+
+
+def _slstm_scan(p: dict, zx, ix, fx, ox, n_heads: int, state=None):
+    """Sequential scan. zx/ix/fx/ox: (B,T,D) pre-activations from x."""
+    b, t, d = zx.shape
+    dh = d // n_heads
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), -jnp.inf, jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    def rmm(h, r):  # block-diagonal recurrent matmul
+        hh = h.reshape(b, n_heads, dh)
+        return jnp.einsum("bhi,hij->bhj", hh, r).reshape(b, d)
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        zt, it, ft, ot = inp
+        z = jnp.tanh(zt + rmm(h, p["rz"]))
+        li = it + rmm(h, p["ri"])
+        lf = jax.nn.log_sigmoid(ft + rmm(h, p["rf"]))
+        o = jax.nn.sigmoid(ot + rmm(h, p["ro"]))
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.where(jnp.isfinite(m), jnp.exp(lf + m - m_new), 0.0)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (h_new, c, n, m_new), h_new
+
+    xs = tuple(jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+               for v in (zx, ix, fx, ox))
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_apply(p: dict, x: jax.Array, n_heads: int, *,
+                mode: ExecMode | str = ExecMode.REGULAR,
+                state: Optional[dict] = None, **kw
+                ) -> tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    xn = blocks.layernorm(p["norm"], x)
+    zx = blocks.proj_apply(p["wz"], xn, mode, **kw)
+    ix = blocks.proj_apply(p["wi"], xn, mode, **kw)
+    fx = blocks.proj_apply(p["wf"], xn, mode, **kw)
+    ox = blocks.proj_apply(p["wo"], xn, mode, **kw)
+    cell_state = None if state is None else state["cell"]
+    h, new_cell = _slstm_scan(p, zx, ix, fx, ox, n_heads, cell_state)
+    h = blocks.rmsnorm(p["out_norm"], h.astype(x.dtype))
+    # position-wise GLU-free FFN (proj factor 4/3)
+    y = blocks.proj_apply(p["down"],
+                          jax.nn.gelu(blocks.proj_apply(p["up"], h, mode,
+                                                        **kw)), mode, **kw)
+    new_state = None if state is None else {"cell": new_cell}
+    return y, new_state
+
+
+def slstm_init_state(batch: int, d_model: int) -> dict:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"cell": {"h": z, "c": z, "n": z,
+                     "m": jnp.full((batch, d_model), -jnp.inf, jnp.float32)}}

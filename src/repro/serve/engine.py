@@ -1,0 +1,138 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step, greedy/temperature sampling, and prompt ingestion.
+
+The engine owns a fixed-capacity KV cache (`slots` x `max_len`); requests
+occupy slots, prompts are ingested token-by-token through the same jitted
+decode step (prefill-as-decode keeps one compiled program), and finished
+slots are recycled. `serve_step` — the function the decode dry-run cells
+lower — is a single fused (decode + sample) step over the whole batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, pctx=None,
+                    temperature: float = 0.0) -> Callable:
+    """(params, cache, tokens, rng) -> (next_tokens, logits, new_cache)."""
+    pctx = pctx or T.ParallelContext()
+
+    def serve_step(params, cache, tokens, rng):
+        logits, new_cache = T.lm_decode_step(params, cache, tokens, cfg,
+                                             pctx)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, new_cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, slots: int, max_len: int,
+                 temperature: float = 0.0, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = T.lm_init_cache(cfg, slots, max_len)
+        self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
+        self.requests: list[Optional[Request]] = [None] * slots
+        self._feed = np.zeros((slots,), np.int32)       # next token to feed
+        self._prompt_left = np.zeros((slots,), np.int64)
+        self._rng = jax.random.PRNGKey(seed)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def submit(self, req: Request) -> bool:
+        free = self.free_slots
+        if not free:
+            return False
+        s = free[0]
+        self.requests[s] = req
+        self._feed[s] = req.prompt[0]
+        self._prompt_left[s] = len(req.prompt) - 1
+        # reset the slot's cache position
+        self.cache = _reset_slot(self.cache, s)
+        return True
+
+    def step(self) -> None:
+        """One engine tick: decode every occupied slot by one token."""
+        self._rng, sub = jax.random.split(self._rng)
+        tokens = jnp.asarray(self._feed)
+        nxt, _, self.cache = self.step_fn(self.params, self.cache, tokens,
+                                          sub)
+        nxt = np.asarray(nxt)
+        for s, req in enumerate(self.requests):
+            if req is None:
+                continue
+            if self._prompt_left[s] > 0:
+                # still ingesting the prompt: feed the next prompt token
+                k = len(req.prompt) - int(self._prompt_left[s])
+                self._feed[s] = req.prompt[k]
+                self._prompt_left[s] -= 1
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self._feed[s] = tok
+            if (self.eos_id is not None and tok == self.eos_id) or \
+                    len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.requests[s] = None
+
+    def run(self, reqs: list[Request], max_ticks: int = 10_000
+            ) -> list[Request]:
+        pending = list(reqs)
+        done: list[Request] = []
+        ticks = 0
+        while (pending or any(r is not None for r in self.requests)) \
+                and ticks < max_ticks:
+            while pending and self.free_slots:
+                self.submit(pending.pop(0))
+            before = [r for r in self.requests]
+            self.step()
+            for r in before:
+                if r is not None and r.done:
+                    done.append(r)
+            ticks += 1
+        return done
+
+
+def _reset_slot(cache, slot: int):
+    """Zero one slot's positions (cheap host-side surgery between requests)."""
+    def fix(path, v):
+        last = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if last in ("len", "pos"):
+            arr = np.asarray(v)
+            if arr.ndim == 1:
+                arr = arr.copy()
+                arr[slot] = 0
+            else:
+                arr = arr.copy()
+                arr[:, slot] = 0
+            return jnp.asarray(arr)
+        return v
+    return jax.tree_util.tree_map_with_path(fix, cache)

@@ -1,0 +1,127 @@
+"""Train-step builder: microbatched grad accumulation, global-norm clip,
+optimizer update, optional error-feedback gradient compression.
+
+`make_train_step(cfg, pcfg, tcfg)` returns a pure (state, batch) ->
+(state, metrics) function suitable for jit/pjit; the dry-run lowers
+exactly this function for the train_4k cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as transformer_mod
+from repro.train import optimizer as opt_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    ef_error: Optional[Any] = None     # error-feedback buffer (compression)
+
+
+def loss_fn_for(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_loss
+    return transformer_mod.lm_loss
+
+
+def init_state(key: jax.Array, cfg: ModelConfig, tcfg: TrainConfig
+               ) -> TrainState:
+    if cfg.family == "encdec":
+        params = encdec_mod.encdec_init(key, cfg)
+    else:
+        params = transformer_mod.lm_init(key, cfg)
+    opt = opt_mod.make_optimizer(tcfg)
+    ef = (opt_mod.ef_compress_init(params)
+          if tcfg.grad_compression == "int8_ef" else None)
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32), ef_error=ef)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda v: v.reshape((n, v.shape[0] // n) + v.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    tcfg: TrainConfig,
+                    pctx: Optional[transformer_mod.ParallelContext] = None
+                    ) -> Callable:
+    opt = opt_mod.make_optimizer(tcfg)
+    loss_fn = loss_fn_for(cfg)
+    pctx = pctx or transformer_mod.ParallelContext(cfg=pcfg)
+
+    def loss(params, mb):
+        total, metrics = loss_fn(params, mb, cfg, pctx)
+        return total, metrics
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        nmb = pcfg.microbatches
+        if nmb > 1:
+            # Grad accumulation over microbatches: the scan pipelines
+            # backward compute of microbatch i with (XLA-scheduled)
+            # gradient reduction of i-1 — compute/comm overlap.
+            mbs = _split_microbatches(batch, nmb)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
+                    state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + metrics["loss"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, lsum), _ = jax.lax.scan(accum,
+                                            (zeros, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            mean_loss = lsum / nmb
+            metrics = {"loss": mean_loss}
+        else:
+            (total, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(state.params, batch)
+            mean_loss = metrics["loss"]
+
+        ef_error = state.ef_error
+        if ef_error is not None:
+            grads, ef_error = opt_mod.ef_compress(grads, ef_error)
+
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, new_opt = opt.update(grads, state.opt_state, state.params,
+                                      state.step)
+        new_params = opt_mod.apply_updates(state.params, updates)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1, ef_error=ef_error)
+        out_metrics = {"loss": mean_loss, "grad_norm": gnorm,
+                       "lr": opt_mod.schedule(tcfg, state.step)}
+        if "aux" in metrics:
+            out_metrics["aux"] = metrics["aux"]
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                   pctx: Optional[transformer_mod.ParallelContext] = None
+                   ) -> Callable:
+    loss_fn = loss_fn_for(cfg)
+    pctx = pctx or transformer_mod.ParallelContext(cfg=pcfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch, cfg, pctx)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,181 @@
+"""CIM behavioural simulator + quantiser tests (paper Sec. IV-V)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CimConfig, VariabilityConfig, calibrate_scale,
+                        cim_mf_matmul, cim_mf_matmul_ste, dequantize,
+                        mav_crossover_probability, mf_correlate_ref, quantize,
+                        sample_cap_weights, sample_comparator_offset)
+from repro.core import quant
+from repro.core.cim import adc_quantize
+from repro.core.variability import calibrated_offset, screen_columns
+
+
+class TestQuant:
+    @hypothesis.given(st.integers(2, 8))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def test_roundtrip_error_bound(self, bits):
+        v = jax.random.normal(jax.random.PRNGKey(0), (64,))
+        s = calibrate_scale(v, bits)
+        err = jnp.abs(dequantize(quantize(v, s, bits), s) - v)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+
+    def test_integers_exact(self):
+        v = jnp.arange(-127, 128, dtype=jnp.float32) * 0.02
+        s = calibrate_scale(v, 8)
+        np.testing.assert_allclose(dequantize(quantize(v, s, 8), s), v,
+                                   atol=1e-6)
+
+    def test_bitplane_roundtrip(self):
+        mag = jnp.arange(0, 128, dtype=jnp.int32)
+        planes = quant.bitplanes(mag, 8)
+        assert planes.shape == (7, 128)
+        np.testing.assert_array_equal(quant.from_bitplanes(planes), mag)
+
+    def test_fake_quant_ste_gradient_is_identity(self):
+        v = jax.random.normal(jax.random.PRNGKey(1), (16,))
+        g = jax.grad(lambda t: jnp.sum(quant.fake_quant(t, 8)))(v)
+        np.testing.assert_allclose(g, jnp.ones_like(v))
+
+
+class TestADC:
+    def test_lossless_pairings(self):
+        # The paper's design points: 2^A >= M+1 makes the ADC exact on
+        # MAV counts (8x62 -> 5-bit, 8x30 -> 4-bit).
+        for m, a in [(31, 5), (15, 4), (7, 3)]:
+            counts = jnp.arange(m + 1, dtype=jnp.float32)
+            mav = counts / m
+            deq = adc_quantize(mav, a) * m
+            np.testing.assert_allclose(deq, counts, atol=1e-5)
+
+    def test_monotone(self):
+        mav = jnp.linspace(0, 1, 97)
+        q = adc_quantize(mav, 4)
+        assert bool(jnp.all(jnp.diff(q) >= 0))
+
+    def test_lossy_when_underprovisioned(self):
+        counts = jnp.arange(32, dtype=jnp.float32)
+        deq = adc_quantize(counts / 31, 3) * 31
+        assert float(jnp.max(jnp.abs(deq - counts))) > 0.5
+
+
+class TestCimSim:
+    def _xy(self, b=4, k=70, n=9):
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        return x, w
+
+    def test_exact_vs_quantised_reference(self):
+        # With a lossless ADC the CIM pipeline == the MF correlation with
+        # sign bits from the ORIGINAL operands (stored sign row) and
+        # magnitudes from the quantised codes (stored bitplanes).
+        from repro.core import hw_sign
+        x, w = self._xy()
+        cfg = CimConfig(8, 8, 5, 31)
+        sw = calibrate_scale(w, 8)
+        sx = calibrate_scale(x, 8)
+        xq = jnp.abs(dequantize(quantize(x, sx, 8), sx))
+        wq = jnp.abs(dequantize(quantize(w, sw, 8), sw))
+        ref = hw_sign(x) @ wq + xq @ hw_sign(w)
+        np.testing.assert_allclose(cim_mf_matmul(x, w, cfg), ref,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_low_wbits_keeps_sign_information(self):
+        # Small negative weights truncate to zero magnitude but keep their
+        # stored sign bit: low-W_P error stays bounded (no systematic
+        # sign-flip bias). Regression test for the Fig. 7 accuracy cliff.
+        x, w = self._xy(k=124)
+        ref = mf_correlate_ref(x, w, hw=True)
+        err4 = float(jnp.mean(jnp.abs(
+            cim_mf_matmul(x, w, CimConfig(4, 8, 5, 31)) - ref)))
+        scale = float(jnp.mean(jnp.abs(ref)))
+        assert err4 < 0.25 * scale
+
+    @pytest.mark.parametrize("m,a", [(31, 5), (15, 4), (31, 4), (15, 3)])
+    def test_geometries_run(self, m, a):
+        x, w = self._xy(k=45)
+        y = cim_mf_matmul(x, w, CimConfig(8, 8, a, m))
+        assert y.shape == (4, 9) and bool(jnp.all(jnp.isfinite(y)))
+
+    def test_lower_adc_precision_increases_error(self):
+        x, w = self._xy(k=124)
+        cfg_hi = CimConfig(8, 8, 5, 31)
+        cfg_lo = CimConfig(8, 8, 2, 31)
+        ref = mf_correlate_ref(x, w, hw=True)
+        e_hi = float(jnp.mean(jnp.abs(cim_mf_matmul(x, w, cfg_hi) - ref)))
+        e_lo = float(jnp.mean(jnp.abs(cim_mf_matmul(x, w, cfg_lo) - ref)))
+        assert e_lo > e_hi
+
+    def test_kernel_path_matches_einsum_path(self):
+        x, w = self._xy(k=70, n=17)
+        for a in (5, 4, 3):
+            y0 = cim_mf_matmul(x, w, CimConfig(8, 8, a, 31, use_kernel=False))
+            y1 = cim_mf_matmul(x, w, CimConfig(8, 8, a, 31, use_kernel=True))
+            np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+
+    def test_ste_backward_matches_mf_surrogate(self):
+        x, w = self._xy(b=2, k=21, n=3)
+        cfg = CimConfig(8, 8, 5, 31)
+        g = jnp.ones((2, 3))
+        _, vjp = jax.vjp(lambda a, b: cim_mf_matmul_ste(a, b, cfg), x, w)
+        dx, dw = vjp(g)
+        from repro.core import mf_matmul
+        _, vjp2 = jax.vjp(lambda a, b: mf_matmul(a, b, 0.5, 1.0), x, w)
+        dx2, dw2 = vjp2(g)
+        np.testing.assert_allclose(dx, dx2, rtol=1e-5)
+        np.testing.assert_allclose(dw, dw2, rtol=1e-5)
+
+    def test_variability_injection_degrades_gracefully(self):
+        x, w = self._xy(k=62)
+        cfg = CimConfig(8, 8, 5, 31)
+        var = VariabilityConfig(cap_sigma=0.12)
+        caps = sample_cap_weights(jax.random.PRNGKey(7), 62, var)
+        off = sample_comparator_offset(jax.random.PRNGKey(8), var)
+        ref = mf_correlate_ref(x, w, hw=True)
+        y_clean = cim_mf_matmul(x, w, cfg)
+        y_noisy = cim_mf_matmul(x, w, cfg, cap_weights=caps,
+                                comparator_offset=off)
+        e_clean = float(jnp.mean(jnp.abs(y_clean - ref)))
+        e_noisy = float(jnp.mean(jnp.abs(y_noisy - ref)))
+        assert np.isfinite(e_noisy) and e_noisy >= e_clean * 0.5
+
+
+class TestVariability:
+    def test_crossover_increases_with_mismatch(self):
+        cim = CimConfig(8, 8, 5, 31)
+        key = jax.random.PRNGKey(0)
+        p_lo = mav_crossover_probability(key, cim,
+                                         VariabilityConfig(cap_sigma=0.01),
+                                         n_trials=300)
+        p_hi = mav_crossover_probability(key, cim,
+                                         VariabilityConfig(cap_sigma=0.12),
+                                         n_trials=300)
+        assert float(p_hi) >= float(p_lo)
+
+    def test_screening_reduces_crossover(self):
+        cim = CimConfig(8, 8, 5, 31)
+        var = VariabilityConfig(cap_sigma=0.12, screen_fraction=0.1)
+        key = jax.random.PRNGKey(1)
+        p_raw = mav_crossover_probability(key, cim, var, n_trials=300,
+                                          screened=False)
+        p_scr = mav_crossover_probability(key, cim, var, n_trials=300,
+                                          screened=True)
+        assert float(p_scr) <= float(p_raw)
+
+    def test_comparator_calibration_shrinks_offset(self):
+        var = VariabilityConfig()
+        offs = 0.045 * jnp.linspace(-1, 1, 41)
+        res = jax.vmap(lambda o: calibrated_offset(o, var))(offs)
+        assert float(jnp.max(jnp.abs(res))) <= 0.016  # ~ +-15 mV residue
+        assert float(jnp.max(jnp.abs(res))) < float(jnp.max(jnp.abs(offs)))
+
+    def test_screen_columns_keeps_majority(self):
+        var = VariabilityConfig(cap_sigma=0.12, screen_fraction=0.05)
+        caps = sample_cap_weights(jax.random.PRNGKey(2), 62, var)
+        keep = screen_columns(caps, var)
+        assert int(jnp.sum(keep)) == 62 - 3  # 5% of 62 -> 3 discarded

@@ -1,0 +1,88 @@
+"""Eq. 4 energy/latency model + mixed-mapping policy tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CimConfig, LayerStat, MappingPolicy, ExecMode,
+                        mixed_system_tops_per_watt, plan_mapping,
+                        tops_per_watt, unit_op_cycles, unit_op_energy_j)
+from repro.core.energy import (DIGITAL_TOPS_PER_W, discharge_time_vs_hold_voltage,
+                               energy_split, leakage_vs_hold_voltage)
+
+
+class TestEq4:
+    def test_latency_formula(self):
+        # T = W_P * (1 + 2 A_P); 8-bit, 5-bit ADC -> 88 cycles (Sec. V-C).
+        assert unit_op_cycles(CimConfig(8, 8, 5, 31)) == 88
+        assert unit_op_cycles(CimConfig(4, 8, 5, 31)) == 44
+        assert unit_op_cycles(CimConfig(8, 8, 2, 31)) == 40
+
+    def test_table2_design_points(self):
+        # Calibrated to the paper's headline numbers (see core/energy.py).
+        np.testing.assert_allclose(tops_per_watt(CimConfig(8, 8, 5, 31)),
+                                   105.0, rtol=0.01)
+        np.testing.assert_allclose(tops_per_watt(CimConfig(8, 8, 4, 15)),
+                                   84.0, rtol=0.01)
+
+    def test_energy_monotone_in_precision(self):
+        e84 = unit_op_energy_j(CimConfig(8, 8, 4, 31))
+        e85 = unit_op_energy_j(CimConfig(8, 8, 5, 31))
+        e44 = unit_op_energy_j(CimConfig(4, 8, 4, 31))
+        assert e44 < e84 < e85
+
+    def test_case_a_vs_case_b_tradeoff(self):
+        # Sec. V-C iso-accuracy cases: Case-A (W_P=8, A_P=2) has ~10% lower
+        # latency than Case-B (W_P=4, A_P=5) — reproduced exactly (40 vs 44
+        # cycles). The paper additionally claims Case-A needs ~30% MORE
+        # energy; under Eq. 4b no constants consistent with the Table II
+        # TOPS/W design points reproduce that ordering (see EXPERIMENTS.md
+        # reproduction notes) — the calibrated model puts them within 3%.
+        a = CimConfig(8, 8, 2, 31)
+        b = CimConfig(4, 8, 5, 31)
+        assert unit_op_cycles(a) < unit_op_cycles(b)
+        ea, eb = unit_op_energy_j(a), unit_op_energy_j(b)
+        assert abs(ea - eb) / eb < 0.05
+
+    def test_energy_split_sums_to_one(self):
+        s = energy_split(CimConfig(8, 8, 5, 31))
+        np.testing.assert_allclose(sum(s.values()), 1.0, rtol=1e-6)
+        assert s["leakage"] < 0.01  # paper: <1% of total
+
+    def test_hold_voltage_tradeoff(self):
+        # Fig. 6a: lower hold voltage -> less leakage, slower discharge.
+        assert leakage_vs_hold_voltage(0.3) < leakage_vs_hold_voltage(0.5)
+        assert (discharge_time_vs_hold_voltage(0.3)
+                > discharge_time_vs_hold_voltage(0.5))
+
+
+class TestMixedMapping:
+    MNIST = [
+        LayerStat("conv1", int(0.001 * 61706), int(0.8428 * 1e7)),
+        LayerStat("conv2", int(0.0308 * 61706), int(0.067 * 1e7)),
+        LayerStat("fc1", int(0.96 * 61706), int(0.0863 * 1e7)),
+        LayerStat("fc2_classifier", 850, int(0.001 * 1e7)),
+    ]
+
+    def test_policy_assigns_classifier_digital(self):
+        rep = plan_mapping(self.MNIST, MappingPolicy(threshold=2.0))
+        assert rep.assignments["fc2_classifier"] == ExecMode.REGULAR
+        assert rep.assignments["conv1"] == ExecMode.MF
+
+    def test_override_wins(self):
+        rep = plan_mapping(self.MNIST, MappingPolicy(
+            overrides={"fc1": "mf"}))
+        assert rep.assignments["fc1"] == ExecMode.MF
+
+    def test_mf_ops_fraction_dominates(self):
+        # Paper: >85% of ops are MF in the mixed configuration.
+        rep = plan_mapping(self.MNIST, MappingPolicy(
+            threshold=2.0, overrides={"fc1": "mf"}))
+        assert rep.mf_ops_fraction > 0.85
+
+    def test_mixed_tops_w_between_endpoints(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        eff = mixed_system_tops_per_watt(0.99e9, 0.01e9, cfg)
+        assert DIGITAL_TOPS_PER_W < eff < tops_per_watt(cfg)
+        # MNIST mixed config: paper reports 103.97 with ~99.9% ops MF.
+        eff_mnist = mixed_system_tops_per_watt(0.999e9, 0.001e9, cfg)
+        assert 95.0 < eff_mnist < 105.0

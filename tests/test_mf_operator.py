@@ -1,0 +1,134 @@
+"""Unit + property tests for the MF operator (paper Eq. 1-3)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (hw_sign, mf_correlate_ref, mf_correlate_step_form,
+                        mf_matmul, mf_conv2d)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+class TestMFIdentities:
+    def test_self_correlation_is_twice_sum(self):
+        # sign(x)|x| = x elementwise, so x (+) x = 2*sum(x); for x >= 0
+        # this is the paper's 2*||x||_1.
+        x = _rand(0, (1, 33))
+        y = mf_correlate_ref(x, x[0][:, None])
+        np.testing.assert_allclose(y[0, 0], 2 * jnp.sum(x), rtol=1e-5)
+
+    def test_l1_norm_for_nonnegative(self):
+        x = jnp.abs(_rand(1, (1, 17)))
+        y = mf_correlate_ref(x, x[0][:, None])
+        np.testing.assert_allclose(y[0, 0], 2 * jnp.sum(jnp.abs(x)),
+                                   rtol=1e-5)
+
+    def test_eq1_equals_eq2_reformulation(self):
+        # Eq. 2 step-form identity holds under the hw sign convention.
+        x = _rand(2, (5, 41))
+        w = _rand(3, (41, 7))
+        np.testing.assert_allclose(mf_correlate_ref(x, w, hw=True),
+                                   mf_correlate_step_form(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_hw_sign_convention(self):
+        v = jnp.array([-2.0, -0.0, 0.0, 3.0])
+        np.testing.assert_array_equal(hw_sign(v), [-1.0, 1.0, 1.0, 1.0])
+
+    def test_negation_antisymmetry(self):
+        # (-x) (+) w = -(x (+) w) requires sign-flips on both terms; holds
+        # elementwise when no exact zeros are present.
+        x = _rand(4, (3, 21)) + 0.1
+        w = _rand(5, (21, 4)) + 0.1
+        np.testing.assert_allclose(mf_correlate_ref(-x, -w),
+                                   -mf_correlate_ref(x, w), rtol=1e-4,
+                                   atol=1e-4)
+
+    @hypothesis.given(hnp.arrays(np.float32, (4, 13),
+                                 elements=st.floats(-8, 8, width=32)))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_scale_equivariance_abs_side(self, xs):
+        # Scaling w by c > 0 scales sign(x)|w| by c and leaves sign(w)
+        # unchanged: x (+) (c*w) = c*sign(x)@|w| + |x|@sign(w).
+        w = np.linspace(-1, 1, 13 * 3, dtype=np.float32).reshape(13, 3) + 0.01
+        x = jnp.asarray(xs)
+        c = 2.5
+        lhs = mf_correlate_ref(x, c * w)
+        rhs = (c * (jnp.sign(x) @ jnp.abs(w)) + jnp.abs(x) @ jnp.sign(w))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+class TestMFGradients:
+    def test_custom_vjp_matches_eq3(self):
+        # dX = sign(X)*(g @ sign(W)^T) + 2*delta(X)*(g @ |W|^T)
+        x = _rand(6, (3, 11))
+        w = _rand(7, (11, 5))
+        g = _rand(8, (3, 5))
+        sigma, coeff = 0.5, 1.0
+        _, vjp = jax.vjp(lambda a, b: mf_matmul(a, b, sigma, coeff), x, w)
+        dx, dw = vjp(g)
+        delta = lambda v: (1 / (sigma * np.sqrt(2 * np.pi))
+                           * jnp.exp(-0.5 * (v / sigma) ** 2))
+        dx_ref = (jnp.sign(x) * (g @ jnp.sign(w).T)
+                  + 2 * delta(x) * (g @ jnp.abs(w).T))
+        dw_ref = (jnp.sign(w) * (jnp.sign(x).T @ g)
+                  + 2 * delta(w) * (jnp.abs(x).T @ g))
+        np.testing.assert_allclose(dx, dx_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw, dw_ref, rtol=1e-4, atol=1e-5)
+
+    def test_grads_finite_and_nonzero(self):
+        x = _rand(9, (4, 7))
+        w = _rand(10, (7, 3))
+        loss = lambda a, b: jnp.sum(mf_matmul(a, b) ** 2)
+        dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert bool(jnp.all(jnp.isfinite(dx)))
+        assert bool(jnp.all(jnp.isfinite(dw)))
+        assert float(jnp.max(jnp.abs(dw))) > 0
+
+    def test_delta_coeff_zero_drops_delta_term(self):
+        x = _rand(11, (2, 5))
+        w = _rand(12, (5, 2))
+        g = jnp.ones((2, 2))
+        _, vjp = jax.vjp(lambda a, b: mf_matmul(a, b, 0.5, 0.0), x, w)
+        dx, _ = vjp(g)
+        np.testing.assert_allclose(dx, jnp.sign(x) * (g @ jnp.sign(w).T),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_batched_leading_dims(self):
+        x = _rand(13, (2, 3, 7))
+        w = _rand(14, (7, 4))
+        y = mf_matmul(x, w)
+        assert y.shape == (2, 3, 4)
+        yr = mf_correlate_ref(x.reshape(-1, 7), w).reshape(2, 3, 4)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+        dw = jax.grad(lambda b: jnp.sum(mf_matmul(x, b)))(w)
+        assert dw.shape == w.shape
+
+
+class TestMFConv:
+    def test_conv_matches_patch_oracle(self):
+        x = _rand(15, (2, 8, 8, 3))
+        w = _rand(16, (3, 3, 3, 5))
+        y = mf_conv2d(x, w, padding="VALID")
+        assert y.shape == (2, 6, 6, 5)
+        # brute-force oracle at one spatial position
+        patch = x[:, 2:5, 1:4, :]                       # (2,3,3,3)
+        flat = patch.transpose(0, 3, 1, 2).reshape(2, -1)  # Cin,kh,kw order
+        w2 = w.transpose(2, 0, 1, 3).reshape(-1, 5)
+        ref = mf_correlate_ref(flat, w2)
+        np.testing.assert_allclose(y[:, 2, 1, :], ref, rtol=1e-4, atol=1e-4)
+
+    def test_conv_same_padding_shape(self):
+        x = _rand(17, (1, 9, 9, 2))
+        w = _rand(18, (3, 3, 2, 4))
+        assert mf_conv2d(x, w, padding="SAME").shape == (1, 9, 9, 4)
+        assert mf_conv2d(x, w, stride=(2, 2), padding="SAME").shape == (1, 5, 5, 4)

@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + finiteness — the
+assignment's required smoke for each of the 10 archs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MFTechniqueConfig, ParallelConfig, TrainConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.train import train_loop as TL
+
+BATCH, SEQ = 2, 24
+
+
+def _batch(cfg, seed=0):
+    b = {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                      (BATCH, SEQ), 0, cfg.vocab_size),
+         "targets": jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                       (BATCH, SEQ), 0, cfg.vocab_size)}
+    if cfg.vision_tokens:
+        b["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2),
+            (BATCH, cfg.vision_tokens, cfg.vision_embed_dim), cfg.dtype)
+    if cfg.family == "encdec":
+        b = {"frames": jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                         (BATCH, SEQ, cfg.d_model),
+                                         cfg.dtype),
+             "tokens": b["tokens"], "targets": b["targets"]}
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = _batch(cfg)
+
+    if cfg.family == "encdec":
+        logits = E.decode_train(
+            state.params, E.encode(state.params, batch["frames"], cfg),
+            batch["tokens"], cfg)
+        assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    else:
+        logits, _ = T.lm_forward(state.params, batch, cfg)
+        exp_t = SEQ + (cfg.vision_tokens or 0)
+        assert logits.shape == (BATCH, exp_t, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
+                                      tcfg))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+    # params actually changed
+    changed = any(
+        not np.allclose(np.asarray(a, np.float32),
+                        np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state2.params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.family == "encdec":
+        params = E.encdec_init(jax.random.PRNGKey(0), cfg)
+        frames = jax.random.normal(jax.random.PRNGKey(1),
+                                   (BATCH, 12, cfg.d_model), cfg.dtype)
+        enc_out = E.encode(params, frames, cfg)
+        cache = E.encdec_init_cache(cfg, BATCH, 16, enc_len=12)
+        cache = E.encdec_prefill_cross(params, cache, enc_out, cfg)
+        tok = jnp.zeros((BATCH,), jnp.int32)
+        for _ in range(3):
+            logits, cache = E.encdec_decode_step(params, cache, tok, cfg)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert logits.shape == (BATCH, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        return
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    cache = T.lm_init_cache(cfg, BATCH, 16)
+    tok = jnp.zeros((BATCH,), jnp.int32)
+    step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
+    for _ in range(3):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache["pos"][0]) == 3
+
+
+def test_decode_matches_forward_qwen3():
+    """Teacher-forced forward and step-by-step decode agree."""
+    cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                              dtype=jnp.float32,
+                              mf=MFTechniqueConfig(enabled=False))
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size)
+    logits_full, _ = T.lm_forward(params, {"tokens": tokens}, cfg)
+    cache = T.lm_init_cache(cfg, 1, 16)
+    outs = []
+    for t in range(8):
+        lg, cache = T.lm_decode_step(params, cache, tokens[:, t], cfg)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_hybrid():
+    """Same agreement for the recurrent/local-attention hybrid."""
+    cfg = dataclasses.replace(get_config("recurrentgemma-2b", smoke=True),
+                              dtype=jnp.float32,
+                              mf=MFTechniqueConfig(enabled=False))
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size)
+    logits_full, _ = T.lm_forward(params, {"tokens": tokens}, cfg)
+    cache = T.lm_init_cache(cfg, 1, 16)
+    outs = []
+    for t in range(8):
+        lg, cache = T.lm_decode_step(params, cache, tokens[:, t], cfg)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_loss_decreases_with_mf():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=3, total_steps=40)
+    state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
+                                      tcfg))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                      task="copy")
+    losses = []
+    for i in range(40):
+        state, m = step(state, jax.tree.map(jnp.asarray, lm_batch(dcfg, i)))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_long_context_ring_cache_is_bounded():
+    """local_attn decode keeps O(window) memory: cache smaller than T."""
+    cfg = get_config("recurrentgemma-2b", smoke=True)  # window 16
+    cache = T.lm_init_cache(cfg, 2, max_len=4096)
+    k = cache["layers"][2]["attn"]["k"]  # local_attn position in pattern
+    assert k.shape[2] == cfg.window  # ring buffer, not 4096

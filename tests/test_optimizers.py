@@ -1,0 +1,97 @@
+"""Optimizer unit/property tests: convergence on quadratics, schedule
+shape, int8 moment quantisation, error-feedback compression."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.train import optimizer as opt_mod
+
+
+def _quad_target(optname, steps=200, **kw):
+    tcfg = TrainConfig(optimizer=optname, lr=0.1, warmup_steps=5,
+                       total_steps=steps, weight_decay=0.0, **kw)
+    opt = opt_mod.make_optimizer(tcfg)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for i in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.asarray(i))
+        params = opt_mod.apply_updates(params, upd)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("optname", ["adamw", "sgdm", "adafactor"])
+def test_converges_on_quadratic(optname):
+    assert _quad_target(optname) < 0.05
+
+
+def test_int8_moments_still_converge():
+    assert _quad_target("adamw", opt_state_dtype="int8") < 0.2
+
+
+class TestSchedule:
+    def test_warmup_then_decay(self):
+        tcfg = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(opt_mod.schedule(tcfg, s)) for s in range(100)]
+        assert lrs[0] < lrs[5] < lrs[9]                  # warming up
+        assert abs(lrs[9] - 1.0) < 1e-6                  # peak at lr
+        assert lrs[50] > lrs[99]                         # cosine decay
+        assert lrs[99] >= 0.1 * 1.0 - 1e-6               # 10% floor
+
+    def test_nonzero_at_step0(self):
+        tcfg = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(opt_mod.schedule(tcfg, 0)) > 0.0
+
+
+class TestCompression:
+    def test_ef_error_is_residual(self):
+        g = {"w": jnp.linspace(-1, 1, 300)}
+        err = opt_mod.ef_compress_init(g)
+        out, new_err = opt_mod.ef_compress(g, err)
+        np.testing.assert_allclose(
+            np.asarray(out["w"] + new_err["w"]), np.asarray(g["w"]),
+            atol=1e-6)
+
+    def test_ef_error_feedback_recovers_bias(self):
+        # a constant tiny gradient below one quantisation step must
+        # eventually be transmitted thanks to error accumulation: after n
+        # rounds the total transmitted mass is within one LSB of n*g.
+        g = {"w": jnp.full((256,), 1e-4)}
+        # include one big element so the int8 scale makes 1e-4 sub-LSB
+        g = {"w": g["w"].at[0].set(1.0)}
+        err = opt_mod.ef_compress_init(g)
+        sent = jnp.zeros((256,))
+        n = 200
+        for _ in range(n):
+            out, err = opt_mod.ef_compress(g, err)
+            sent = sent + out["w"]
+        lsb = 1.0 / 127
+        resid = jnp.abs(sent[1:] - n * 1e-4)
+        assert float(jnp.max(resid)) <= lsb + 1e-6
+        # and without error feedback nothing would ever be sent:
+        out_plain, _ = opt_mod.ef_compress(g, opt_mod.ef_compress_init(g))
+        assert float(jnp.max(jnp.abs(out_plain["w"][1:]))) == 0.0
+
+    @hypothesis.given(st.integers(1, 5))
+    @hypothesis.settings(max_examples=5, deadline=None)
+    def test_q8_roundtrip_bound(self, seed):
+        v = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+        q, s = opt_mod._q8(v)
+        back = opt_mod._dq8_static(q, s, v.shape)
+        err = jnp.abs(back - v)
+        # per-block absmax scaling bounds error by scale/2 per block
+        assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(v))) / 127 + 1e-6
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = opt_mod.clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
