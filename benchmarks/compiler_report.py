@@ -1,0 +1,68 @@
+"""Macro-compiler report: lower models onto CIM fleets and roll up cost.
+
+For each (model, fleet) pair: per-layer schedule rows (tiles, rounds, unit
+ops, latency, energy, TOPS/W, utilization) plus the end-to-end roll-up,
+and a bit-exactness check of the tiled executor against the monolithic
+behavioural simulator on a real projection.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import timed
+from repro.compiler import (Fleet, benchmark_rows, compile_model,
+                            lm_layer_stats, model_cost, plan_tiling,
+                            verify_bit_exact)
+from repro.configs.registry import get_config
+from repro.core.cim import CimConfig
+from repro.models.convnets import cifar_layer_stats, lenet_layer_stats
+
+CFG_8X62 = CimConfig(w_bits=8, x_bits=8, adc_bits=5, m_columns=31)
+CFG_8X30 = CimConfig(w_bits=8, x_bits=8, adc_bits=4, m_columns=15)
+
+
+def _compile_rows(name: str, stats, fleet: Fleet, rows) -> None:
+    (msched, us) = timed(compile_model, stats, fleet)
+    costs, total = model_cost(msched)
+    rows.append((f"compiler_{name}_compile", us,
+                 f"layers={len(msched.layers)} digital={len(msched.digital)} "
+                 f"pinned={msched.pinned}"))
+    rows.extend(benchmark_rows(f"compiler_{name}", msched, costs, total))
+
+
+def run(quick: bool = True):
+    rows = []
+
+    # the paper's own nets on small fleets (both Table II design points)
+    _compile_rows("lenet_8x62x32", lenet_layer_stats(),
+                  Fleet(n_macros=32, cfg=CFG_8X62), rows)
+    _compile_rows("cifar_8x62x512", cifar_layer_stats(),
+                  Fleet(n_macros=512, cfg=CFG_8X62), rows)
+    _compile_rows("cifar_8x30x512_swap", cifar_layer_stats(),
+                  Fleet(n_macros=512, cfg=CFG_8X30,
+                        weight_stationary=False), rows)
+
+    # registry LM configs, weight-swapped fleets (decoder blocks never pin)
+    tokens = 64 if quick else 1024
+    for arch, n_macros in (("qwen3-0.6b", 4096),
+                           ("starcoder2-7b", 16384)):
+        cfg = get_config(arch, smoke=quick)
+        stats = lm_layer_stats(cfg, tokens=tokens,
+                               unique_blocks=not quick)
+        _compile_rows(f"{arch}_{n_macros}m", stats,
+                      Fleet(n_macros=n_macros, cfg=CFG_8X62,
+                            weight_stationary=False), rows)
+
+    # tiled-executor bit-exactness on a real-sized projection
+    key = jax.random.PRNGKey(0)
+    k, n = (70, 9) if quick else (301, 130)
+    x = jax.random.normal(key, (4, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    for cfg in (CFG_8X62, CFG_8X30):
+        plan = plan_tiling(k, n, cfg, tile_k_chunks=2, tile_n=8)
+        (ok, us) = timed(verify_bit_exact, x, w, plan, cfg)
+        rows.append((f"compiler_bitexact_{2 * cfg.m_columns}cols_k{k}", us,
+                     f"exact={ok} tiles={plan.n_tiles} "
+                     f"waste={plan.waste_fraction:.3f}"))
+    return rows

@@ -17,6 +17,7 @@ SUITES = (
     "fig7_precision_sweep",
     "fig8_variability",
     "fig9_mixed_mapping",
+    "compiler_report",
     "kernel_bench",
     "roofline_report",
 )

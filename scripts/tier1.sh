@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 gate: fast test suite + compiler-report benchmark smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q -m "not slow"
+python -m benchmarks.run --only compiler

@@ -1,0 +1,29 @@
+"""Macro compiler: lower model layers onto a tiled fleet of CIM macros.
+
+Pipeline (each stage usable standalone):
+
+  tiling    — split (K, N) projections into µArray tiles on a Fleet
+  schedule  — place tiles, derive rounds/passes per macro
+  cost      — Eq. 4 latency/energy/TOPS-W/utilization roll-up
+  execute   — bit-exact tiled execution through the behavioural simulator
+  report    — per-layer schedule tables and roll-up summaries
+  frontend  — (K, N, calls) extraction from registry model configs
+"""
+
+from repro.compiler.cost import (FleetCost, LayerCost, layer_cost,
+                                 model_cost, rollup)
+from repro.compiler.execute import compiled_matmul, verify_bit_exact
+from repro.compiler.frontend import lm_layer_stats
+from repro.compiler.report import benchmark_rows, layer_table, rollup_summary
+from repro.compiler.schedule import (LayerSchedule, ModelSchedule,
+                                     compile_model, schedule_layer)
+from repro.compiler.tiling import Fleet, TilingPlan, plan_tiling
+
+__all__ = [
+    "Fleet", "TilingPlan", "plan_tiling",
+    "LayerSchedule", "ModelSchedule", "compile_model", "schedule_layer",
+    "LayerCost", "FleetCost", "layer_cost", "model_cost", "rollup",
+    "compiled_matmul", "verify_bit_exact",
+    "layer_table", "rollup_summary", "benchmark_rows",
+    "lm_layer_stats",
+]

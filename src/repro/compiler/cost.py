@@ -1,0 +1,123 @@
+"""Stage 3 of the macro compiler: Eq. 4 latency/energy roll-up.
+
+Prices a :class:`~repro.compiler.schedule.LayerSchedule` with the
+calibrated macro constants of :mod:`repro.core.energy`:
+
+  * compute energy  = unit_ops × ``unit_op_energy_j`` (Eq. 4b) — by
+    construction, so the roll-up equals the schedule's unit-op count times
+    the unit energy *analytically*, not just numerically;
+  * compute latency = busiest-macro unit ops × ``unit_op_cycles`` (Eq. 4a)
+    at the macro clock;
+  * weight reloads  = bits written × SRAM write energy, streamed at the
+    fleet's load-port bandwidth (overlapped with nothing — conservative);
+  * utilization     = fleet compute-slot occupancy on the critical path;
+  * TOPS/W uses *useful* (unpadded) MAC ops, so µArray padding waste shows
+    up as an efficiency loss rather than being silently credited.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.compiler.schedule import LayerSchedule, ModelSchedule
+from repro.core.energy import (DEFAULT_MACRO, DIGITAL_TOPS_PER_W, MacroParams,
+                               unit_op_cycles, unit_op_energy_j)
+from repro.compiler.tiling import Fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    name: str
+    unit_ops: int
+    mac_ops: int
+    cycles: int                 # busiest-macro compute cycles
+    latency_s: float            # compute + (serialised) weight reload
+    compute_energy_j: float
+    reload_energy_j: float
+    utilization: float          # unit_ops / (n_macros * macro_unit_ops)
+    waste_fraction: float       # padded µArray cells
+    rounds: int
+
+    @property
+    def energy_j(self) -> float:
+        return self.compute_energy_j + self.reload_energy_j
+
+    @property
+    def tops_per_w(self) -> float:
+        return self.mac_ops / self.energy_j / 1e12 if self.energy_j else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetCost:
+    """End-to-end roll-up over a model's CIM layers (executed in order)."""
+
+    unit_ops: int
+    mac_ops: int
+    cycles: int
+    latency_s: float
+    compute_energy_j: float
+    reload_energy_j: float
+    utilization: float
+    digital_ops: int = 0        # ops left on the digital fabric
+
+    @property
+    def energy_j(self) -> float:
+        return self.compute_energy_j + self.reload_energy_j
+
+    @property
+    def tops_per_w(self) -> float:
+        return self.mac_ops / self.energy_j / 1e12 if self.energy_j else 0.0
+
+    def system_tops_per_w(self,
+                          digital_tops_w: float = DIGITAL_TOPS_PER_W) -> float:
+        """Energy-correct system efficiency incl. the digital-fabric share."""
+        e = self.energy_j + self.digital_ops / (digital_tops_w * 1e12)
+        ops = self.mac_ops + self.digital_ops
+        return ops / e / 1e12 if e else 0.0
+
+
+def layer_cost(sched: LayerSchedule, fleet: Fleet,
+               macro: MacroParams = DEFAULT_MACRO) -> LayerCost:
+    cfg = fleet.cfg
+    cycles = sched.macro_unit_ops * unit_op_cycles(cfg)
+    reload_s = sched.reload_bits / fleet.reload_bits_per_s
+    busy = fleet.n_macros * sched.macro_unit_ops
+    return LayerCost(
+        name=sched.name,
+        unit_ops=sched.unit_ops,
+        mac_ops=sched.mac_ops,
+        cycles=cycles,
+        latency_s=cycles / macro.clock_hz + reload_s,
+        compute_energy_j=sched.unit_ops * unit_op_energy_j(cfg, macro),
+        reload_energy_j=sched.reload_bits * fleet.reload_j_per_bit,
+        utilization=sched.unit_ops / busy if busy else 0.0,
+        waste_fraction=sched.plan.waste_fraction,
+        rounds=sched.rounds)
+
+
+def rollup(costs: Sequence[LayerCost], fleet: Fleet,
+           macro: MacroParams = DEFAULT_MACRO,
+           digital_ops: int = 0) -> FleetCost:
+    unit_ops = sum(c.unit_ops for c in costs)
+    macro_unit_ops = sum(c.cycles for c in costs) // unit_op_cycles(fleet.cfg) \
+        if costs else 0
+    busy = fleet.n_macros * macro_unit_ops
+    return FleetCost(
+        unit_ops=unit_ops,
+        mac_ops=sum(c.mac_ops for c in costs),
+        cycles=sum(c.cycles for c in costs),
+        latency_s=sum(c.latency_s for c in costs),
+        # product of the TOTAL, not a sum of per-layer products: keeps the
+        # "unit_ops x unit energy == roll-up" identity exact in floats.
+        compute_energy_j=unit_ops * unit_op_energy_j(fleet.cfg, macro),
+        reload_energy_j=sum(c.reload_energy_j for c in costs),
+        utilization=unit_ops / busy if busy else 0.0,
+        digital_ops=digital_ops)
+
+
+def model_cost(msched: ModelSchedule, macro: MacroParams = DEFAULT_MACRO
+               ) -> tuple[list[LayerCost], FleetCost]:
+    costs = [layer_cost(s, msched.fleet, macro) for s in msched.layers]
+    return costs, rollup(costs, msched.fleet, macro,
+                         digital_ops=msched.digital_ops)

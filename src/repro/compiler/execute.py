@@ -1,0 +1,88 @@
+"""Stage 4 of the macro compiler: bit-exact tiled execution.
+
+Runs a :class:`~repro.compiler.tiling.TilingPlan` tile-group by tile-group
+through the behavioural µArray simulator and reproduces the monolithic
+``cim_mf_matmul`` output *bit for bit*. Three properties make that hold:
+
+  1. calibration scales are computed once over the FULL operands and shared
+     by every tile (quantisation then commutes with slicing);
+  2. every K-slice except the last spans whole M-column chunks, so tile
+     chunk boundaries coincide with the monolithic chunking and the final
+     slice's zero padding is identical;
+  3. tiles accumulate :class:`~repro.core.cim.CimPartials` — plane-weighted
+     SA-ADC *code* sums, which are integer-valued floats — so float32
+     accumulation is exact regardless of tile order, and the single final
+     :func:`~repro.core.cim.cim_mf_recombine` applies the same rounding
+     sequence as the monolithic path.
+
+(Exactness needs the code sums to stay below 2^24, i.e. K below ~10^5
+chunks-worth per output — far beyond any projection in the registry.)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler.tiling import TilingPlan
+from repro.core import quant
+from repro.core.cim import (CimConfig, CimPartials, cim_mf_matmul,
+                            cim_mf_partials, cim_mf_recombine)
+
+
+def compiled_matmul(x: jax.Array, w: jax.Array, plan: TilingPlan,
+                    cfg: CimConfig,
+                    cap_weights: Optional[jax.Array] = None,
+                    comparator_offset: Optional[jax.Array] = None
+                    ) -> jax.Array:
+    """Tiled CIM execution of x:(...,K) (+) w:(K,N) under ``plan``.
+
+    ``comparator_offset`` must be a scalar (a per-element offset would not
+    slice consistently across tiles). Output is bit-exact with
+    ``cim_mf_matmul(x, w, cfg, cap_weights, comparator_offset)``.
+    """
+    K, N = w.shape
+    if (plan.k, plan.n) != (K, N):
+        raise ValueError(f"plan is for ({plan.k}, {plan.n}), operands are "
+                         f"({K}, {N})")
+    if plan.m_columns != cfg.m_columns or plan.w_bits != cfg.w_bits:
+        raise ValueError("plan geometry does not match CimConfig")
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+
+    sw = quant.calibrate_scale(w, cfg.w_bits)
+    sx = quant.calibrate_scale(x2, cfg.x_bits)
+
+    s1_cols, s2_cols, rw_cols = [], [], []
+    rxc = None
+    for (n0, n1) in plan.n_slices:
+        acc: Optional[CimPartials] = None
+        for (k0, k1) in plan.k_slices:
+            caps = None if cap_weights is None else cap_weights[k0:k1]
+            p = cim_mf_partials(x2[:, k0:k1], w[k0:k1, n0:n1], cfg, sw, sx,
+                                caps, comparator_offset)
+            acc = p if acc is None else acc + p
+        s1_cols.append(acc.s1c)
+        s2_cols.append(acc.s2c)
+        rw_cols.append(acc.r_w)
+        if rxc is None:
+            rxc = acc.rxc    # the |x| dummy-row residue has no N dependence
+
+    parts = CimPartials(jnp.concatenate(s1_cols, axis=-1),
+                        jnp.concatenate(s2_cols, axis=-1),
+                        rxc, jnp.concatenate(rw_cols, axis=-1))
+    y = cim_mf_recombine(parts, sw, sx, cfg)
+    return y.reshape(batch_shape + (N,)).astype(x.dtype)
+
+
+def verify_bit_exact(x: jax.Array, w: jax.Array, plan: TilingPlan,
+                     cfg: CimConfig,
+                     cap_weights: Optional[jax.Array] = None,
+                     comparator_offset: Optional[jax.Array] = None) -> bool:
+    """True iff tiled and monolithic executions agree on every bit."""
+    import numpy as np
+    tiled = compiled_matmul(x, w, plan, cfg, cap_weights, comparator_offset)
+    mono = cim_mf_matmul(x, w, cfg, cap_weights, comparator_offset)
+    return bool(np.array_equal(np.asarray(tiled), np.asarray(mono)))

@@ -1,0 +1,59 @@
+"""Model frontends: per-layer (K, N, calls) shapes for the macro compiler.
+
+The mapping layer (:mod:`repro.core.mapping`) already records (params, ops)
+per layer; the compiler additionally needs each projection's matmul view —
+contraction width K, output channels N — with the weight-reuse count
+recovered from ``ops = 2·K·N·calls``. The paper's own convnets carry those
+shapes directly (``repro.models.convnets``); this module derives them for
+the LM registry configs (attention + MLP projections of standard decoder
+blocks, embeddings/heads flagged digital-by-name as in the paper).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.mapping import LayerStat
+
+
+def _proj(name: str, k: int, n: int, tokens: int) -> LayerStat:
+    return LayerStat(name, params=k * n, ops=2 * k * n * tokens, k=k, n=n)
+
+
+def lm_layer_stats(cfg: ModelConfig, tokens: int = 1024,
+                   unique_blocks: bool = False) -> list[LayerStat]:
+    """Projection-level stats for a decoder LM forward over ``tokens``.
+
+    unique_blocks: emit one representative block instead of all n_layers
+    (all blocks share shapes; useful for compact reports — totals then
+    cover 1/n_layers of the model).
+    """
+    # Only families whose blocks really are dense attention + MLP decoders:
+    # MoE experts, MLA factorisations, and hybrid SSM mixers have different
+    # projection shapes and would be silently mispriced.
+    if cfg.family not in ("lm", "vlm") or cfg.moe or cfg.attn_type != "gqa":
+        raise ValueError(
+            f"LM frontend only models dense GQA decoder stacks; "
+            f"{cfg.name} (family={cfg.family}, attn={cfg.attn_type}, "
+            f"moe={cfg.moe is not None}) needs its own frontend")
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    ff_in = 2 * cfg.d_ff if cfg.mlp_type in ("silu_glu", "geglu") else cfg.d_ff
+    stats = [LayerStat("embed", params=cfg.vocab_size * d, ops=0)]
+    n_blocks = 1 if unique_blocks else cfg.n_layers
+    for i in range(n_blocks):
+        stats += [
+            _proj(f"L{i}_attn_qkv", d, qkv_n, tokens),
+            _proj(f"L{i}_attn_out", cfg.n_heads * hd, d, tokens),
+            _proj(f"L{i}_mlp_up", d, ff_in, tokens),
+            _proj(f"L{i}_mlp_down", cfg.d_ff, d, tokens),
+        ]
+    stats.append(LayerStat("lm_head", params=d * cfg.vocab_size,
+                           ops=2 * d * cfg.vocab_size * tokens,
+                           k=d, n=cfg.vocab_size))
+    return stats
+
+
+def total_ops(stats: Sequence[LayerStat]) -> int:
+    return sum(s.ops for s in stats)

@@ -1,0 +1,74 @@
+"""Stage 5 of the macro compiler: human-readable schedule/cost reports."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.compiler.cost import FleetCost, LayerCost
+from repro.compiler.schedule import ModelSchedule
+
+
+def _si(v: float, unit: str) -> str:
+    for scale, prefix in ((1.0, ""), (1e-3, "m"), (1e-6, "u"), (1e-9, "n"),
+                          (1e-12, "p"), (1e-15, "f")):
+        if abs(v) >= scale:
+            return f"{v / scale:7.2f} {prefix}{unit}"
+    return f"{v:9.2e} {unit}"
+
+
+_COLS = ("layer", "tiles", "rounds", "unit_ops", "latency", "energy",
+         "TOPS/W", "util", "waste")
+
+
+def layer_table(msched: ModelSchedule, costs: Sequence[LayerCost]) -> str:
+    """Fixed-width per-layer schedule table (one row per CIM layer)."""
+    rows = [("{:<16} {:>8} {:>6} {:>10} {:>12} {:>12} {:>7} {:>6} {:>6}"
+             .format(*_COLS))]
+    for s, c in zip(msched.layers, costs):
+        rows.append(
+            f"{c.name:<16} {s.plan.n_tiles:>8} {c.rounds:>6} "
+            f"{c.unit_ops:>10} {_si(c.latency_s, 's'):>12} "
+            f"{_si(c.energy_j, 'J'):>12} {c.tops_per_w:>7.1f} "
+            f"{c.utilization:>6.2f} {c.waste_fraction:>6.2f}")
+    for d in msched.digital:
+        rows.append(f"{d.name:<16} {'-':>8} {'-':>6} {'-':>10} "
+                    f"{'digital':>12} {'-':>12} {'-':>7} {'-':>6} {'-':>6}")
+    return "\n".join(rows)
+
+
+def rollup_summary(msched: ModelSchedule, total: FleetCost) -> str:
+    f = msched.fleet
+    lines = [
+        f"fleet: {f.n_macros} macros x 8x{2 * f.cfg.m_columns} µArray "
+        f"(A_P={f.cfg.adc_bits}), {f.tile_slots} tile slots, "
+        f"{'weight-stationary' if f.weight_stationary else 'weight-swapped'}"
+        f"{', pinned' if msched.pinned else ''}",
+        f"tiles={msched.total_tiles}  unit_ops={total.unit_ops}  "
+        f"rounds_max={max((c.rounds for c in msched.layers), default=0)}",
+        f"latency={_si(total.latency_s, 's').strip()}  "
+        f"energy={_si(total.energy_j, 'J').strip()} "
+        f"(reload {_si(total.reload_energy_j, 'J').strip()})",
+        f"cim_tops_per_w={total.tops_per_w:.1f}  "
+        f"system_tops_per_w={total.system_tops_per_w():.2f}  "
+        f"utilization={total.utilization:.2f}",
+    ]
+    return "\n".join(lines)
+
+
+def benchmark_rows(prefix: str, msched: ModelSchedule,
+                   costs: Sequence[LayerCost], total: FleetCost
+                   ) -> list[tuple[str, float, str]]:
+    """(name, us, derived) rows in the benchmarks/run.py CSV convention."""
+    rows = []
+    for s, c in zip(msched.layers, costs):
+        rows.append((f"{prefix}_layer_{c.name}", 0.0,
+                     f"tiles={s.plan.n_tiles} "
+                     f"rounds={c.rounds} unit_ops={c.unit_ops} "
+                     f"lat={c.latency_s:.3e}s e={c.energy_j:.3e}J "
+                     f"topsw={c.tops_per_w:.1f} util={c.utilization:.2f}"))
+    rows.append((f"{prefix}_rollup", 0.0,
+                 f"unit_ops={total.unit_ops} lat={total.latency_s:.3e}s "
+                 f"e={total.energy_j:.3e}J topsw={total.tops_per_w:.1f} "
+                 f"sys_topsw={total.system_tops_per_w():.2f} "
+                 f"util={total.utilization:.2f} pinned={msched.pinned}"))
+    return rows

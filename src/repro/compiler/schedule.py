@@ -1,0 +1,123 @@
+"""Stage 2 of the macro compiler: schedule tiled layers onto the fleet.
+
+Scheduling model (weight-stationary dataflow, paper Sec. V):
+
+  * a layer's µArray tiles are placed round-robin across macro halves;
+  * if the layer needs more tiles than the fleet has slots, it executes in
+    *rounds* — load up to ``tile_slots`` tiles, stream every input call
+    through them, swap in the next batch of tiles;
+  * within a round, macros run in lockstep on independent tiles, so the
+    round's critical path is the busiest macro: ``ceil(tiles_r / n_macros)``
+    serial tile-passes × ``calls`` input vectors, each pass one Eq. 4 unit
+    op of ``W_P·(1+2·A_P)`` cycles;
+  * weight loads are counted per tile write; a model whose CIM layers fit
+    the fleet simultaneously under a weight-stationary fleet is *pinned*
+    (reloads amortise to zero in steady-state serving).
+
+The unit-op convention matches :mod:`repro.core.energy`: one unit op per
+(chunk, output-channel, input-call) covering all W_P bitplane evaluations
+and the SA-ADC search — 2·M MAC-ops of useful work at 100% column
+occupancy. The input-plane (S2) passes share the same pipelined window;
+their cost is absorbed in the Eq. 4 calibration (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.compiler.tiling import Fleet, TilingPlan, _ceil_div
+from repro.core.mapping import (LayerStat, MappingPolicy, MappingReport,
+                                plan_mapping)
+from repro.core.mf import ExecMode
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSchedule:
+    """Placement + pass structure of one CIM-mapped layer on the fleet."""
+
+    name: str
+    plan: TilingPlan
+    calls: int             # input vectors streamed through the layer
+    rounds: int            # weight-swap rounds (1 = layer fits resident)
+    unit_ops: int          # fleet-total Eq. 4 unit operations
+    macro_unit_ops: int    # serial unit ops on the busiest macro (crit path)
+    reload_bits: int       # µArray weight bits written for this layer
+
+    @property
+    def fits_resident(self) -> bool:
+        return self.rounds == 1
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful (unpadded) ops: 2 ops per MAC."""
+        return 2 * self.plan.k * self.plan.n * self.calls
+
+
+def schedule_layer(plan: TilingPlan, fleet: Fleet, *, calls: int = 1,
+                   preloaded: bool = False) -> LayerSchedule:
+    """Schedule one tiled projection; ``preloaded`` skips the weight write
+    (model-level pinning decided by :func:`compile_model`)."""
+    if calls < 1:
+        raise ValueError(f"calls must be >= 1, got {calls}")
+    tiles, slots = plan.n_tiles, fleet.tile_slots
+    rounds = _ceil_div(tiles, slots)
+    macro_unit_ops = 0
+    for r in range(rounds):
+        tiles_r = min(slots, tiles - r * slots)
+        macro_unit_ops += _ceil_div(tiles_r, fleet.n_macros) * calls
+    return LayerSchedule(
+        name=plan.name, plan=plan, calls=calls, rounds=rounds,
+        unit_ops=tiles * calls, macro_unit_ops=macro_unit_ops,
+        reload_bits=0 if preloaded else tiles * fleet.tile_weight_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSchedule:
+    """A model lowered onto one fleet: CIM layer schedules + digital rest."""
+
+    fleet: Fleet
+    layers: tuple[LayerSchedule, ...]
+    digital: tuple[LayerStat, ...]
+    pinned: bool                     # weights resident across the whole model
+    mapping: MappingReport
+
+    @property
+    def total_unit_ops(self) -> int:
+        return sum(s.unit_ops for s in self.layers)
+
+    @property
+    def total_tiles(self) -> int:
+        return sum(s.plan.n_tiles for s in self.layers)
+
+    @property
+    def digital_ops(self) -> int:
+        return sum(s.ops for s in self.digital)
+
+
+def compile_model(stats: Sequence[LayerStat], fleet: Fleet,
+                  policy: Optional[MappingPolicy] = None) -> ModelSchedule:
+    """Lower a model's per-layer shapes onto the fleet.
+
+    Layers the (fleet-aware) policy keeps digital — and CIM-eligible layers
+    with no recorded (k, n) shape — stay on the digital fabric; the rest
+    are tiled and scheduled in declaration order.
+    """
+    stats = list(stats)
+    rep = plan_mapping(stats, policy if policy is not None
+                       else fleet.mapping_policy())
+    cim, digital = [], []
+    for s in stats:
+        if rep.assignments[s.name] != ExecMode.REGULAR and s.k and s.n:
+            cim.append(s)
+        else:
+            digital.append(s)
+
+    plans = [fleet.plan(s.k, s.n, name=s.name) for s in cim]
+    pinned = (fleet.weight_stationary
+              and sum(p.n_tiles for p in plans) <= fleet.tile_slots)
+    layers = tuple(
+        schedule_layer(p, fleet, calls=s.calls, preloaded=pinned)
+        for p, s in zip(plans, cim))
+    return ModelSchedule(fleet=fleet, layers=layers, digital=tuple(digital),
+                         pinned=pinned, mapping=rep)

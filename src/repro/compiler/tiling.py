@@ -1,0 +1,143 @@
+"""Stage 1 of the macro compiler: tile (K, N) projections onto µArrays.
+
+The paper's macro is an 8-row SRAM µArray pair: W_P rows (sign + W_P-1
+magnitude bitplanes) by 2·M columns, operated as two independent M-column
+halves. One *µArray tile* is therefore the atomic unit of both weight
+storage and compute: M contraction columns × 1 output channel × W_P rows,
+processed in one Eq. 4 unit operation of T = W_P·(1 + 2·A_P) cycles.
+
+A (K, N) projection decomposes into ``ceil(K/M) × N`` µArray tiles; the
+final K-chunk of each output channel zero-pads its unused columns (padded
+cells never discharge, so the charge-averaging denominator stays M — same
+convention as the behavioural simulator in :mod:`repro.core.cim`).
+
+:class:`TilingPlan` records that decomposition plus the coarser execution
+slicing (groups of chunks / output channels evaluated per simulator call);
+:class:`Fleet` describes the macro population a model is lowered onto.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cim import CimConfig
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingPlan:
+    """µArray tiling of one (K, N) projection, plus execution slices.
+
+    ``k_slices``/``n_slices`` are half-open index ranges over the ORIGINAL
+    (unpadded) operand; every K-slice except the last spans a whole number
+    of M-column chunks, which is what makes tiled execution bit-exact
+    against the monolithic simulator (chunk boundaries coincide).
+    """
+
+    name: str
+    k: int
+    n: int
+    m_columns: int
+    w_bits: int
+    k_slices: tuple[tuple[int, int], ...]
+    n_slices: tuple[tuple[int, int], ...]
+
+    @property
+    def n_chunks(self) -> int:
+        """M-column chunks along the contraction dimension."""
+        return _ceil_div(self.k, self.m_columns)
+
+    @property
+    def k_padded(self) -> int:
+        return self.n_chunks * self.m_columns
+
+    @property
+    def pad_k(self) -> int:
+        """Zero-padded columns in the final chunk of every output channel."""
+        return self.k_padded - self.k
+
+    @property
+    def waste_fraction(self) -> float:
+        """Fraction of occupied µArray cells holding padding zeros."""
+        return self.pad_k / self.k_padded
+
+    @property
+    def n_tiles(self) -> int:
+        """Total µArray tiles (= weight placement slots = unit ops/input)."""
+        return self.n_chunks * self.n
+
+    @property
+    def weight_bits(self) -> int:
+        """SRAM bits to hold the tiled weights (sign + magnitude rows)."""
+        return self.n_tiles * self.m_columns * self.w_bits
+
+
+def _slices(total: int, step: int) -> tuple[tuple[int, int], ...]:
+    return tuple((lo, min(lo + step, total)) for lo in range(0, total, step))
+
+
+def plan_tiling(k: int, n: int, cfg: CimConfig, *, tile_k_chunks: int = 4,
+                tile_n: int = 32, name: str = "") -> TilingPlan:
+    """Tile a (k, n) projection for macros of geometry ``cfg``.
+
+    tile_k_chunks / tile_n set the *execution* granularity (how many chunks
+    and output channels one behavioural-simulator call covers); they do not
+    change the µArray tile count or any cost — only loop overhead.
+    """
+    if k <= 0 or n <= 0:
+        raise ValueError(f"degenerate projection ({k}, {n})")
+    if tile_k_chunks < 1 or tile_n < 1:
+        raise ValueError("execution tile sizes must be >= 1")
+    return TilingPlan(
+        name=name, k=k, n=n, m_columns=cfg.m_columns, w_bits=cfg.w_bits,
+        k_slices=_slices(k, tile_k_chunks * cfg.m_columns),
+        n_slices=_slices(n, tile_n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """A population of identical CIM SRAM macros plus its weight-load port.
+
+    ``halves_per_macro``: the 8×62 macro holds two independent M=31 halves;
+    each half stores (and serially processes) one µArray tile at a time.
+    ``weight_stationary``: when True, a model whose CIM layers all fit the
+    fleet simultaneously keeps weights pinned (no per-inference reloads);
+    otherwise — or when capacity is exceeded — tiles are streamed in
+    rounds and every tile write is priced and scheduled.
+    """
+
+    n_macros: int = 64
+    cfg: CimConfig = dataclasses.field(default_factory=CimConfig)
+    halves_per_macro: int = 2
+    weight_stationary: bool = True
+    reload_j_per_bit: float = 10e-15     # SRAM write energy (~10 fJ/bit @45nm)
+    reload_bits_per_s: float = 64e9      # fleet weight-load bandwidth
+
+    @property
+    def tile_slots(self) -> int:
+        """µArray tiles resident fleet-wide at any instant."""
+        return self.n_macros * self.halves_per_macro
+
+    @property
+    def tile_weight_bits(self) -> int:
+        return self.cfg.m_columns * self.cfg.w_bits
+
+    @property
+    def weight_capacity_bits(self) -> int:
+        return self.tile_slots * self.tile_weight_bits
+
+    def plan(self, k: int, n: int, *, name: str = "",
+             tile_k_chunks: int = 4, tile_n: int = 32) -> TilingPlan:
+        return plan_tiling(k, n, self.cfg, tile_k_chunks=tile_k_chunks,
+                           tile_n=tile_n, name=name)
+
+    def mapping_policy(self, threshold: float = 2.0, **kw):
+        """Fleet-aware mixed-mapping policy (see repro.core.mapping)."""
+        from repro.core.mapping import FleetMappingPolicy
+        return FleetMappingPolicy(
+            threshold=threshold, m_columns=self.cfg.m_columns,
+            capacity_tiles=self.tile_slots,
+            allow_swap=not self.weight_stationary, **kw)

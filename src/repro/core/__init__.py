@@ -1,11 +1,13 @@
 """MF-Net core: the paper's contribution as composable JAX modules."""
 
-from repro.core.cim import CimConfig, cim_mf_matmul, cim_mf_matmul_ste
+from repro.core.cim import (CimConfig, CimPartials, cim_mf_matmul,
+                            cim_mf_matmul_ste, cim_mf_partials,
+                            cim_mf_recombine)
 from repro.core.energy import (DEFAULT_MACRO, MacroParams,
                                mixed_system_tops_per_watt, tops_per_watt,
                                unit_op_cycles, unit_op_energy_j)
-from repro.core.mapping import (LayerStat, MappingPolicy, MappingReport,
-                                plan_mapping)
+from repro.core.mapping import (FleetMappingPolicy, LayerStat, MappingPolicy,
+                                MappingReport, plan_mapping)
 from repro.core.mf import (ExecMode, apply_projection, dense_init, hw_sign,
                            mf_conv2d, mf_correlate_ref,
                            mf_correlate_step_form, mf_dense_init, mf_matmul)
@@ -16,10 +18,12 @@ from repro.core.variability import (VariabilityConfig,
                                     sample_comparator_offset, screen_columns)
 
 __all__ = [
-    "CimConfig", "cim_mf_matmul", "cim_mf_matmul_ste", "DEFAULT_MACRO",
+    "CimConfig", "CimPartials", "cim_mf_matmul", "cim_mf_matmul_ste",
+    "cim_mf_partials", "cim_mf_recombine", "DEFAULT_MACRO",
     "MacroParams", "mixed_system_tops_per_watt", "tops_per_watt",
-    "unit_op_cycles", "unit_op_energy_j", "LayerStat", "MappingPolicy",
-    "MappingReport", "plan_mapping", "ExecMode", "apply_projection",
+    "unit_op_cycles", "unit_op_energy_j", "FleetMappingPolicy", "LayerStat",
+    "MappingPolicy", "MappingReport", "plan_mapping", "ExecMode",
+    "apply_projection",
     "dense_init", "hw_sign", "mf_conv2d", "mf_correlate_ref",
     "mf_correlate_step_form", "mf_dense_init", "mf_matmul", "fake_quant",
     "quantize", "dequantize", "calibrate_scale", "VariabilityConfig",

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,18 +60,53 @@ class CimConfig:
         return self.x_bits - 1
 
 
-def adc_quantize(mav: jax.Array, adc_bits: int,
-                 comparator_offset: Optional[jax.Array] = None) -> jax.Array:
-    """SA-ADC transfer: uniform A_P-bit code on [0,1], returned dequantised.
+def adc_codes(mav: jax.Array, adc_bits: int,
+              comparator_offset: Optional[jax.Array] = None) -> jax.Array:
+    """SA-ADC transfer returning the raw integer code (as float32).
 
     code = clip(round(mav * (2^A_P - 1))): the capacitive-DAC binary search
     settles on the nearest of 2^A_P evenly spaced reference levels. A
     comparator offset (fraction of full scale) shifts every comparison.
+
+    Codes are small integers (<= 2^A_P - 1), exactly representable in
+    float32 — every downstream accumulation of codes is therefore exact,
+    which is what lets the tiled compiler path (repro.compiler.execute)
+    reproduce the monolithic result bit for bit.
     """
     levels = 2 ** adc_bits - 1
     v = mav if comparator_offset is None else mav + comparator_offset
-    code = jnp.clip(jnp.round(v * levels), 0, levels)
-    return code / levels
+    return jnp.clip(jnp.round(v * levels), 0, levels)
+
+
+def adc_quantize(mav: jax.Array, adc_bits: int,
+                 comparator_offset: Optional[jax.Array] = None) -> jax.Array:
+    """SA-ADC transfer: uniform A_P-bit code on [0,1], returned dequantised."""
+    return adc_codes(mav, adc_bits, comparator_offset) / (2 ** adc_bits - 1)
+
+
+def _bitplane_operands(x2: jax.Array, w: jax.Array, cfg: CimConfig,
+                       sw: jax.Array, sx: jax.Array):
+    """Quantise both operands and decompose into sign gates + bitplanes.
+
+    Sign bits are stored SEPARATELY from the magnitude planes in the
+    µArray (sign row + W_P-1 magnitude rows), so they come from the
+    ORIGINAL operand sign — a weight whose magnitude truncates to zero
+    keeps its true sign bit (quantising first would flip small negative
+    weights to +, a large systematic error at low W_P).
+
+    Returns (step_x, step_w, abs_x, abs_w, w_planes, x_planes) with
+    step_*: {0,1} sign gates, abs_*: integer magnitudes, *_planes:
+    (P, ...) bitplane stacks (LSB first).
+    """
+    wq = quant.quantize(w, sw, cfg.w_bits)          # (K, N) int
+    xq = quant.quantize(x2, sx, cfg.x_bits)         # (B, K) int
+    step_w = (w >= 0).astype(jnp.float32)           # (K, N)
+    step_x = (x2 >= 0).astype(jnp.float32)          # (B, K)
+    abs_w = jnp.abs(wq)
+    abs_x = jnp.abs(xq)
+    w_planes = quant.bitplanes(abs_w, cfg.w_bits)   # (Pw, K, N)
+    x_planes = quant.bitplanes(abs_x, cfg.x_bits)   # (Px, B, K)
+    return step_x, step_w, abs_x, abs_w, w_planes, x_planes
 
 
 def _chunk(v: jax.Array, m: int, axis_len: int) -> jax.Array:
@@ -82,13 +117,109 @@ def _chunk(v: jax.Array, m: int, axis_len: int) -> jax.Array:
     return v.reshape(v.shape[:-1] + ((axis_len + pad) // m, m))
 
 
+class CimPartials(NamedTuple):
+    """Pre-recombination macro statistics of one (x, w) tile.
+
+    All four fields are *integer-valued* float32 arrays (plane-weighted sums
+    of SA-ADC codes / digital |w| counts), so summing the partials of K-tiles
+    is exact in float32 — the foundation of the compiler's bit-exact tiled
+    execution. Recombine with :func:`cim_mf_recombine`.
+    """
+
+    s1c: jax.Array   # (B, N) plane-weighted code sum, Eq. 2b numerator side
+    s2c: jax.Array   # (B, N) plane-weighted code sum, Eq. 2a numerator side
+    rxc: jax.Array   # (B, 1) plane-weighted code sum of the |x| dummy row
+    r_w: jax.Array   # (1, N) exact digital sum_k |w_q|_kn
+
+    def __add__(self, other: "CimPartials") -> "CimPartials":
+        return CimPartials(self.s1c + other.s1c, self.s2c + other.s2c,
+                           self.rxc + other.rxc, self.r_w + other.r_w)
+
+
+def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,
+                    sw: jax.Array, sx: jax.Array,
+                    cap_weights: Optional[jax.Array] = None,
+                    comparator_offset: Optional[jax.Array] = None
+                    ) -> CimPartials:
+    """µArray pass over one tile: x2:(B, Kt) against w:(Kt, N_t).
+
+    ``sw``/``sx`` are the *global* calibration scales of the full operands —
+    a tile never re-calibrates, so slicing commutes with quantisation and a
+    tiled execution reproduces the monolithic bitstream exactly. Kt must be
+    a multiple of ``cfg.m_columns`` except for the final K-tile (the zero
+    padding then matches the monolithic chunking).
+    """
+    K, N = w.shape
+    step_x, step_w, abs_x, abs_w, w_planes, x_planes = _bitplane_operands(
+        x2, w, cfg, sw, sx)
+
+    m = cfg.m_columns
+    nchunks = -(-K // m)
+
+    if cap_weights is None:
+        cap = jnp.ones((nchunks, m), jnp.float32)
+    else:
+        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
+    cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
+
+    def adc(mav: jax.Array) -> jax.Array:
+        return adc_codes(mav, cfg.adc_bits, comparator_offset)
+
+    # --- term S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator) ----------
+    # planes of |w| against the step(x) column gates, charge-averaged per
+    # (chunk, plane) with the (possibly mismatched) column capacitors.
+    wp = _chunk(jnp.moveaxis(w_planes, -1, 0), m, K)             # (N, Pw, C, m)
+    gx = _chunk(step_x, m, K)                                    # (B, C, m)
+    num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
+    codes1 = adc(num1 / cap_sum[None, None, None, :])            # (B, N, Pw, C)
+    pw = 2.0 ** jnp.arange(cfg.w_planes)
+    s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
+
+    # --- term S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator) ----------
+    xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
+    gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
+    num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
+    codes2 = adc(num2 / cap_sum[None, None, None, :])            # (Px, B, N, C)
+    px = 2.0 ** jnp.arange(cfg.x_planes)
+    s2c = jnp.einsum("pbnc,p->bn", codes2, px)
+
+    # --- residues ---------------------------------------------------------
+    # R_x = sum_k |x|_k via the dummy all-ones row (also ADC'd in hardware;
+    # shared across every weight vector, so computed once per input).
+    num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
+    codes_rx = adc(num_rx / cap_sum[None, None, :])              # (Px, B, C)
+    rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]          # (B, 1)
+    # R_w = sum_k |w|_kn, precomputed digitally (exact).
+    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
+    return CimPartials(s1c, s2c, rxc, r_w)
+
+
+def cim_mf_recombine(parts: CimPartials, sw: jax.Array, sx: jax.Array,
+                     cfg: CimConfig) -> jax.Array:
+    """Eq. 2 recombination of (possibly tile-accumulated) partials -> (B, N).
+
+    The code sums are rescaled by m / (2^A_P - 1) once, here — never per
+    tile — so the floating-point rounding sequence is identical no matter
+    how the contraction dimension was split.
+    """
+    levels = 2 ** cfg.adc_bits - 1
+    s1 = cfg.m_columns * (parts.s1c / levels)
+    s2 = cfg.m_columns * (parts.s2c / levels)
+    r_x = cfg.m_columns * (parts.rxc / levels)
+    sum_sign_x_abs_w = 2.0 * s1 - parts.r_w    # sum sign(x)|w|
+    sum_sign_w_abs_x = 2.0 * s2 - r_x          # sum sign(w)|x|
+    return sw * sum_sign_x_abs_w + sx * sum_sign_w_abs_x
+
+
 def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
                   cap_weights: Optional[jax.Array] = None,
                   comparator_offset: Optional[jax.Array] = None) -> jax.Array:
     """Hardware-faithful MF correlation x:(...,K) (+) w:(K,N) -> (...,N).
 
-    cap_weights: optional (K_padded,) positive per-column capacitor weights
-    (1.0 = nominal) applied to the charge averaging (variability injection).
+    cap_weights: optional (K,) positive per-column capacitor weights
+    (1.0 = nominal) applied to the charge averaging (variability
+    injection); the zero-padded tail columns of the final chunk then drop
+    out of the charge average (cap weight 0).
     comparator_offset: optional scalar/broadcastable offset in full-scale
     fractions added inside the ADC.
     """
@@ -98,29 +229,14 @@ def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
 
     sw = quant.calibrate_scale(w, cfg.w_bits)
     sx = quant.calibrate_scale(x2, cfg.x_bits)
-    wq = quant.quantize(w, sw, cfg.w_bits)          # (K, N) int
-    xq = quant.quantize(x2, sx, cfg.x_bits)         # (B, K) int
-
-    # Sign bits are stored SEPARATELY from the magnitude planes in the
-    # µArray (sign row + W_P-1 magnitude rows), so they come from the
-    # ORIGINAL operand sign — a weight whose magnitude truncates to zero
-    # keeps its true sign bit (quantising first would flip small negative
-    # weights to +, a large systematic error at low W_P).
-    step_w = (w >= 0).astype(jnp.float32)           # (K, N)
-    step_x = (x2 >= 0).astype(jnp.float32)          # (B, K)
-    abs_w = jnp.abs(wq)
-    abs_x = jnp.abs(xq)
-
-    w_planes = quant.bitplanes(abs_w, cfg.w_bits)   # (Pw, K, N)
-    x_planes = quant.bitplanes(abs_x, cfg.x_bits)   # (Px, B, K)
-
-    m = cfg.m_columns
-    nchunks = -(-K // m)
 
     if cfg.use_kernel and cap_weights is None and comparator_offset is None:
         # Fused Pallas path (no variability injection): per-chunk MAV + ADC
         # + plane recombination without materialising the MAV tensor.
         from repro.kernels import ops as kops
+        step_x, step_w, _, abs_w, w_planes, x_planes = _bitplane_operands(
+            x2, w, cfg, sw, sx)
+        m = cfg.m_columns
         s1 = kops.cim_mav(step_x, w_planes, m_columns=m,
                           adc_bits=cfg.adc_bits)                     # (B, N)
         s2 = kops.cim_mav(step_w.T, jnp.moveaxis(x_planes, 1, -1),
@@ -132,46 +248,9 @@ def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
         y = (sw * (2.0 * s1 - r_w) + sx * (2.0 * s2 - r_x))
         return y.reshape(batch_shape + (N,)).astype(x.dtype)
 
-    if cap_weights is None:
-        cap = jnp.ones((nchunks, m), jnp.float32)
-    else:
-        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
-    cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
-
-    def adc(mav: jax.Array) -> jax.Array:
-        return adc_quantize(mav, cfg.adc_bits, comparator_offset)
-
-    # --- term S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator) ----------
-    # planes of |w| against the step(x) column gates, charge-averaged per
-    # (chunk, plane) with the (possibly mismatched) column capacitors.
-    wp = _chunk(jnp.moveaxis(w_planes, -1, 0), m, K)             # (N, Pw, C, m)
-    gx = _chunk(step_x, m, K)                                    # (B, C, m)
-    num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
-    mavs1 = adc(num1 / cap_sum[None, None, None, :])             # (B, N, Pw, C)
-    pw = 2.0 ** jnp.arange(cfg.w_planes)
-    s1 = m * jnp.einsum("bnpc,p->bn", mavs1, pw)
-
-    # --- term S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator) ----------
-    xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
-    gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
-    num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
-    mavs2 = adc(num2 / cap_sum[None, None, None, :])             # (Px, B, N, C)
-    px = 2.0 ** jnp.arange(cfg.x_planes)
-    s2 = m * jnp.einsum("pbnc,p->bn", mavs2, px)
-
-    # --- residues ---------------------------------------------------------
-    # R_x = sum_k |x|_k via the dummy all-ones row (also ADC'd in hardware;
-    # shared across every weight vector, so computed once per input).
-    num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
-    mavs_rx = adc(num_rx / cap_sum[None, None, :])               # (Px, B, C)
-    r_x = m * jnp.einsum("pbc,p->b", mavs_rx, px)[:, None]       # (B, 1)
-    # R_w = sum_k |w|_kn, precomputed digitally (exact).
-    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
-
-    # Eq. 2 recombination, then dequantise each side with its own scale.
-    sum_sign_x_abs_w = 2.0 * s1 - r_w          # sum sign(x)|w|
-    sum_sign_w_abs_x = 2.0 * s2 - r_x          # sum sign(w)|x|
-    y = sw * sum_sign_x_abs_w + sx * sum_sign_w_abs_x
+    parts = cim_mf_partials(x2, w, cfg, sw, sx, cap_weights,
+                            comparator_offset)
+    y = cim_mf_recombine(parts, sw, sx, cfg)
     return y.reshape(batch_shape + (N,)).astype(x.dtype)
 
 

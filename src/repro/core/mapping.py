@@ -27,10 +27,21 @@ class LayerStat:
     name: str
     params: int
     ops: int                      # 2 * MACs for one forward pass
+    # matmul view of the projection (0 = unknown): K contraction columns,
+    # N output channels. ops = 2*k*n*calls, so weight reuse is implied.
+    k: int = 0
+    n: int = 0
 
     @property
     def ops_per_param(self) -> float:
         return self.ops / max(self.params, 1)
+
+    @property
+    def calls(self) -> int:
+        """Input vectors per forward (weight reuse); 1 if shape unknown."""
+        if not (self.k and self.n):
+            return 1
+        return max(1, round(self.ops / (2 * self.k * self.n)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +63,40 @@ class MappingPolicy:
         if stat.ops_per_param >= self.threshold:
             return self.mf_mode
         return ExecMode.REGULAR
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetMappingPolicy(MappingPolicy):
+    """Fleet-aware mixed mapping: ops/param threshold AND capacity check.
+
+    A layer only maps to CIM if its µArray tile count fits the fleet's
+    resident weight capacity (``capacity_tiles`` slots of ``m_columns``
+    columns each). ``allow_swap`` lifts the capacity check for fleets that
+    stream weights in rounds. Layers without a recorded (k, n) shape fall
+    back to a best-effort ``params / m_columns`` estimate — exact when K is
+    a chunk multiple, an UNDERestimate when K < m_columns (many short-K
+    output channels each waste a padded tile); record shapes on stats that
+    must gate reliably.
+
+    Build one from a fleet with ``repro.compiler.Fleet.mapping_policy()``.
+    """
+
+    m_columns: int = 31
+    capacity_tiles: int = 128
+    allow_swap: bool = False
+
+    def layer_tiles(self, stat: LayerStat) -> int:
+        if stat.k and stat.n:
+            return -(-stat.k // self.m_columns) * stat.n
+        return -(-stat.params // self.m_columns)
+
+    def assign(self, stat: LayerStat) -> ExecMode:
+        base = super().assign(stat)
+        if base == ExecMode.REGULAR or self.allow_swap:
+            return base
+        if self.layer_tiles(stat) > self.capacity_tiles:
+            return ExecMode.REGULAR
+        return base
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,11 +13,22 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_types(n_axes: int) -> dict:
+    """``axis_types`` kwargs for ``jax.make_mesh``, if this jax has them.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; on older runtimes
+    every mesh axis is implicitly Auto, so omitting the kwarg is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
@@ -25,4 +36,4 @@ def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
     n = len(jax.devices())
     data_axis = max(1, min(data_axis, n // model_axis))
     return jax.make_mesh((data_axis, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **auto_axis_types(2))

@@ -167,12 +167,20 @@ def lenet_apply(params: dict, x: jax.Array,
 
 
 def lenet_layer_stats(img: int = 28) -> list[LayerStat]:
-    """(params, ops) per layer for the Fig. 9a mapping table."""
+    """(params, ops, matmul shape) per layer for the Fig. 9a mapping table.
+
+    k/n are the im2col matmul view each conv lowers to on the CIM fleet
+    (k = kh*kw*cin patch width, n = cout; spatial reuse implied by ops).
+    """
     return [
-        LayerStat("conv1", 5 * 5 * 1 * 6 + 6, 2 * 5 * 5 * 1 * 6 * 28 * 28),
-        LayerStat("conv2", 5 * 5 * 6 * 16 + 16, 2 * 5 * 5 * 6 * 16 * 14 * 14),
-        LayerStat("fc1", 16 * 7 * 7 * 120 + 120, 2 * 16 * 7 * 7 * 120),
-        LayerStat("fc2_classifier", 120 * 10 + 10, 2 * 120 * 10),
+        LayerStat("conv1", 5 * 5 * 1 * 6 + 6, 2 * 5 * 5 * 1 * 6 * 28 * 28,
+                  k=5 * 5 * 1, n=6),
+        LayerStat("conv2", 5 * 5 * 6 * 16 + 16, 2 * 5 * 5 * 6 * 16 * 14 * 14,
+                  k=5 * 5 * 6, n=16),
+        LayerStat("fc1", 16 * 7 * 7 * 120 + 120, 2 * 16 * 7 * 7 * 120,
+                  k=16 * 7 * 7, n=120),
+        LayerStat("fc2_classifier", 120 * 10 + 10, 2 * 120 * 10,
+                  k=120, n=10),
     ]
 
 
@@ -222,9 +230,11 @@ def cifar_layer_stats() -> list[LayerStat]:
     for i in range(5):
         par = 9 * chans[i] * chans[i + 1]
         ops = 2 * par * sizes[i] * sizes[i]
-        out.append(LayerStat(f"conv{i+1}", par, ops))
-    out.append(LayerStat("fc1", 256 * 16 * 256, 2 * 256 * 16 * 256))
-    out.append(LayerStat("fc2_classifier", 2560, 2 * 2560))
+        out.append(LayerStat(f"conv{i+1}", par, ops,
+                             k=9 * chans[i], n=chans[i + 1]))
+    out.append(LayerStat("fc1", 256 * 16 * 256, 2 * 256 * 16 * 256,
+                         k=256 * 16, n=256))
+    out.append(LayerStat("fc2_classifier", 2560, 2 * 2560, k=256, n=10))
     return out
 
 

@@ -1,7 +1,10 @@
 """CIM behavioural simulator + quantiser tests (paper Sec. IV-V)."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -52,6 +55,16 @@ class TestADC:
             mav = counts / m
             deq = adc_quantize(mav, a) * m
             np.testing.assert_allclose(deq, counts, atol=1e-5)
+
+    @pytest.mark.parametrize("m,a", [(31, 5), (15, 4)])
+    def test_exactly_lossless_when_levels_cover_counts(self, m, a):
+        # 2^A >= M + 1 gives every discharge count its own code: the paper's
+        # 8x62 -> 5-bit and 8x30 -> 4-bit pairings are EXACTLY lossless,
+        # bit-for-bit, not merely within tolerance.
+        assert 2 ** a >= m + 1
+        counts = jnp.arange(m + 1, dtype=jnp.float32)
+        deq = adc_quantize(counts / m, a) * m
+        np.testing.assert_array_equal(np.asarray(deq), np.asarray(counts))
 
     def test_monotone(self):
         mav = jnp.linspace(0, 1, 97)
@@ -179,3 +192,27 @@ class TestVariability:
         caps = sample_cap_weights(jax.random.PRNGKey(2), 62, var)
         keep = screen_columns(caps, var)
         assert int(jnp.sum(keep)) == 62 - 3  # 5% of 62 -> 3 discarded
+
+
+class TestKernelPathParity:
+    """CimConfig(use_kernel=True) must agree with the einsum reference."""
+
+    @pytest.mark.parametrize("m,a", [(31, 5), (15, 4)])
+    def test_kernel_matches_einsum(self, m, a):
+        K, N = 2 * m + 9, 7       # non-divisible K exercises chunk padding
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, K))
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+        yk = cim_mf_matmul(x, w, CimConfig(8, 8, a, m, use_kernel=True))
+        ye = cim_mf_matmul(x, w, CimConfig(8, 8, a, m))
+        # identical integer code sums on both paths; only the final float
+        # recombination order differs (fused vs staged), so ulp-tight.
+        np.testing.assert_allclose(yk, ye, rtol=0, atol=1e-4)
+
+    @pytest.mark.parametrize("m,a", [(31, 5), (15, 4)])
+    def test_kernel_parity_batched_shapes(self, m, a):
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, m + 2))
+        w = jax.random.normal(jax.random.PRNGKey(3), (m + 2, 5))
+        yk = cim_mf_matmul(x, w, CimConfig(8, 8, a, m, use_kernel=True))
+        ye = cim_mf_matmul(x, w, CimConfig(8, 8, a, m))
+        assert yk.shape == ye.shape == (2, 3, 5)
+        np.testing.assert_allclose(yk, ye, rtol=0, atol=1e-4)

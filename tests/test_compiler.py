@@ -1,0 +1,221 @@
+"""Macro-compiler tests: tiling invariants, schedule/cost identities,
+fleet-aware mapping, and bit-exact tiled execution."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compiler import (Fleet, compile_model, compiled_matmul,
+                            layer_cost, layer_table, lm_layer_stats,
+                            model_cost, plan_tiling, rollup, rollup_summary,
+                            schedule_layer, verify_bit_exact)
+from repro.core import (CimConfig, ExecMode, FleetMappingPolicy, LayerStat,
+                        cim_mf_matmul, unit_op_energy_j)
+from repro.core.variability import sample_cap_weights, VariabilityConfig
+from repro.models.convnets import cifar_layer_stats, lenet_layer_stats
+
+CFG62 = CimConfig(8, 8, 5, 31)
+CFG30 = CimConfig(8, 8, 4, 15)
+
+
+class TestTiling:
+    def test_tile_counts_and_padding(self):
+        plan = plan_tiling(70, 9, CFG62)
+        assert plan.n_chunks == 3 and plan.k_padded == 93
+        assert plan.pad_k == 23 and plan.n_tiles == 27
+        assert plan.waste_fraction == pytest.approx(23 / 93)
+
+    def test_divisible_k_has_no_waste(self):
+        plan = plan_tiling(62, 4, CFG62)
+        assert plan.pad_k == 0 and plan.waste_fraction == 0.0
+
+    def test_k_slices_chunk_aligned(self):
+        plan = plan_tiling(200, 24, CFG30, tile_k_chunks=3, tile_n=7)
+        for (k0, k1) in plan.k_slices[:-1]:
+            assert (k1 - k0) % CFG30.m_columns == 0
+        assert plan.k_slices[0][0] == 0 and plan.k_slices[-1][1] == 200
+        assert plan.n_slices[-1][1] == 24
+
+    def test_fleet_capacity(self):
+        fleet = Fleet(n_macros=8, cfg=CFG62)
+        assert fleet.tile_slots == 16
+        assert fleet.tile_weight_bits == 31 * 8
+        assert fleet.weight_capacity_bits == 16 * 31 * 8
+
+
+class TestSchedule:
+    def test_resident_layer_single_round(self):
+        fleet = Fleet(n_macros=16, cfg=CFG62)      # 32 slots
+        s = schedule_layer(fleet.plan(62, 16), fleet, calls=10)
+        assert s.rounds == 1 and s.fits_resident   # 32 tiles fit
+        assert s.unit_ops == 2 * 16 * 10
+        # 32 tiles over 16 macros -> 2 serial tiles/macro x 10 calls
+        assert s.macro_unit_ops == 20
+
+    def test_oversized_layer_rounds(self):
+        fleet = Fleet(n_macros=2, cfg=CFG62)   # 4 slots
+        s = schedule_layer(fleet.plan(31, 10), fleet, calls=3)
+        assert s.rounds == math.ceil(10 / 4) == 3
+        assert s.unit_ops == 10 * 3
+        # rounds of 4,4,2 tiles over 2 macros: (2+2+1) passes x 3 calls
+        assert s.macro_unit_ops == 15
+        assert s.reload_bits == 10 * fleet.tile_weight_bits
+
+    def test_more_macros_reduce_critical_path(self):
+        plan = plan_tiling(310, 64, CFG62)
+        crits = [schedule_layer(plan, Fleet(n_macros=n, cfg=CFG62),
+                                calls=4).macro_unit_ops
+                 for n in (4, 16, 64, 256)]
+        assert crits == sorted(crits, reverse=True)
+        assert crits[-1] < crits[0]
+
+    def test_pinned_model_has_no_reloads(self):
+        fleet = Fleet(n_macros=64, cfg=CFG62)    # 128 slots, lenet needs 86
+        ms = compile_model(lenet_layer_stats(), fleet,
+                           policy=fleet.mapping_policy(threshold=1.0))
+        assert ms.pinned
+        assert all(s.reload_bits == 0 for s in ms.layers)
+        swapped = compile_model(lenet_layer_stats(),
+                                Fleet(n_macros=64, cfg=CFG62,
+                                      weight_stationary=False))
+        assert not swapped.pinned
+        assert all(s.reload_bits > 0 for s in swapped.layers)
+
+
+class TestCost:
+    def test_energy_identity_unit_ops_times_unit_energy(self):
+        """Acceptance: schedule unit-op total x unit_op_energy_j == roll-up."""
+        fleet = Fleet(n_macros=32, cfg=CFG62, weight_stationary=False)
+        ms = compile_model(cifar_layer_stats(), fleet)
+        assert ms.layers, "no CIM layers mapped"
+        costs, total = model_cost(ms)
+        e_unit = unit_op_energy_j(CFG62)
+        assert total.unit_ops == sum(s.unit_ops for s in ms.layers)
+        assert total.compute_energy_j == total.unit_ops * e_unit
+        for s, c in zip(ms.layers, costs):
+            assert c.compute_energy_j == s.unit_ops * e_unit
+
+    def test_utilization_bounded_and_tops_below_peak(self):
+        from repro.core import tops_per_watt
+        fleet = Fleet(n_macros=16, cfg=CFG62, weight_stationary=False)
+        ms = compile_model(cifar_layer_stats(), fleet)
+        costs, total = model_cost(ms)
+        for c in costs:
+            assert 0.0 < c.utilization <= 1.0
+            # padding + reload overheads keep layers at/below Table II peak
+            assert c.tops_per_w <= tops_per_watt(CFG62) + 1e-9
+        assert 0.0 < total.utilization <= 1.0
+        assert total.latency_s > 0 and total.energy_j > 0
+
+    def test_rollup_sums_layers(self):
+        fleet = Fleet(n_macros=16, cfg=CFG30, weight_stationary=False)
+        ms = compile_model(lenet_layer_stats(), fleet)
+        costs, total = model_cost(ms)
+        assert total.mac_ops == sum(c.mac_ops for c in costs)
+        assert total.latency_s == pytest.approx(
+            sum(c.latency_s for c in costs))
+        assert total.reload_energy_j == pytest.approx(
+            sum(c.reload_energy_j for c in costs))
+
+    def test_report_renders(self):
+        fleet = Fleet(n_macros=16, cfg=CFG62, weight_stationary=False)
+        ms = compile_model(lenet_layer_stats(), fleet)
+        costs, total = model_cost(ms)
+        table = layer_table(ms, costs)
+        assert "conv1" in table and "TOPS/W" in table
+        assert "utilization" in rollup_summary(ms, total)
+
+
+class TestFleetMapping:
+    BIG = LayerStat("mid_proj", 1024 * 1024, 2 * 1024 * 1024 * 64,
+                    k=1024, n=1024)
+
+    def test_capacity_gates_cim(self):
+        small = Fleet(n_macros=8, cfg=CFG62)
+        big = Fleet(n_macros=32768, cfg=CFG62)
+        assert small.mapping_policy().assign(self.BIG) == ExecMode.REGULAR
+        assert big.mapping_policy().assign(self.BIG) == ExecMode.MF
+
+    def test_swap_fleet_lifts_capacity_gate(self):
+        swap = Fleet(n_macros=8, cfg=CFG62, weight_stationary=False)
+        assert swap.mapping_policy().assign(self.BIG) == ExecMode.MF
+
+    def test_threshold_and_name_rules_still_apply(self):
+        pol = Fleet(n_macros=32768, cfg=CFG62).mapping_policy()
+        head = LayerStat("lm_head", 10_000, 2 * 10_000 * 100, k=100, n=100)
+        cold = LayerStat("proj", 10_000, 10_000, k=100, n=100)
+        assert pol.assign(head) == ExecMode.REGULAR   # always-digital name
+        assert pol.assign(cold) == ExecMode.REGULAR   # ops/param below 2.0
+        warm = LayerStat("proj", 10_000, 2 * 10_000 * 100, k=100, n=100)
+        assert pol.assign(warm) == ExecMode.MF
+
+    def test_unshaped_layer_uses_param_estimate(self):
+        pol = FleetMappingPolicy(capacity_tiles=16, m_columns=31)
+        fat = LayerStat("proj", 31 * 1000, 2 * 31 * 1000 * 50)  # ~1000 tiles
+        assert pol.assign(fat) == ExecMode.REGULAR
+
+    def test_compile_model_lm_frontend(self):
+        from repro.configs.registry import get_config
+        cfg = get_config("qwen3-0.6b", smoke=True)
+        stats = lm_layer_stats(cfg, tokens=32)
+        fleet = Fleet(n_macros=512, cfg=CFG62, weight_stationary=False)
+        ms = compile_model(stats, fleet)
+        assert len(ms.layers) == 4 * cfg.n_layers      # qkv/out/up/down
+        names = {s.name for s in ms.digital}
+        assert "embed" in names and "lm_head" in names
+
+
+class TestBitExactExecution:
+    """Acceptance: tiled execution == monolithic simulator, bit for bit."""
+
+    CASES = [
+        # (K, N, cfg, tile_k_chunks, tile_n) — incl. non-divisible shapes
+        (70, 9, CFG62, 1, 4),
+        (100, 17, CFG30, 3, 5),
+        (124, 33, CFG62, 2, 32),
+        (45, 24, CimConfig(8, 8, 3, 15), 7, 7),   # lossy ADC pairing
+        (31, 1, CFG62, 1, 1),                      # single-tile degenerate
+    ]
+
+    @pytest.mark.parametrize("k,n,cfg,tkc,tn", CASES)
+    def test_bit_exact(self, k, n, cfg, tkc, tn):
+        x = jax.random.normal(jax.random.PRNGKey(k), (5, k))
+        w = jax.random.normal(jax.random.PRNGKey(n), (k, n))
+        plan = plan_tiling(k, n, cfg, tile_k_chunks=tkc, tile_n=tn)
+        tiled = compiled_matmul(x, w, plan, cfg)
+        mono = cim_mf_matmul(x, w, cfg)
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(mono))
+
+    def test_bit_exact_batched_input(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 70))
+        w = jax.random.normal(jax.random.PRNGKey(1), (70, 9))
+        plan = plan_tiling(70, 9, CFG62, tile_k_chunks=1, tile_n=4)
+        tiled = compiled_matmul(x, w, plan, CFG62)
+        assert tiled.shape == (2, 3, 9)
+        np.testing.assert_array_equal(np.asarray(tiled),
+                                      np.asarray(cim_mf_matmul(x, w, CFG62)))
+
+    def test_bit_exact_with_variability(self):
+        k, n = 93, 6
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, k))
+        w = jax.random.normal(jax.random.PRNGKey(3), (k, n))
+        caps = sample_cap_weights(jax.random.PRNGKey(4), k,
+                                  VariabilityConfig(cap_sigma=0.1))
+        plan = plan_tiling(k, n, CFG62, tile_k_chunks=1, tile_n=2)
+        assert verify_bit_exact(x, w, plan, CFG62, cap_weights=caps,
+                                comparator_offset=jnp.float32(0.01))
+
+    def test_plan_operand_mismatch_raises(self):
+        plan = plan_tiling(70, 9, CFG62)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 62))
+        w = jax.random.normal(jax.random.PRNGKey(1), (62, 9))
+        with pytest.raises(ValueError):
+            compiled_matmul(x, w, plan, CFG62)
+        with pytest.raises(ValueError):
+            compiled_matmul(
+                jax.random.normal(jax.random.PRNGKey(0), (2, 70)),
+                jax.random.normal(jax.random.PRNGKey(1), (70, 9)),
+                plan, CFG30)

@@ -1,8 +1,12 @@
 """Unit + property tests for the MF operator (paper Eq. 1-3)."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import hypothesis, st
+    hnp = hypothesis.extra.numpy
 import jax
 import jax.numpy as jnp
 import numpy as np

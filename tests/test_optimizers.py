@@ -1,8 +1,11 @@
 """Optimizer unit/property tests: convergence on quadratics, schedule
 shape, int8 moment quantisation, error-feedback compression."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

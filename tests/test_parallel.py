@@ -97,8 +97,8 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
                                     MFTechniqueConfig)
     from repro.models import transformer as T
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import auto_axis_types
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **auto_axis_types(2))
     cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=32,
                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
                       moe=MoEConfig(n_experts=8, top_k=2, n_shared=1,

@@ -1,7 +1,10 @@
 """Roofline analyzer tests: HLO collective parser, terms, param counting."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
+    from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -125,8 +125,8 @@ class TestFaultTolerance:
         # restore with explicit shardings — the reshard path used when the
         # mesh changes between runs (elastic scaling)
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import auto_axis_types
+        mesh = jax.make_mesh((1,), ("data",), **auto_axis_types(1))
         tree = {"w": jnp.arange(8.0).reshape(2, 4)}
         with tempfile.TemporaryDirectory() as d:
             ckpt.save(d, 3, tree)
