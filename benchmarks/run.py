@@ -19,6 +19,7 @@ SUITES = (
     "fig9_mixed_mapping",
     "compiler_report",
     "kernel_bench",
+    "serve_bench",
     "roofline_report",
 )
 

@@ -1,0 +1,127 @@
+"""Decode throughput: programmed (weight-stationary) vs legacy CIM serving.
+
+Spins up two ``ServeEngine`` instances on the qwen3 config with every MF
+projection mapped to ``cim_sim`` — one programmed at construction
+(weights frozen into macro state, step does input-side work only) and one
+on the legacy on-the-fly path (recalibrate/requantise/bitplane/pack every
+step) — fills all slots with decode-bound requests, and measures
+steady-state decode tokens/sec.
+
+Emits ``BENCH_serve.json`` (the serving perf trajectory anchor) and the
+``benchmarks/run.py`` CSV rows.
+
+CLI: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MFTechniqueConfig
+from repro.configs.qwen3_0_6b import SMOKE
+from repro.core.cim import CimConfig
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+OUT_PATH = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+
+
+def _serve_cfg(quick: bool):
+    """qwen3 proportions with cim_sim projections.
+
+    The smoke point keeps qwen3's layer pattern at reduced width; the full
+    point widens toward the real shapes (still laptop-runnable: the
+    behavioural µArray simulator is ~Pw*K*N work per projection call).
+    """
+    cim = CimConfig(w_bits=8, x_bits=8, adc_bits=5, m_columns=31)
+    mf = MFTechniqueConfig(mode="cim_sim", cim=cim)
+    base = SMOKE if quick else dataclasses.replace(
+        SMOKE, d_model=256, d_ff=768, head_dim=64, vocab_size=2048)
+    return dataclasses.replace(base, dtype=jnp.float32, mf=mf)
+
+
+def _decode_tok_per_s(engine: ServeEngine, ticks: int, warmup: int = 3,
+                      reps: int = 3) -> float:
+    """Median steady-state decode throughput over ``reps`` windows."""
+    import numpy as np
+    for _ in range(engine.slots):
+        engine.submit(Request(prompt=[1], max_new_tokens=1 << 30))
+    for _ in range(warmup):
+        engine.step()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            engine.step()
+        jax.block_until_ready(engine.cache["pos"])
+        times.append(time.perf_counter() - t0)
+    return engine.slots * ticks / float(np.median(times))
+
+
+def run(quick: bool = True):
+    cfg = _serve_cfg(quick)
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    ticks = 10 if quick else 30
+    warmup, reps = 3, 3
+    max_len = reps * ticks + warmup + 4
+    slots = 2
+
+    prog_eng = ServeEngine(params, cfg, slots=slots, max_len=max_len,
+                           program=True)
+    legacy_eng = ServeEngine(params, cfg, slots=slots, max_len=max_len,
+                             program=False)
+    assert prog_eng.programmed and not legacy_eng.programmed
+    from repro.core.programmed import programmed_bytes
+    state_bytes = programmed_bytes(prog_eng._exec_params)
+
+    prog_tok_s = _decode_tok_per_s(prog_eng, ticks, warmup, reps)
+    legacy_tok_s = _decode_tok_per_s(legacy_eng, ticks, warmup, reps)
+    speedup = prog_tok_s / legacy_tok_s if legacy_tok_s else 0.0
+
+    payload = {
+        "bench": "serve_decode",
+        "config": cfg.name,
+        "quick": quick,
+        "slots": slots,
+        "ticks": ticks,
+        "w_bits": cfg.mf.cim.w_bits,
+        "x_bits": cfg.mf.cim.x_bits,
+        "adc_bits": cfg.mf.cim.adc_bits,
+        "m_columns": cfg.mf.cim.m_columns,
+        "programmed_state_bytes": state_bytes,
+        "programmed_tok_s": prog_tok_s,
+        "legacy_tok_s": legacy_tok_s,
+        "speedup": speedup,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+    return [
+        ("serve_decode_programmed", 1e6 / prog_tok_s,
+         f"tok_s={prog_tok_s:.1f}"),
+        ("serve_decode_legacy", 1e6 / legacy_tok_s,
+         f"tok_s={legacy_tok_s:.1f}"),
+        ("serve_decode_speedup", 0.0,
+         f"programmed/legacy={speedup:.2f}x json={OUT_PATH}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small qwen3 smoke shapes (CI)")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.smoke):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

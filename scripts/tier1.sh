@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 gate: fast test suite + compiler-report benchmark smoke.
+# TIER1_SERVE_BENCH=1 additionally runs the serve-decode bench smoke
+# (programmed vs legacy CIM decode) and leaves BENCH_serve.json behind.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --only compiler
+if [[ "${TIER1_SERVE_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.serve_bench --smoke
+fi

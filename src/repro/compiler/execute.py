@@ -17,10 +17,17 @@ through the behavioural µArray simulator and reproduces the monolithic
 
 (Exactness needs the code sums to stay below 2^24, i.e. K below ~10^5
 chunks-worth per output — far beyond any projection in the registry.)
+
+The weight-stationary split lives here too: :func:`program_layer_tiles`
+freezes every tile's weight state once (the schedule's reprogram events),
+and :func:`compiled_matmul_programmed` streams inputs through those
+programmed slices doing only step-time work — bit-exact against both
+on-the-fly paths.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -28,8 +35,10 @@ import jax.numpy as jnp
 
 from repro.compiler.tiling import TilingPlan
 from repro.core import quant
-from repro.core.cim import (CimConfig, CimPartials, cim_mf_matmul,
-                            cim_mf_partials, cim_mf_recombine)
+from repro.core.cim import (CimConfig, CimPartials, cim_input_partials,
+                            cim_mf_matmul, cim_mf_partials, cim_mf_recombine)
+from repro.core.programmed import (ProgrammedLayer, default_static_sx,
+                                   program_macro)
 
 
 def compiled_matmul(x: jax.Array, w: jax.Array, plan: TilingPlan,
@@ -74,6 +83,80 @@ def compiled_matmul(x: jax.Array, w: jax.Array, plan: TilingPlan,
                         jnp.concatenate(s2_cols, axis=-1),
                         rxc, jnp.concatenate(rw_cols, axis=-1))
     y = cim_mf_recombine(parts, sw, sx, cfg)
+    return y.reshape(batch_shape + (N,)).astype(x.dtype)
+
+
+def program_layer_tiles(w: jax.Array, plan: TilingPlan, cfg: CimConfig, *,
+                        sx=None, sw=None) -> ProgrammedLayer:
+    """Program one tiled projection: per-tile frozen weight-state slices.
+
+    Each (n-slice, k-slice) tile gets its own :class:`ProgrammedMacro`
+    programmed with the LAYER-GLOBAL scales, so tile boundaries commute
+    with quantisation exactly as in the on-the-fly tiled path. In the
+    scheduled fleet these tile writes are the reprogram events
+    (:attr:`~repro.compiler.schedule.LayerSchedule.reprogram_events`) —
+    a weight-swap round re-runs this for the incoming tile batch.
+    """
+    K, N = w.shape
+    if (plan.k, plan.n) != (K, N):
+        raise ValueError(f"plan is for ({plan.k}, {plan.n}), operands are "
+                         f"({K}, {N})")
+    if plan.m_columns != cfg.m_columns or plan.w_bits != cfg.w_bits:
+        raise ValueError("plan geometry does not match CimConfig")
+    if sw is None:
+        sw = quant.calibrate_scale(w, cfg.w_bits)
+    if sx is None:
+        sx = default_static_sx(cfg)
+    # Tiled step-time execution accumulates CimPartials, i.e. the plane-
+    # level einsum path — program that state regardless of cfg.use_kernel
+    # (and skip the lossless collapse: tiles must expose raw partials).
+    tile_cfg = dataclasses.replace(cfg, use_kernel=False)
+    tiles = tuple(
+        tuple(program_macro(w[k0:k1, n0:n1], tile_cfg, sx=sx, sw=sw,
+                            prefer_lossless=False)
+              for (k0, k1) in plan.k_slices)
+        for (n0, n1) in plan.n_slices)
+    return ProgrammedLayer(sw=jnp.asarray(sw, jnp.float32),
+                           sx=jnp.asarray(sx, jnp.float32), tiles=tiles)
+
+
+def compiled_matmul_programmed(x: jax.Array, prog: ProgrammedLayer,
+                               plan: TilingPlan, cfg: CimConfig,
+                               cap_weights: Optional[jax.Array] = None,
+                               comparator_offset: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Step-time tiled execution against programmed tile slices.
+
+    Bit-exact with :func:`compiled_matmul` (and hence with the monolithic
+    paths) when ``prog`` was programmed with the same scales — only the
+    input-side work runs per call.
+    """
+    K, N = plan.k, plan.n
+    if len(prog.tiles) != len(plan.n_slices) or any(
+            len(row) != len(plan.k_slices) for row in prog.tiles):
+        raise ValueError("programmed tiles do not match the plan's slicing")
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+
+    s1_cols, s2_cols, rw_cols = [], [], []
+    rxc = None
+    for row, (n0, n1) in zip(prog.tiles, plan.n_slices):
+        acc: Optional[CimPartials] = None
+        for tile, (k0, k1) in zip(row, plan.k_slices):
+            caps = None if cap_weights is None else cap_weights[k0:k1]
+            p = cim_input_partials(x2[:, k0:k1], tile.state, cfg, prog.sx,
+                                   caps, comparator_offset)
+            acc = p if acc is None else acc + p
+        s1_cols.append(acc.s1c)
+        s2_cols.append(acc.s2c)
+        rw_cols.append(acc.r_w)
+        if rxc is None:
+            rxc = acc.rxc    # the |x| dummy-row residue has no N dependence
+
+    parts = CimPartials(jnp.concatenate(s1_cols, axis=-1),
+                        jnp.concatenate(s2_cols, axis=-1),
+                        rxc, jnp.concatenate(rw_cols, axis=-1))
+    y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
     return y.reshape(batch_shape + (N,)).astype(x.dtype)
 
 

@@ -44,7 +44,8 @@ def rollup_summary(msched: ModelSchedule, total: FleetCost) -> str:
         f"{'weight-stationary' if f.weight_stationary else 'weight-swapped'}"
         f"{', pinned' if msched.pinned else ''}",
         f"tiles={msched.total_tiles}  unit_ops={total.unit_ops}  "
-        f"rounds_max={max((c.rounds for c in msched.layers), default=0)}",
+        f"rounds_max={max((c.rounds for c in msched.layers), default=0)}  "
+        f"reprogram_events={msched.total_reprogram_events}",
         f"latency={_si(total.latency_s, 's').strip()}  "
         f"energy={_si(total.energy_j, 'J').strip()} "
         f"(reload {_si(total.reload_energy_j, 'J').strip()})",
@@ -70,5 +71,6 @@ def benchmark_rows(prefix: str, msched: ModelSchedule,
                  f"unit_ops={total.unit_ops} lat={total.latency_s:.3e}s "
                  f"e={total.energy_j:.3e}J topsw={total.tops_per_w:.1f} "
                  f"sys_topsw={total.system_tops_per_w():.2f} "
-                 f"util={total.utilization:.2f} pinned={msched.pinned}"))
+                 f"util={total.utilization:.2f} pinned={msched.pinned} "
+                 f"reprog={msched.total_reprogram_events}"))
     return rows

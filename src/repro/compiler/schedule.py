@@ -43,6 +43,11 @@ class LayerSchedule:
     unit_ops: int          # fleet-total Eq. 4 unit operations
     macro_unit_ops: int    # serial unit ops on the busiest macro (crit path)
     reload_bits: int       # µArray weight bits written for this layer
+    # Explicit weight-(re)program events in the schedule: one per weight-
+    # swap round (the program-time phase of the weight-stationary runtime,
+    # executed by repro.compiler.execute.program_layer_tiles). 0 when the
+    # layer's tiles are pinned fleet-resident.
+    reprogram_events: int = 0
 
     @property
     def fits_resident(self) -> bool:
@@ -69,7 +74,8 @@ def schedule_layer(plan: TilingPlan, fleet: Fleet, *, calls: int = 1,
     return LayerSchedule(
         name=plan.name, plan=plan, calls=calls, rounds=rounds,
         unit_ops=tiles * calls, macro_unit_ops=macro_unit_ops,
-        reload_bits=0 if preloaded else tiles * fleet.tile_weight_bits)
+        reload_bits=0 if preloaded else tiles * fleet.tile_weight_bits,
+        reprogram_events=0 if preloaded else rounds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +99,11 @@ class ModelSchedule:
     @property
     def digital_ops(self) -> int:
         return sum(s.ops for s in self.digital)
+
+    @property
+    def total_reprogram_events(self) -> int:
+        """Weight-program events across the model (0 when pinned)."""
+        return sum(s.reprogram_events for s in self.layers)
 
 
 def compile_model(stats: Sequence[LayerStat], fleet: Fleet,

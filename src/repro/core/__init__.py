@@ -1,8 +1,11 @@
 """MF-Net core: the paper's contribution as composable JAX modules."""
 
-from repro.core.cim import (CimConfig, CimPartials, cim_mf_matmul,
-                            cim_mf_matmul_ste, cim_mf_partials,
-                            cim_mf_recombine)
+from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
+                            CimWeightState, cim_input_partials,
+                            cim_mf_matmul, cim_mf_matmul_ste,
+                            cim_mf_partials, cim_mf_recombine,
+                            cim_program_kernel_state,
+                            cim_program_weight_state)
 from repro.core.energy import (DEFAULT_MACRO, MacroParams,
                                mixed_system_tops_per_watt, tops_per_watt,
                                unit_op_cycles, unit_op_energy_j)
@@ -11,6 +14,9 @@ from repro.core.mapping import (FleetMappingPolicy, LayerStat, MappingPolicy,
 from repro.core.mf import (ExecMode, apply_projection, dense_init, hw_sign,
                            mf_conv2d, mf_correlate_ref,
                            mf_correlate_step_form, mf_dense_init, mf_matmul)
+from repro.core.programmed import (ProgrammedLayer, ProgrammedMacro,
+                                   cim_mf_matmul_programmed, program_macro,
+                                   program_weights, strip_programmed)
 from repro.core.quant import fake_quant, quantize, dequantize, calibrate_scale
 from repro.core.variability import (VariabilityConfig,
                                     mav_crossover_probability,
@@ -18,8 +24,12 @@ from repro.core.variability import (VariabilityConfig,
                                     sample_comparator_offset, screen_columns)
 
 __all__ = [
-    "CimConfig", "CimPartials", "cim_mf_matmul", "cim_mf_matmul_ste",
-    "cim_mf_partials", "cim_mf_recombine", "DEFAULT_MACRO",
+    "CimConfig", "CimKernelState", "CimPartials", "CimWeightState",
+    "cim_input_partials", "cim_mf_matmul", "cim_mf_matmul_ste",
+    "cim_mf_partials", "cim_mf_recombine", "cim_program_kernel_state",
+    "cim_program_weight_state", "ProgrammedLayer", "ProgrammedMacro",
+    "cim_mf_matmul_programmed", "program_macro", "program_weights",
+    "strip_programmed", "DEFAULT_MACRO",
     "MacroParams", "mixed_system_tops_per_watt", "tops_per_watt",
     "unit_op_cycles", "unit_op_energy_j", "FleetMappingPolicy", "LayerStat",
     "MappingPolicy", "MappingReport", "plan_mapping", "ExecMode",

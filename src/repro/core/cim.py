@@ -18,6 +18,15 @@ Optional process variability (core/variability.py) perturbs the charge
 averaging with per-column capacitor mismatch and adds comparator offset
 before digitisation.
 
+The datapath is split along the hardware's program-time / step-time
+boundary: ``cim_program_weight_state`` / ``cim_program_kernel_state`` do
+everything that depends only on the weights (quantise, sign/magnitude
+decompose, chunk or kernel-pack, digital residue) and the step-time passes
+(``cim_input_partials`` / ``cim_kernel_forward``) consume that frozen
+state, computing only the input-side work per call. ``cim_mf_partials`` /
+``cim_mf_matmul`` compose both phases on the fly; ``core/programmed.py``
+builds persistent programmed state for weight-stationary serving.
+
 This path is forward-only hardware emulation; ``cim_mf_matmul_ste`` wraps it
 with a straight-through estimator whose backward is the float MF surrogate
 gradient, enabling hardware-in-the-loop QAT.
@@ -84,9 +93,8 @@ def adc_quantize(mav: jax.Array, adc_bits: int,
     return adc_codes(mav, adc_bits, comparator_offset) / (2 ** adc_bits - 1)
 
 
-def _bitplane_operands(x2: jax.Array, w: jax.Array, cfg: CimConfig,
-                       sw: jax.Array, sx: jax.Array):
-    """Quantise both operands and decompose into sign gates + bitplanes.
+def _weight_operands(w: jax.Array, cfg: CimConfig, sw: jax.Array):
+    """Quantise the weight operand and decompose into sign gates + planes.
 
     Sign bits are stored SEPARATELY from the magnitude planes in the
     µArray (sign row + W_P-1 magnitude rows), so they come from the
@@ -94,19 +102,23 @@ def _bitplane_operands(x2: jax.Array, w: jax.Array, cfg: CimConfig,
     keeps its true sign bit (quantising first would flip small negative
     weights to +, a large systematic error at low W_P).
 
-    Returns (step_x, step_w, abs_x, abs_w, w_planes, x_planes) with
-    step_*: {0,1} sign gates, abs_*: integer magnitudes, *_planes:
-    (P, ...) bitplane stacks (LSB first).
+    Returns (step_w, abs_w, w_planes): {0,1} sign gates (K, N), integer
+    magnitudes (K, N), and the (Pw, K, N) bitplane stack (LSB first).
     """
     wq = quant.quantize(w, sw, cfg.w_bits)          # (K, N) int
-    xq = quant.quantize(x2, sx, cfg.x_bits)         # (B, K) int
     step_w = (w >= 0).astype(jnp.float32)           # (K, N)
-    step_x = (x2 >= 0).astype(jnp.float32)          # (B, K)
     abs_w = jnp.abs(wq)
-    abs_x = jnp.abs(xq)
     w_planes = quant.bitplanes(abs_w, cfg.w_bits)   # (Pw, K, N)
+    return step_w, abs_w, w_planes
+
+
+def _input_operands(x2: jax.Array, cfg: CimConfig, sx: jax.Array):
+    """Input-side mirror of :func:`_weight_operands` (same conventions)."""
+    xq = quant.quantize(x2, sx, cfg.x_bits)         # (B, K) int
+    step_x = (x2 >= 0).astype(jnp.float32)          # (B, K)
+    abs_x = jnp.abs(xq)
     x_planes = quant.bitplanes(abs_x, cfg.x_bits)   # (Px, B, K)
-    return step_x, step_w, abs_x, abs_w, w_planes, x_planes
+    return step_x, abs_x, x_planes
 
 
 def _chunk(v: jax.Array, m: int, axis_len: int) -> jax.Array:
@@ -136,6 +148,120 @@ class CimPartials(NamedTuple):
                            self.rxc + other.rxc, self.r_w + other.r_w)
 
 
+class CimWeightState(NamedTuple):
+    """Program-time weight-side state of one macro-mapped projection.
+
+    This is exactly what the hardware holds after the µArray is written:
+    chunked sign gates and magnitude bitplanes plus the digital |w| residue.
+    Built once by :func:`cim_program_weight_state`; every subsequent input
+    streams through :func:`cim_input_partials` without touching ``w``.
+
+    The arrays are stored contraction-ready for the step-time batched dot
+    (chunk batch leading, the m columns as the contraction axis) so the
+    hot loop never transposes the big weight-side operand — and the {0,1}
+    cells are held as int8 (exactly the µArray's storage density class),
+    quartering the bytes the bandwidth-bound decode step streams per
+    token; the widening cast to f32 is exact on {0,1} so bit-exactness is
+    untouched.
+    """
+
+    wt: jax.Array    # (C, m, N, Pw) int8 chunked |w| magnitude bitplanes
+    gwt: jax.Array   # (C, m, N) int8 chunked step(w) sign gates
+    r_w: jax.Array   # (1, N) exact digital sum_k |w_q|_kn
+
+
+def cim_program_weight_state(w: jax.Array, cfg: CimConfig,
+                             sw: jax.Array) -> CimWeightState:
+    """Program-time pass: quantise/decompose/chunk the weights once."""
+    K, N = w.shape
+    step_w, abs_w, w_planes = _weight_operands(w, cfg, sw)
+    m = cfg.m_columns
+    wp = _chunk(jnp.moveaxis(w_planes, -1, 0), m, K)             # (N, Pw, C, m)
+    wt = jnp.transpose(wp, (2, 3, 0, 1)).astype(jnp.int8)        # (C, m, N, Pw)
+    gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
+    gwt = jnp.transpose(gw, (1, 2, 0)).astype(jnp.int8)          # (C, m, N)
+    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
+    return CimWeightState(wt, gwt, r_w)
+
+
+def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
+                       sx: jax.Array,
+                       cap_weights: Optional[jax.Array] = None,
+                       comparator_offset: Optional[jax.Array] = None
+                       ) -> CimPartials:
+    """Step-time pass: stream x2:(B, Kt) through a programmed µArray.
+
+    Only input-side work happens here (x quantisation against the static
+    activation scale ``sx``, gates, MAVs, ADC) — the weight-side state was
+    frozen at program time, mirroring the weight-stationary hardware.
+
+    Bit-exactness across layouts: every pre-ADC MAV numerator is an
+    integer-valued count (products of {0,1} gates and bits), exact in
+    float32 for any summation order — so the nominal fast path below may
+    contract in the program-time layout and still produce codes identical
+    to the cap-weighted reference einsums.
+    """
+    K = x2.shape[-1]
+    step_x, _, x_planes = _input_operands(x2, cfg, sx)
+
+    m = cfg.m_columns
+
+    def adc(mav: jax.Array) -> jax.Array:
+        return adc_codes(mav, cfg.adc_bits, comparator_offset)
+
+    pw = 2.0 ** jnp.arange(cfg.w_planes)
+    px = 2.0 ** jnp.arange(cfg.x_planes)
+    gx = _chunk(step_x, m, K)                                    # (B, C, m)
+    xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
+
+    if cap_weights is None and comparator_offset is None:
+        # Nominal macro: the charge-average denominator is exactly m and
+        # the counts are integers, so the contraction runs as a layout-
+        # friendly batched dot straight against the program-time operand
+        # layout — no per-step transpose of the weight state. (An offset
+        # routes to the reference branch below: its broadcast contract is
+        # defined against the (B, N, Pw, C) ADC tensor layout.)
+        inv = jnp.float32(m)
+        # S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator)
+        counts1 = jnp.einsum("bcm,cmnp->cbnp", gx,
+                             ws.wt.astype(jnp.float32))
+        codes1 = adc(counts1 / inv)                              # (C, B, N, Pw)
+        s1c = jnp.einsum("cbnp,p->bn", codes1, pw)
+        # S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator)
+        counts2 = jnp.einsum("qbcm,cmn->cqbn", xp,
+                             ws.gwt.astype(jnp.float32))
+        codes2 = adc(counts2 / inv)                              # (C, Px, B, N)
+        s2c = jnp.einsum("cqbn,q->bn", codes2, px)
+        # R_x via the dummy all-ones row (shared across weight vectors).
+        counts_rx = jnp.sum(xp, axis=-1)                         # (Px, B, C)
+        codes_rx = adc(counts_rx / inv)
+        rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]      # (B, 1)
+        return CimPartials(s1c, s2c, rxc, ws.r_w)
+
+    # Variability injection: capacitor mismatch and/or comparator offset
+    # change the charge averaging / digitisation, so run the general
+    # cap-weighted einsums against the (N, Pw, C, m) reference layout.
+    nchunks = -(-K // m)
+    if cap_weights is None:
+        cap = jnp.ones((nchunks, m), jnp.float32)
+    else:
+        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
+    cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
+    wp = jnp.transpose(ws.wt.astype(jnp.float32),
+                       (2, 3, 0, 1))                             # (N, Pw, C, m)
+    gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
+    num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
+    codes1 = adc(num1 / cap_sum[None, None, None, :])            # (B, N, Pw, C)
+    s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
+    num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
+    codes2 = adc(num2 / cap_sum[None, None, None, :])            # (Px, B, N, C)
+    s2c = jnp.einsum("pbnc,p->bn", codes2, px)
+    num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
+    codes_rx = adc(num_rx / cap_sum[None, None, :])              # (Px, B, C)
+    rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]          # (B, 1)
+    return CimPartials(s1c, s2c, rxc, ws.r_w)
+
+
 def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,
                     sw: jax.Array, sx: jax.Array,
                     cap_weights: Optional[jax.Array] = None,
@@ -143,55 +269,16 @@ def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,
                     ) -> CimPartials:
     """µArray pass over one tile: x2:(B, Kt) against w:(Kt, N_t).
 
-    ``sw``/``sx`` are the *global* calibration scales of the full operands —
-    a tile never re-calibrates, so slicing commutes with quantisation and a
-    tiled execution reproduces the monolithic bitstream exactly. Kt must be
-    a multiple of ``cfg.m_columns`` except for the final K-tile (the zero
-    padding then matches the monolithic chunking).
+    On-the-fly composition of the two phases (program + stream in one
+    call). ``sw``/``sx`` are the *global* calibration scales of the full
+    operands — a tile never re-calibrates, so slicing commutes with
+    quantisation and a tiled execution reproduces the monolithic bitstream
+    exactly. Kt must be a multiple of ``cfg.m_columns`` except for the
+    final K-tile (the zero padding then matches the monolithic chunking).
     """
-    K, N = w.shape
-    step_x, step_w, abs_x, abs_w, w_planes, x_planes = _bitplane_operands(
-        x2, w, cfg, sw, sx)
-
-    m = cfg.m_columns
-    nchunks = -(-K // m)
-
-    if cap_weights is None:
-        cap = jnp.ones((nchunks, m), jnp.float32)
-    else:
-        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
-    cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
-
-    def adc(mav: jax.Array) -> jax.Array:
-        return adc_codes(mav, cfg.adc_bits, comparator_offset)
-
-    # --- term S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator) ----------
-    # planes of |w| against the step(x) column gates, charge-averaged per
-    # (chunk, plane) with the (possibly mismatched) column capacitors.
-    wp = _chunk(jnp.moveaxis(w_planes, -1, 0), m, K)             # (N, Pw, C, m)
-    gx = _chunk(step_x, m, K)                                    # (B, C, m)
-    num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
-    codes1 = adc(num1 / cap_sum[None, None, None, :])            # (B, N, Pw, C)
-    pw = 2.0 ** jnp.arange(cfg.w_planes)
-    s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
-
-    # --- term S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator) ----------
-    xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
-    gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
-    num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
-    codes2 = adc(num2 / cap_sum[None, None, None, :])            # (Px, B, N, C)
-    px = 2.0 ** jnp.arange(cfg.x_planes)
-    s2c = jnp.einsum("pbnc,p->bn", codes2, px)
-
-    # --- residues ---------------------------------------------------------
-    # R_x = sum_k |x|_k via the dummy all-ones row (also ADC'd in hardware;
-    # shared across every weight vector, so computed once per input).
-    num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
-    codes_rx = adc(num_rx / cap_sum[None, None, :])              # (Px, B, C)
-    rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]          # (B, 1)
-    # R_w = sum_k |w|_kn, precomputed digitally (exact).
-    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
-    return CimPartials(s1c, s2c, rxc, r_w)
+    ws = cim_program_weight_state(w, cfg, sw)
+    return cim_input_partials(x2, ws, cfg, sx, cap_weights,
+                              comparator_offset)
 
 
 def cim_mf_recombine(parts: CimPartials, sw: jax.Array, sx: jax.Array,
@@ -209,6 +296,54 @@ def cim_mf_recombine(parts: CimPartials, sw: jax.Array, sx: jax.Array,
     sum_sign_x_abs_w = 2.0 * s1 - parts.r_w    # sum sign(x)|w|
     sum_sign_w_abs_x = 2.0 * s2 - r_x          # sum sign(w)|x|
     return sw * sum_sign_x_abs_w + sx * sum_sign_w_abs_x
+
+
+class CimKernelState(NamedTuple):
+    """Program-time weight-side state in the Pallas kernel's chunk layout.
+
+    The packed arrays come straight from :func:`repro.kernels.ops
+    .pack_chunks` at program time, so the fused kernel never re-packs the
+    stationary weight operand per step.
+    """
+
+    gw_packed: jax.Array   # (N, Kp) chunk-packed step(w) gates (step_w.T)
+    wp_packed: jax.Array   # (Pw, Kp, N) chunk-packed |w| magnitude planes
+    r_w: jax.Array         # (1, N) exact digital sum_k |w_q|_kn
+
+
+def cim_program_kernel_state(w: jax.Array, cfg: CimConfig,
+                             sw: jax.Array) -> CimKernelState:
+    """Program-time pass for the fused Pallas path (pre-packed layout)."""
+    from repro.kernels import ops as kops
+    step_w, abs_w, w_planes = _weight_operands(w, cfg, sw)
+    gw_packed = kops.pack_chunks(step_w.T, cfg.m_columns)
+    wp_packed = kops.pack_planes(w_planes, cfg.m_columns)
+    r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
+    return CimKernelState(gw_packed, wp_packed, r_w)
+
+
+def cim_kernel_forward(x2: jax.Array, ks: CimKernelState, cfg: CimConfig,
+                       sw: jax.Array, sx: jax.Array) -> jax.Array:
+    """Step-time fused Pallas pass against programmed kernel state.
+
+    Per-chunk MAV + ADC + plane recombination without materialising the
+    MAV tensor; only the streaming input side is packed per call (the
+    x-plane packing is shared between the S2 and R_x passes).
+    """
+    from repro.kernels import ops as kops
+    K = x2.shape[-1]
+    m = cfg.m_columns
+    step_x, _, x_planes = _input_operands(x2, cfg, sx)
+    gx = kops.pack_chunks(step_x, m)                             # (B, Kp)
+    xp = kops.pack_planes(jnp.moveaxis(x_planes, 1, -1), m)      # (Px, Kp, B)
+    ones = kops.pack_chunks(jnp.ones((1, K), jnp.float32), m)
+    s1 = kops.cim_mav_packed(gx, ks.wp_packed, m_columns=m,
+                             adc_bits=cfg.adc_bits)              # (B, N)
+    s2 = kops.cim_mav_packed(ks.gw_packed, xp, m_columns=m,
+                             adc_bits=cfg.adc_bits).T            # (B, N)
+    r_x = kops.cim_mav_packed(ones, xp, m_columns=m,
+                              adc_bits=cfg.adc_bits).T           # (B, 1)
+    return sw * (2.0 * s1 - ks.r_w) + sx * (2.0 * s2 - r_x)
 
 
 def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
@@ -231,21 +366,9 @@ def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
     sx = quant.calibrate_scale(x2, cfg.x_bits)
 
     if cfg.use_kernel and cap_weights is None and comparator_offset is None:
-        # Fused Pallas path (no variability injection): per-chunk MAV + ADC
-        # + plane recombination without materialising the MAV tensor.
-        from repro.kernels import ops as kops
-        step_x, step_w, _, abs_w, w_planes, x_planes = _bitplane_operands(
-            x2, w, cfg, sw, sx)
-        m = cfg.m_columns
-        s1 = kops.cim_mav(step_x, w_planes, m_columns=m,
-                          adc_bits=cfg.adc_bits)                     # (B, N)
-        s2 = kops.cim_mav(step_w.T, jnp.moveaxis(x_planes, 1, -1),
-                          m_columns=m, adc_bits=cfg.adc_bits).T      # (B, N)
-        r_x = kops.cim_mav(jnp.ones((1, K), jnp.float32),
-                           jnp.moveaxis(x_planes, 1, -1),
-                           m_columns=m, adc_bits=cfg.adc_bits).T     # (B, 1)
-        r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
-        y = (sw * (2.0 * s1 - r_w) + sx * (2.0 * s2 - r_x))
+        # Fused Pallas path (no variability injection).
+        ks = cim_program_kernel_state(w, cfg, sw)
+        y = cim_kernel_forward(x2, ks, cfg, sw, sx)
         return y.reshape(batch_shape + (N,)).astype(x.dtype)
 
     parts = cim_mf_partials(x2, w, cfg, sw, sx, cap_weights,

@@ -208,6 +208,7 @@ def dense_init(key: jax.Array, in_dim: int, out_dim: int,
 
 def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
                      *, cim_cfg: Optional[Any] = None,
+                     programmed: Optional[Any] = None,
                      delta_sigma: float = 0.5, delta_coeff: float = 1.0,
                      precision=None) -> jax.Array:
     """Uniform weight-activation projection used throughout the model zoo.
@@ -217,6 +218,12 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
     every architecture funnels through here, so the mixed-mapping policy
     (core/mapping.py) can flip a layer between digital and CIM execution by
     changing ``mode`` alone.
+
+    In CIM_SIM mode a weight-stationary :class:`~repro.core.programmed
+    .ProgrammedMacro` is consumed when available — either passed explicitly
+    via ``programmed`` or embedded as ``params["prog"]`` by
+    ``core.programmed.program_weights`` — serving the projection from the
+    frozen macro state (inference-only: no STE backward on that path).
     """
     mode = ExecMode(mode)
     w = params["w"]
@@ -230,7 +237,12 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
     elif mode == ExecMode.CIM_SIM:
         from repro.core import cim
         assert cim_cfg is not None, "CIM_SIM mode requires a CimConfig"
-        y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
+        prog = programmed if programmed is not None else params.get("prog")
+        if prog is not None:
+            from repro.core.programmed import cim_mf_matmul_programmed
+            y = cim_mf_matmul_programmed(x, prog, cim_cfg)
+        else:
+            y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
     elif mode == ExecMode.BNN:
         y = bnn_matmul(x, w)
     else:  # pragma: no cover

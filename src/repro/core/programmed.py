@@ -1,0 +1,286 @@
+"""Weight-stationary programmed-macro runtime (program-time/step-time split).
+
+In the paper's macro the weights are programmed ONCE into the µArray (sign
+row + magnitude bitplane rows) and only inputs stream per cycle — the
+SA-ADC digitises charge-averaged MAVs against *stationary* weight
+bitplanes. This module mirrors that discipline for the behavioural
+simulator:
+
+  * :class:`ProgrammedMacro` — the frozen per-projection weight state: the
+    calibrated weight scale ``sw``, a *static* activation scale ``sx``
+    fixed at program time, the exact digital ``r_w`` residue, and either
+    the chunked einsum-path weight state (:class:`~repro.core.cim
+    .CimWeightState`) or the Pallas kernel's pre-packed chunk layout
+    (:class:`~repro.core.cim.CimKernelState`) built from
+    ``kernels/ops.pack_chunks``.
+  * :func:`program_macro` — program one (K, N) projection.
+  * :func:`program_weights` — walk a model parameter tree and attach a
+    ``"prog"`` entry to every MF projection dict (those carrying the MF
+    neuron's ``alpha``), stacked-layer and vmapped layouts included, so the
+    programmed state flows through ``jax.lax.scan`` exactly like the
+    parameters it shadows. ``core.mf.apply_projection`` picks it up in
+    CIM_SIM mode.
+  * :class:`ProgrammedLayer` — per-tile programmed slices of one
+    compiler-tiled projection (see ``repro.compiler.execute``).
+
+Bit-exactness contract: for the same ``CimConfig`` and the same ``sx``,
+the programmed path is bit-identical to the on-the-fly path (monolithic
+and tiled) — both phases run the very same ops on the very same arrays,
+just split across time. The *static* ``sx`` is the one modelling choice
+(hardware cannot re-calibrate the input DAC per batch); see
+EXPERIMENTS.md "Static activation-scale calibration".
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
+                            CimWeightState, _input_operands, _weight_operands,
+                            cim_input_partials, cim_kernel_forward,
+                            cim_mf_recombine, cim_program_kernel_state,
+                            cim_program_weight_state)
+
+# Full-scale assumption for the default static activation calibration:
+# post-norm activations are ~unit-RMS, so |x| <= ~4 covers >4 sigma. Used
+# only when no measured amax is supplied (see EXPERIMENTS.md).
+DEFAULT_ACT_AMAX = 4.0
+
+
+def adc_exactly_lossless(cfg: CimConfig) -> bool:
+    """True at the paper's exactly-lossless pairings (2^A_P - 1 == M).
+
+    There the SA-ADC code of every chunk MAV *is* the integer discharge
+    count (code = round(count/M * (2^A_P - 1)) = count), so plane/chunk
+    decomposition, digitisation, and plane recombination collapse
+    algebraically: sum_p 2^p sum_c code[c,p] == sum_k gate_k * |v_k|.
+    Both hardware design points (8x62 -> 5-bit, 8x30 -> 4-bit) qualify.
+    """
+    return 2 ** cfg.adc_bits - 1 == cfg.m_columns
+
+
+class CimLosslessState(NamedTuple):
+    """Collapsed weight state for exactly-lossless ADC design points.
+
+    Holds only the dense integer magnitudes and sign gates: the step
+    becomes two (B, K) @ (K, N) matmuls — bit-identical to the plane-level
+    pipeline (every partial sum is integer-valued, exact in float32) while
+    streaming W_P-1 times fewer weight bytes per decode step.
+    """
+
+    aw: jax.Array   # (K, N) int8 |w_q| integer magnitudes
+    gw: jax.Array   # (K, N) int8 step(w) sign gates
+
+
+class ProgrammedMacro(NamedTuple):
+    """Frozen weight state of one macro-mapped (K, N) projection."""
+
+    sw: jax.Array                          # calibrated weight scale
+    sx: jax.Array                          # STATIC activation scale
+    r_w: jax.Array                         # (1, N) digital |w| residue
+    state: Optional[CimWeightState]        # einsum-path chunked state
+    kernel: Optional[CimKernelState]       # Pallas-path pre-packed state
+    lossless: Optional[CimLosslessState]   # collapsed exact-ADC state
+
+    @property
+    def n_out(self) -> int:
+        return self.r_w.shape[-1]
+
+
+def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
+                  prefer_lossless: bool = True) -> ProgrammedMacro:
+    """Program one (K, N) projection's weights into macro state.
+
+    ``sx`` is the static activation scale the macro will quantise inputs
+    against for its whole service life; ``sw`` defaults to the max-abs
+    calibration the on-the-fly path uses. The expensive weight-side work
+    (quantise, sign/magnitude split, bitplanes, chunk/kernel packing)
+    happens exactly once, here.
+
+    At exactly-lossless ADC design points the collapsed
+    :class:`CimLosslessState` is programmed instead of the plane-level
+    state (``prefer_lossless=False`` forces planes — needed for per-step
+    variability injection and the compiler's tiled partial accumulation).
+    """
+    if sw is None:
+        sw = quant.calibrate_scale(w, cfg.w_bits)
+    sw = jnp.asarray(sw, jnp.float32)
+    sx = jnp.asarray(sx, jnp.float32)
+    if cfg.use_kernel:
+        ks = cim_program_kernel_state(w, cfg, sw)
+        return ProgrammedMacro(sw, sx, ks.r_w, None, ks, None)
+    if prefer_lossless and adc_exactly_lossless(cfg):
+        step_w, abs_w, _ = _weight_operands(w, cfg, sw)
+        r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
+        ls = CimLosslessState(abs_w.astype(jnp.int8),
+                              step_w.astype(jnp.int8))
+        return ProgrammedMacro(sw, sx, r_w, None, None, ls)
+    ws = cim_program_weight_state(w, cfg, sw)
+    return ProgrammedMacro(sw, sx, ws.r_w, ws, None, None)
+
+
+def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
+                       sx: jax.Array, r_w: jax.Array) -> CimPartials:
+    """Collapsed step at an exactly-lossless design point.
+
+    With code == count, the plane-weighted code sums reduce to the dense
+    correlations sum_k step(x)*|w| and sum_k |x|*step(w); all entries are
+    integers below 2^24, so the float32 matmuls are exact and the result
+    is bit-identical to the plane-level path fed through the same
+    ``cim_mf_recombine``.
+    """
+    step_x, abs_x, _ = _input_operands(x2, cfg, sx)
+    s1c = step_x @ ls.aw.astype(jnp.float32)                   # (B, N)
+    s2c = abs_x.astype(jnp.float32) @ ls.gw.astype(jnp.float32)
+    rxc = jnp.sum(abs_x, axis=-1, keepdims=True).astype(jnp.float32)
+    return CimPartials(s1c, s2c, rxc, r_w)
+
+
+def cim_mf_matmul_programmed(x: jax.Array, prog: ProgrammedMacro,
+                             cfg: CimConfig,
+                             cap_weights: Optional[jax.Array] = None,
+                             comparator_offset: Optional[jax.Array] = None
+                             ) -> jax.Array:
+    """Step-time MF correlation x:(...,K) against a programmed macro.
+
+    Bit-identical to ``cim_mf_matmul(x, w, cfg)`` whenever ``prog`` was
+    programmed with the same ``cfg`` and the dynamic activation scale of
+    ``x`` (the parity tested by tests/test_programmed.py). Per-step
+    variability injection (cap mismatch / comparator offset) is supported
+    on the plane-level einsum path only.
+    """
+    K = x.shape[-1]
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    inject = cap_weights is not None or comparator_offset is not None
+    if prog.state is not None:
+        parts = cim_input_partials(x2, prog.state, cfg, prog.sx,
+                                   cap_weights, comparator_offset)
+        y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
+    elif inject:
+        raise ValueError(
+            "variability injection needs a plane-level ProgrammedMacro "
+            "(program with use_kernel=False, prefer_lossless=False)")
+    elif prog.lossless is not None:
+        parts = _lossless_partials(x2, prog.lossless, cfg, prog.sx,
+                                   prog.r_w)
+        y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
+    else:
+        y = cim_kernel_forward(x2, prog.kernel, cfg, prog.sw, prog.sx)
+    return y.reshape(batch_shape + (prog.n_out,)).astype(x.dtype)
+
+
+class ProgrammedLayer(NamedTuple):
+    """Per-tile programmed slices of one compiler-tiled (K, N) projection.
+
+    ``tiles[j][i]`` is the :class:`ProgrammedMacro` of n-slice j / k-slice
+    i of the owning :class:`~repro.compiler.tiling.TilingPlan`; every tile
+    shares the layer-global ``sw``/``sx`` so tiled step-time execution
+    stays bit-exact against the monolithic programmed path.
+    """
+
+    sw: jax.Array
+    sx: jax.Array
+    tiles: tuple[tuple[ProgrammedMacro, ...], ...]
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(len(row) for row in self.tiles)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model programming (the serve-time entry point).
+# ---------------------------------------------------------------------------
+
+def default_static_sx(cfg: CimConfig,
+                      act_amax: float = DEFAULT_ACT_AMAX) -> float:
+    """Static activation scale from a full-scale amax assumption."""
+    return float(act_amax) / quant.qmax(cfg.x_bits)
+
+
+def _is_projection(node: Any) -> bool:
+    """MF projection dicts are exactly those carrying the neuron's alpha."""
+    return (isinstance(node, dict) and "w" in node and "alpha" in node
+            and hasattr(node["w"], "ndim") and node["w"].ndim >= 2)
+
+
+def _program_nd(w: jax.Array, cfg: CimConfig, sx) -> ProgrammedMacro:
+    """Program a (..., K, N) weight, vmapping over stacked leading axes
+    (scan periods, experts) so programmed leaves slice exactly like the
+    parameter leaves they shadow."""
+    if w.ndim == 2:
+        return program_macro(w, cfg, sx=sx)
+    return jax.vmap(lambda wi: _program_nd(wi, cfg, sx))(w)
+
+
+def program_weights(params: Any, cfg: CimConfig, *,
+                    act_amax: float = DEFAULT_ACT_AMAX) -> Any:
+    """Program every MF projection in a model parameter tree.
+
+    Returns a copy of ``params`` where each projection dict gains a
+    ``"prog"`` entry (a :class:`ProgrammedMacro`, possibly with stacked
+    leading axes). ``apply_projection`` then serves CIM_SIM projections
+    from the programmed state with no per-step weight-side work. Non-dict
+    projection layouts (e.g. the MoE expert arrays) keep the on-the-fly
+    path — see ROADMAP open items.
+    """
+    sx = jnp.float32(default_static_sx(cfg, act_amax))
+    if cfg.use_kernel and cfg.m_columns > 0:
+        # Fail early with the pack_chunks precondition rather than deep in
+        # a traced program.
+        from repro.kernels.cim_mav import CHUNK_PAD
+        if cfg.m_columns > CHUNK_PAD:
+            raise ValueError(
+                f"m_columns={cfg.m_columns} > CHUNK_PAD={CHUNK_PAD}: the "
+                f"kernel layout cannot hold this µArray geometry")
+
+    def walk(node):
+        if _is_projection(node):
+            out = dict(node)
+            out["prog"] = _program_nd(node["w"], cfg, sx)
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)
+
+
+def strip_programmed(params: Any) -> Any:
+    """Inverse of :func:`program_weights` (drop every ``"prog"`` entry)."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items() if k != "prog"}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(params)
+
+
+def programmed_bytes(params: Any) -> int:
+    """Total bytes held by programmed state in a parameter tree."""
+    total = 0
+    def walk(node):
+        nonlocal total
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "prog":
+                    total += sum(leaf.size * leaf.dtype.itemsize
+                                 for leaf in jax.tree.leaves(v))
+                else:
+                    walk(v)
+        elif isinstance(node, (tuple, list)):
+            for v in node:
+                walk(v)
+    walk(params)
+    return total

@@ -61,8 +61,19 @@ def pack_chunks(v: jax.Array, m_columns: int) -> jax.Array:
     Splits K into µArray chunks of ``m_columns`` real lanes, zero-pads each
     chunk to CHUNK_PAD, and pads the chunk count to a multiple of
     CHUNKS_PER_TILE so the kernel's 128-lane tiles line up.
+
+    The packed layout is position-stable: it depends only on (K,
+    m_columns), so weight-side operands can be packed once at program time
+    (see ``core/programmed.py``) and reused for every streamed input.
     """
-    assert m_columns <= CHUNK_PAD, m_columns
+    if m_columns > CHUNK_PAD:
+        raise ValueError(
+            f"m_columns={m_columns} exceeds the kernel chunk width "
+            f"CHUNK_PAD={CHUNK_PAD}: a µArray half must fit one padded "
+            f"lane group (use m_columns <= {CHUNK_PAD} or widen CHUNK_PAD "
+            f"in kernels/cim_mav.py)")
+    if m_columns < 1:
+        raise ValueError(f"m_columns must be >= 1, got {m_columns}")
     k = v.shape[-1]
     c = -(-k // m_columns)
     kp = c * m_columns
@@ -75,23 +86,41 @@ def pack_chunks(v: jax.Array, m_columns: int) -> jax.Array:
     return v.reshape(v.shape[:-2] + (v.shape[-2] * CHUNK_PAD,))
 
 
+def pack_planes(planes: jax.Array, m_columns: int) -> jax.Array:
+    """Chunk-pack a (P, K, N) bitplane stack along K -> (P, Kp, N)."""
+    p = pack_chunks(jnp.moveaxis(planes, -1, 1), m_columns)    # (P, N, Kp)
+    return jnp.moveaxis(p, 1, -1)                               # (P, Kp, N)
+
+
+def cim_mav_packed(gates: jax.Array, planes: jax.Array, *, m_columns: int,
+                   adc_bits: int, bb: int = 8, bn: int = 128) -> jax.Array:
+    """Digitised step-side partial sum over PRE-PACKED operands.
+
+    gates: (B, Kp) from :func:`pack_chunks`; planes: (P, Kp, N) from
+    :func:`pack_planes`. Only B/N padding happens per call — the chunk
+    layout is assumed final, which is what lets programmed (weight-
+    stationary) state skip the per-step re-pack entirely.
+    """
+    b = gates.shape[0]
+    n = planes.shape[-1]
+    bb = _pick_block(b, bb, 8)
+    bn = _pick_block(n, bn, 128)
+    bp, npad = _round_up(b, bb), _round_up(n, bn)
+    g = jnp.pad(gates, ((0, bp - b), (0, 0)))
+    p = jnp.pad(planes, ((0, 0), (0, 0), (0, npad - n)))
+    y = cim_mav_pallas(g, p, m_columns=m_columns, adc_bits=adc_bits,
+                       bb=bb, bn=bn, interpret=_on_cpu())
+    return y[:b, :n]
+
+
 def cim_mav(gates: jax.Array, planes: jax.Array, *, m_columns: int,
             adc_bits: int, bb: int = 8, bn: int = 128) -> jax.Array:
     """Digitised step-side partial sum (see kernels/cim_mav.py).
 
     gates: (B, K) {0,1}; planes: (Pw, K, N) {0,1} — un-packed layout;
-    this wrapper packs chunks and pads B/N.
+    this wrapper packs chunks then delegates to :func:`cim_mav_packed`.
     """
-    b = gates.shape[0]
-    n_planes, _, n = planes.shape
     g = pack_chunks(gates, m_columns)
-    p = pack_chunks(jnp.moveaxis(planes, -1, 1), m_columns)    # (Pw, N, Kp)
-    p = jnp.moveaxis(p, 1, -1)                                  # (Pw, Kp, N)
-    bb = _pick_block(b, bb, 8)
-    bn = _pick_block(n, bn, 128)
-    bp, npad = _round_up(b, bb), _round_up(n, bn)
-    g = jnp.pad(g, ((0, bp - b), (0, 0)))
-    p = jnp.pad(p, ((0, 0), (0, 0), (0, npad - n)))
-    y = cim_mav_pallas(g, p, m_columns=m_columns, adc_bits=adc_bits,
-                       bb=bb, bn=bn, interpret=_on_cpu())
-    return y[:b, :n]
+    p = pack_planes(planes, m_columns)
+    return cim_mav_packed(g, p, m_columns=m_columns, adc_bits=adc_bits,
+                          bb=bb, bn=bn)

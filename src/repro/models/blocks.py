@@ -35,8 +35,11 @@ def proj_init(key: jax.Array, in_dim: int, out_dim: int, *, bias: bool,
 
 
 def proj_apply(p: dict, x: jax.Array, mode: ExecMode | str = ExecMode.REGULAR,
-               **kw) -> jax.Array:
-    return apply_projection(p, x, mode, **kw)
+               *, programmed: Optional[Any] = None, **kw) -> jax.Array:
+    """Apply one projection; ``programmed`` (or an embedded ``p["prog"]``
+    from ``core.programmed.program_weights``) serves CIM_SIM projections
+    from weight-stationary programmed macro state."""
+    return apply_projection(p, x, mode, programmed=programmed, **kw)
 
 
 # ---------------------------------------------------------------------------

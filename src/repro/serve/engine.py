@@ -6,6 +6,13 @@ occupy slots, prompts are ingested token-by-token through the same jitted
 decode step (prefill-as-decode keeps one compiled program), and finished
 slots are recycled. `serve_step` — the function the decode dry-run cells
 lower — is a single fused (decode + sample) step over the whole batch.
+
+Weight-stationary CIM serving: when the model config maps projections to
+``cim_sim``, the engine programs the whole model ONCE at construction
+(`core.programmed.program_weights`) and every jitted decode step serves
+from the frozen macro state — the per-step weight recalibrate/requantise/
+bitplane/pack work of the on-the-fly path disappears from the hot loop,
+mirroring how the hardware writes the µArray once and streams inputs.
 """
 
 from __future__ import annotations
@@ -45,17 +52,30 @@ class Request:
     max_new_tokens: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Set by ServeEngine.run when the tick budget ran out before the
+    # request finished (or before it was ever scheduled): the request is
+    # returned with whatever it produced instead of being dropped.
+    timed_out: bool = False
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, program: bool = True):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        # Weight-stationary programming: freeze every CIM projection's
+        # macro state now so the jitted step does input-side work only.
+        # ``program=False`` keeps the legacy on-the-fly path (benchmarks).
+        self._exec_params = params
+        self.programmed = False
+        if program and cfg.mf.enabled and cfg.mf.mode == "cim_sim":
+            from repro.core.programmed import program_weights
+            self._exec_params = program_weights(params, cfg.mf.cim)
+            self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
         self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
         self.requests: list[Optional[Request]] = [None] * slots
@@ -83,8 +103,8 @@ class ServeEngine:
         """One engine tick: decode every occupied slot by one token."""
         self._rng, sub = jax.random.split(self._rng)
         tokens = jnp.asarray(self._feed)
-        nxt, _, self.cache = self.step_fn(self.params, self.cache, tokens,
-                                          sub)
+        nxt, _, self.cache = self.step_fn(self._exec_params, self.cache,
+                                          tokens, sub)
         nxt = np.asarray(nxt)
         for s, req in enumerate(self.requests):
             if req is None:
@@ -105,6 +125,13 @@ class ServeEngine:
 
     def run(self, reqs: list[Request], max_ticks: int = 10_000
             ) -> list[Request]:
+        """Serve ``reqs`` to completion (or until ``max_ticks``).
+
+        Every submitted request comes back: requests still in flight — or
+        never scheduled — when the tick budget runs out are marked
+        ``timed_out`` and returned with their partial output, and their
+        slots are released.
+        """
         pending = list(reqs)
         done: list[Request] = []
         ticks = 0
@@ -118,21 +145,30 @@ class ServeEngine:
                 if r is not None and r.done:
                     done.append(r)
             ticks += 1
+        for s, r in enumerate(self.requests):
+            if r is not None:
+                r.timed_out = True
+                done.append(r)
+                self.requests[s] = None
+        for r in pending:
+            r.timed_out = True
+            done.append(r)
         return done
 
 
-def _reset_slot(cache, slot: int):
-    """Zero one slot's positions (cheap host-side surgery between requests)."""
+@partial(jax.jit, donate_argnums=0)
+def _reset_slot(cache, slot):
+    """Zero one slot's positions, on device (no host round trip: a jitted
+    ``.at[..., slot].set(0)`` tree-map instead of numpy cache surgery).
+
+    The cache argument is donated — callers always rebind
+    (``cache = _reset_slot(cache, s)``), so the untouched KV leaves alias
+    in place instead of being copied per admission."""
     def fix(path, v):
         last = str(path[-1].key) if hasattr(path[-1], "key") else ""
         if last in ("len", "pos"):
-            arr = np.asarray(v)
-            if arr.ndim == 1:
-                arr = arr.copy()
-                arr[slot] = 0
-            else:
-                arr = arr.copy()
-                arr[:, slot] = 0
-            return jnp.asarray(arr)
+            if v.ndim == 1:
+                return v.at[slot].set(0)
+            return v.at[:, slot].set(0)
         return v
     return jax.tree_util.tree_map_with_path(fix, cache)

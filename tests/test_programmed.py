@@ -1,0 +1,279 @@
+"""Weight-stationary programmed runtime: bit-exact parity vs on-the-fly.
+
+The contract under test (ISSUE 2): for the same ``CimConfig`` and the same
+activation scale, the programmed path — plane-level, lossless-collapsed,
+Pallas-kernel, and compiler-tiled — is bit-identical to the existing
+on-the-fly path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.cim import CimConfig, cim_mf_matmul
+from repro.core.programmed import (DEFAULT_ACT_AMAX, adc_exactly_lossless,
+                                   cim_mf_matmul_programmed, default_static_sx,
+                                   program_macro, program_weights,
+                                   strip_programmed)
+
+# Both paper design points (8x62 -> 5-bit, 8x30 -> 4-bit).
+DESIGNS = [(31, 5), (15, 4)]
+BITS = [2, 4, 8]
+
+
+def _xw(b=3, k=70, n=9):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    return x, w
+
+
+def _parity(x, w, cfg, **program_kw):
+    sx = quant.calibrate_scale(x.reshape(-1, x.shape[-1]), cfg.x_bits)
+    prog = program_macro(w, cfg, sx=sx, **program_kw)
+    y0 = np.asarray(cim_mf_matmul(x, w, cfg))
+    y1 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg))
+    np.testing.assert_array_equal(y0, y1)
+
+
+class TestMonolithicParity:
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("wb", BITS)
+    @pytest.mark.parametrize("xb", BITS)
+    def test_einsum_path_bit_exact(self, wb, xb, m, a):
+        x, w = _xw()
+        # prefer_lossless=False exercises the plane-level programmed path
+        # even at the exactly-lossless design points.
+        _parity(x, w, CimConfig(wb, xb, a, m), prefer_lossless=False)
+
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("wb", BITS)
+    @pytest.mark.parametrize("xb", BITS)
+    def test_lossless_collapse_bit_exact(self, wb, xb, m, a):
+        assert adc_exactly_lossless(CimConfig(wb, xb, a, m))
+        x, w = _xw()
+        _parity(x, w, CimConfig(wb, xb, a, m), prefer_lossless=True)
+
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("wb,xb", [(2, 2), (8, 8), (2, 8), (8, 4)])
+    def test_kernel_path_bit_exact(self, wb, xb, m, a):
+        x, w = _xw(k=2 * m + 9, n=7)
+        _parity(x, w, CimConfig(wb, xb, a, m, use_kernel=True))
+
+    def test_non_lossless_point_falls_back_to_planes(self):
+        cfg = CimConfig(8, 8, 4, 31)   # 2^4-1 = 15 != 31 columns
+        assert not adc_exactly_lossless(cfg)
+        x, w = _xw()
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_macro(w, cfg, sx=sx)
+        assert prog.lossless is None and prog.state is not None
+        _parity(x, w, cfg)
+
+    def test_batched_leading_dims(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 45))
+        w = jax.random.normal(jax.random.PRNGKey(3), (45, 5))
+        sx = quant.calibrate_scale(x.reshape(-1, 45), 8)
+        prog = program_macro(w, cfg, sx=sx)
+        y0 = np.asarray(cim_mf_matmul(x, w, cfg))
+        y1 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg))
+        assert y1.shape == (2, 3, 5)
+        np.testing.assert_array_equal(y0, y1)
+
+    def test_variability_injection_bit_exact_on_plane_path(self):
+        from repro.core import (VariabilityConfig, sample_cap_weights,
+                                sample_comparator_offset)
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=62)
+        var = VariabilityConfig(cap_sigma=0.12)
+        caps = sample_cap_weights(jax.random.PRNGKey(7), 62, var)
+        off = sample_comparator_offset(jax.random.PRNGKey(8), var)
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_macro(w, cfg, sx=sx, prefer_lossless=False)
+        y0 = np.asarray(cim_mf_matmul(x, w, cfg, cap_weights=caps,
+                                      comparator_offset=off))
+        y1 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg,
+                                                 cap_weights=caps,
+                                                 comparator_offset=off))
+        np.testing.assert_array_equal(y0, y1)
+
+    def test_variability_rejected_on_collapsed_state(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw()
+        prog = program_macro(w, cfg, sx=0.1)
+        with pytest.raises(ValueError, match="variability"):
+            cim_mf_matmul_programmed(x, prog, cfg,
+                                     cap_weights=jnp.ones((70,)))
+
+
+class TestTiledParity:
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("wb,xb", [(2, 2), (4, 8), (8, 8)])
+    def test_compiler_tiled_bit_exact(self, wb, xb, m, a):
+        from repro.compiler.execute import (compiled_matmul,
+                                            compiled_matmul_programmed,
+                                            program_layer_tiles)
+        from repro.compiler.tiling import plan_tiling
+        cfg = CimConfig(wb, xb, a, m)
+        x, w = _xw(k=3 * m + 7, n=21)
+        plan = plan_tiling(w.shape[0], w.shape[1], cfg, tile_k_chunks=2,
+                           tile_n=8)
+        sx = quant.calibrate_scale(x, cfg.x_bits)
+        prog = program_layer_tiles(w, plan, cfg, sx=sx)
+        mono = np.asarray(cim_mf_matmul(x, w, cfg))
+        tiled = np.asarray(compiled_matmul(x, w, plan, cfg))
+        ptiled = np.asarray(compiled_matmul_programmed(x, prog, plan, cfg))
+        np.testing.assert_array_equal(mono, tiled)
+        np.testing.assert_array_equal(mono, ptiled)
+
+    def test_plan_mismatch_rejected(self):
+        from repro.compiler.execute import (compiled_matmul_programmed,
+                                            program_layer_tiles)
+        from repro.compiler.tiling import plan_tiling
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=70, n=12)
+        plan = plan_tiling(70, 12, cfg, tile_k_chunks=1, tile_n=4)
+        prog = program_layer_tiles(w, plan, cfg, sx=0.1)
+        other = plan_tiling(70, 12, cfg, tile_k_chunks=2, tile_n=4)
+        with pytest.raises(ValueError, match="slicing"):
+            compiled_matmul_programmed(x, prog, other, cfg)
+
+
+class TestModelProgramming:
+    def _cfg(self, use_kernel=False):
+        from repro.configs.base import MFTechniqueConfig, ModelConfig
+        return ModelConfig(
+            name="prog-tiny", family="lm", n_layers=3, d_model=32, n_heads=4,
+            n_kv_heads=2, d_ff=64, vocab_size=64, dtype=jnp.float32,
+            mf=MFTechniqueConfig(mode="cim_sim",
+                                 cim=CimConfig(4, 4, 5, 31,
+                                               use_kernel=use_kernel)))
+
+    def test_program_weights_round_trip_and_decode(self):
+        from repro.models import transformer as T
+        cfg = self._cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        pp = program_weights(params, cfg.mf.cim)
+        # every MF projection gained a prog entry; stripping restores the
+        # original tree structure
+        assert jax.tree.structure(strip_programmed(pp)) == \
+            jax.tree.structure(params)
+        cache = T.lm_init_cache(cfg, 2, 8)
+        step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
+        logits, _ = step(pp, cache, jnp.array([1, 2]))
+        assert logits.shape == (2, 64)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_programmed_decode_matches_explicit_static_scale(self):
+        # The embedded programmed state must be what apply_projection uses:
+        # decoding twice from independently programmed trees is identical.
+        from repro.models import transformer as T
+        cfg = self._cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
+        outs = []
+        for _ in range(2):
+            pp = program_weights(params, cfg.mf.cim)
+            cache = T.lm_init_cache(cfg, 2, 8)
+            logits, _ = step(pp, cache, jnp.array([3, 4]))
+            outs.append(np.asarray(logits))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_apply_projection_consumes_embedded_prog(self):
+        from repro.core.mf import ExecMode, apply_projection
+        cfg = CimConfig(8, 8, 5, 31)
+        w = jax.random.normal(jax.random.PRNGKey(1), (40, 6))
+        p = {"w": w, "alpha": jnp.ones((6,))}
+        pp = program_weights({"proj": p}, cfg)["proj"]
+        assert "prog" in pp
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 40))
+        via_params = apply_projection(pp, x, ExecMode.CIM_SIM, cim_cfg=cfg)
+        direct = cim_mf_matmul_programmed(x, pp["prog"], cfg) * pp["alpha"]
+        np.testing.assert_array_equal(np.asarray(via_params),
+                                      np.asarray(direct))
+
+    def test_default_static_sx(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        assert default_static_sx(cfg) == DEFAULT_ACT_AMAX / 127.0
+
+
+class TestKernelOpsPacking:
+    def test_pack_chunks_precondition_is_clear_error(self):
+        from repro.kernels.ops import pack_chunks
+        with pytest.raises(ValueError, match="CHUNK_PAD"):
+            pack_chunks(jnp.ones((2, 64)), 33)
+        with pytest.raises(ValueError, match=">= 1"):
+            pack_chunks(jnp.ones((2, 64)), 0)
+
+    def test_cim_mav_packed_matches_unpacked(self):
+        from repro.kernels.ops import cim_mav, cim_mav_packed, pack_chunks, \
+            pack_planes
+        m, a = 31, 5
+        gates = (jax.random.uniform(jax.random.PRNGKey(0), (3, 70)) > 0.5
+                 ).astype(jnp.float32)
+        planes = (jax.random.uniform(jax.random.PRNGKey(1), (7, 70, 9)) > 0.5
+                  ).astype(jnp.float32)
+        y0 = cim_mav(gates, planes, m_columns=m, adc_bits=a)
+        y1 = cim_mav_packed(pack_chunks(gates, m), pack_planes(planes, m),
+                            m_columns=m, adc_bits=a)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+class TestServeEngine:
+    def _cfg(self):
+        from repro.configs.base import MFTechniqueConfig, ModelConfig
+        return ModelConfig(
+            name="serve-tiny", family="lm", n_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+            dtype=jnp.float32,
+            mf=MFTechniqueConfig(mode="cim_sim", cim=CimConfig(4, 4, 5, 31)))
+
+    def test_engine_programs_cim_model_and_serves(self):
+        from repro.models import transformer as T
+        from repro.serve.engine import Request, ServeEngine
+        cfg = self._cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(params, cfg, slots=2, max_len=16)
+        assert eng.programmed
+        done = eng.run([Request(prompt=[1, 2], max_new_tokens=3)
+                        for _ in range(3)])
+        assert len(done) == 3
+        assert all(len(r.out) == 3 and not r.timed_out for r in done)
+
+    def test_engine_program_flag_off_keeps_legacy_path(self):
+        from repro.models import transformer as T
+        from repro.serve.engine import ServeEngine
+        cfg = self._cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(params, cfg, slots=1, max_len=8, program=False)
+        assert not eng.programmed and eng._exec_params is params
+
+    def test_run_returns_inflight_and_unscheduled_on_timeout(self):
+        from repro.models import transformer as T
+        from repro.serve.engine import Request, ServeEngine
+        cfg = dataclasses.replace(self._cfg(), mf=dataclasses.replace(
+            self._cfg().mf, enabled=False))
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(params, cfg, slots=1, max_len=64)
+        reqs = [Request(prompt=[1], max_new_tokens=50),
+                Request(prompt=[2], max_new_tokens=50)]
+        done = eng.run(reqs, max_ticks=3)
+        # nothing is silently dropped: both come back, marked timed_out
+        assert len(done) == 2
+        assert all(r.timed_out for r in done)
+        assert len(done[0].out) == 3          # partial output preserved
+        assert eng.free_slots == [0]          # slot released for reuse
+
+    def test_reset_slot_zeroes_only_target_slot(self):
+        from repro.models import transformer as T
+        from repro.serve.engine import _reset_slot
+        cfg = self._cfg()
+        cache = T.lm_init_cache(cfg, 3, 8)
+        cache = jax.tree.map(
+            lambda v: v + 5 if v.dtype == jnp.int32 else v, cache)
+        out = _reset_slot(cache, 1)
+        pos = np.asarray(out["pos"])
+        np.testing.assert_array_equal(pos, [5, 0, 5])
