@@ -20,6 +20,7 @@ SUITES = (
     "compiler_report",
     "kernel_bench",
     "serve_bench",
+    "calib_report",
     "roofline_report",
 )
 

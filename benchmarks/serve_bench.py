@@ -78,8 +78,15 @@ def run(quick: bool = True):
     legacy_eng = ServeEngine(params, cfg, slots=slots, max_len=max_len,
                              program=False)
     assert prog_eng.programmed and not legacy_eng.programmed
-    from repro.core.programmed import programmed_bytes
+    from repro.core.programmed import (programmed_bytes,
+                                       programmed_bytes_unpacked)
     state_bytes = programmed_bytes(prog_eng._exec_params)
+    state_bytes_unpacked = programmed_bytes_unpacked(prog_eng._exec_params,
+                                                     cfg.mf.cim)
+    # Bit-packing gate: packed plane/magnitude cells must strictly shrink
+    # the programmed state versus the one-int8-per-cell layouts.
+    assert state_bytes < state_bytes_unpacked, (state_bytes,
+                                                state_bytes_unpacked)
 
     prog_tok_s = _decode_tok_per_s(prog_eng, ticks, warmup, reps)
     legacy_tok_s = _decode_tok_per_s(legacy_eng, ticks, warmup, reps)
@@ -96,6 +103,8 @@ def run(quick: bool = True):
         "adc_bits": cfg.mf.cim.adc_bits,
         "m_columns": cfg.mf.cim.m_columns,
         "programmed_state_bytes": state_bytes,
+        "programmed_state_bytes_unpacked": state_bytes_unpacked,
+        "bit_packing_ratio": state_bytes_unpacked / max(state_bytes, 1),
         "programmed_tok_s": prog_tok_s,
         "legacy_tok_s": legacy_tok_s,
         "speedup": speedup,

@@ -2,6 +2,8 @@
 # Tier-1 gate: fast test suite + compiler-report benchmark smoke.
 # TIER1_SERVE_BENCH=1 additionally runs the serve-decode bench smoke
 # (programmed vs legacy CIM decode) and leaves BENCH_serve.json behind.
+# TIER1_CALIB_BENCH=1 additionally runs the calibration accuracy smoke
+# (calibrated vs static activation scales) and leaves BENCH_calib.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -10,4 +12,7 @@ python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --only compiler
 if [[ "${TIER1_SERVE_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.serve_bench --smoke
+fi
+if [[ "${TIER1_CALIB_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.calib_report --smoke
 fi

@@ -1,0 +1,50 @@
+"""Calibration lab: corpus-driven activation statistics, per-projection
+scale programming, and the CIM accuracy/error report.
+
+The paper's co-design only pays off when quantisation ranges match the
+data: this package records per-projection |x| statistics over a corpus
+(``corpus``/``observers``), lowers them into the static activation scales
+the programmed runtime quantises against (``artifact`` +
+``core.programmed.program_weights(scales=...)``), and measures what that
+buys — per-projection SQNR and end-to-end logits error of the CIM
+simulator against the float MF reference (``report``).
+
+Only the light, cycle-free modules load eagerly (``tap`` is imported by
+``core.mf`` at module load); ``corpus``/``report`` pull in the model zoo
+and resolve lazily.
+"""
+
+from repro.calib import tap
+from repro.calib.artifact import CalibrationArtifact
+from repro.calib.observers import (SCALE_METHODS, ObserverConfig,
+                                   ObserverState, observer_init,
+                                   observer_merge, observer_update,
+                                   select_scale)
+
+__all__ = [
+    "tap", "CalibrationArtifact", "SCALE_METHODS", "ObserverConfig",
+    "ObserverState", "observer_init", "observer_merge", "observer_update",
+    "select_scale",
+    # lazy (see __getattr__):
+    "attach_observer_ids", "collect_stats", "scales_from_stats",
+    "StatsCollector", "ErrorCollector", "ObserverRegistry",
+    "calibrate", "calibrate_lm", "evaluate_lm", "accuracy_report",
+    "AccuracyReport", "lm_ref_config",
+]
+
+_LAZY = {
+    "attach_observer_ids": "corpus", "collect_stats": "corpus",
+    "scales_from_stats": "corpus", "StatsCollector": "corpus",
+    "ErrorCollector": "corpus", "ObserverRegistry": "corpus",
+    "calibrate": "report", "calibrate_lm": "report",
+    "evaluate_lm": "report", "accuracy_report": "report",
+    "AccuracyReport": "report", "lm_ref_config": "report",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.calib.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

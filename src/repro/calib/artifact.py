@@ -1,0 +1,65 @@
+"""Calibration artifact: the saved result of a calibration run.
+
+A :class:`CalibrationArtifact` is the per-projection static activation
+scale map (``program_weights(..., scales=artifact.scales)``) plus enough
+metadata to audit it — selection method, input precision, corpus size.
+Serialised as plain JSON so artifacts diff cleanly in review and survive
+any environment: scale values are float32, stored as exact decimal
+reprs of their float64 widening, so a save/load round trip is
+bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CalibrationArtifact:
+    """Per-projection static activation scales for one (model, CimConfig).
+
+    ``scales`` maps projection names (the ``core.programmed
+    .map_projections`` dotted paths; expert banks use
+    ``<name>.up/gate/down``) to float32 arrays over the projection's
+    stacked leading axes — scalar-shaped for unstacked projections.
+    """
+
+    method: str
+    x_bits: int
+    scales: dict[str, np.ndarray]
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def save(self, path: str) -> None:
+        payload = {
+            "kind": "mfnet-calibration",
+            "method": self.method,
+            "x_bits": self.x_bits,
+            "meta": self.meta,
+            "scales": {
+                name: {"shape": list(np.shape(v)),
+                       "data": np.asarray(v, np.float32).reshape(-1)
+                       .astype(np.float64).tolist()}
+                for name, v in self.scales.items()
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationArtifact":
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("kind") != "mfnet-calibration":
+            raise ValueError(f"{path} is not a calibration artifact")
+        scales = {
+            name: np.asarray(rec["data"], np.float32)
+            .reshape(tuple(rec["shape"]))
+            for name, rec in payload["scales"].items()
+        }
+        return cls(method=payload["method"], x_bits=int(payload["x_bits"]),
+                   scales=scales, meta=payload.get("meta", {}))

@@ -1,0 +1,212 @@
+"""Corpus runner: record per-projection activation statistics via the tap.
+
+The flow mirrors scale programming exactly (both ride
+``core.programmed.map_projections``, so names line up by construction):
+
+  1. :func:`attach_observer_ids` walks the parameter tree and embeds an
+     int32 ``obs_id`` array in every MF projection dict (stacked layers
+     and MoE experts get stacked id arrays — one id per layer *instance*,
+     sliced by ``jax.lax.scan``/``vmap`` exactly like the weights).
+  2. A :class:`StatsCollector` is installed with ``tap.observing`` and
+     the ordinary model forward replays a corpus; ``apply_projection`` /
+     ``conv_apply`` emit per-call :class:`~repro.calib.observers
+     .ObserverState` summaries that reach the host through
+     ``jax.experimental.io_callback`` (unordered — merging is
+     order-invariant) and merge into per-id accumulators.
+  3. :func:`scales_from_stats` lowers the accumulated states into the
+     per-projection ``scales`` mapping ``program_weights`` consumes.
+
+The same id plumbing powers the accuracy report: an :class:`ErrorCollector`
+under ``tap.measuring_error`` accumulates per-projection signal/error
+energy (SQNR) while a programmed CIM forward runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.calib import observers as obs
+from repro.calib import tap
+from repro.core.programmed import _EXPERT_KEYS, map_projections
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserverRegistry:
+    """Name -> (id offset, stacked leading shape) for one tagged tree."""
+
+    entries: dict[str, tuple[int, tuple[int, ...]]]
+    n_ids: int
+
+
+def attach_observer_ids(params: Any) -> tuple[Any, ObserverRegistry]:
+    """Embed per-instance observer ids in every MF projection dict.
+
+    Returns the tagged tree (safe to run through any forward — the extra
+    int32 leaves ride scans like parameters and are ignored outside
+    observe mode) and the registry mapping projection names to id blocks.
+    Expert banks register ``<name>.up/gate/down`` — the same key scheme
+    ``program_weights(scales=...)`` resolves.
+    """
+    entries: dict[str, tuple[int, tuple[int, ...]]] = {}
+    next_id = 0
+
+    def make_ids(name: str, shape: tuple[int, ...]) -> jax.Array:
+        nonlocal next_id
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        ids = np.arange(n, dtype=np.int32).reshape(shape) + next_id
+        entries[name] = (next_id, shape)
+        next_id += n
+        return jnp.asarray(ids)
+
+    def attach(name, node, kind):
+        out = dict(node)
+        if kind == "experts":
+            for key in _EXPERT_KEYS:
+                out[f"obs_id_{key}"] = make_ids(f"{name}.{key}",
+                                                node[key].shape[:-2])
+        elif kind == "conv":
+            out["obs_id"] = make_ids(name, ())
+        else:
+            out["obs_id"] = make_ids(name, node["w"].shape[:-2])
+        return out
+
+    tagged = map_projections(params, attach)
+    return tagged, ObserverRegistry(entries, next_id)
+
+
+def strip_observer_ids(params: Any) -> Any:
+    """Inverse of :func:`attach_observer_ids`."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()
+                    if not (isinstance(k, str) and k.startswith("obs_id"))}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(params)
+
+
+class StatsCollector:
+    """Per-id activation-statistic accumulators (host side).
+
+    ``emit_activation`` runs in traced code: it reduces the tensor to an
+    :class:`ObserverState` summary on device and ships only that summary
+    (a handful of floats + one histogram row) through ``io_callback``.
+    """
+
+    def __init__(self, n_ids: int,
+                 obs_cfg: obs.ObserverConfig = obs.ObserverConfig()):
+        self.obs_cfg = obs_cfg
+        self.count = np.zeros((n_ids,), np.float64)
+        self.amax = np.zeros((n_ids,), np.float64)
+        self.hist = np.zeros((n_ids, obs_cfg.n_bins), np.float64)
+
+    # -- traced side --------------------------------------------------------
+    def emit_activation(self, obs_id, x) -> None:
+        st = obs.summarize(x, self.obs_cfg)
+        io_callback(self._accumulate, None,
+                    jnp.asarray(obs_id, jnp.int32), st.count, st.amax,
+                    st.hist, ordered=False)
+
+    # -- host side ----------------------------------------------------------
+    def _accumulate(self, obs_id, count, amax, hist) -> None:
+        i = int(obs_id)
+        self.count[i] += float(count)
+        self.amax[i] = max(self.amax[i], float(amax))
+        self.hist[i] += np.asarray(hist, np.float64)
+
+    def state(self, i: int) -> obs.ObserverState:
+        """The merged state of instance ``i`` (numpy-backed)."""
+        return obs.ObserverState(np.float32(self.count[i]),
+                                 np.float32(self.amax[i]),
+                                 self.hist[i].astype(np.float32))
+
+
+class ErrorCollector:
+    """Per-id signal/error energy accumulators for the SQNR report."""
+
+    def __init__(self, n_ids: int):
+        self.ref_sq = np.zeros((n_ids,), np.float64)
+        self.err_sq = np.zeros((n_ids,), np.float64)
+        self.count = np.zeros((n_ids,), np.float64)
+
+    def emit_error(self, obs_id, y, y_ref) -> None:
+        yf = y.astype(jnp.float32)
+        rf = y_ref.astype(jnp.float32)
+        io_callback(self._accumulate, None,
+                    jnp.asarray(obs_id, jnp.int32),
+                    jnp.sum(rf * rf), jnp.sum((yf - rf) ** 2),
+                    jnp.float32(rf.size), ordered=False)
+
+    def _accumulate(self, obs_id, ref_sq, err_sq, count) -> None:
+        i = int(obs_id)
+        self.ref_sq[i] += float(ref_sq)
+        self.err_sq[i] += float(err_sq)
+        self.count[i] += float(count)
+
+    def sqnr_db(self, cap_db: float = 120.0) -> np.ndarray:
+        """Per-id SQNR in dB over the ids that saw any signal; bit-exact
+        projections cap at ``cap_db`` (so means stay finite)."""
+        seen = (self.count > 0) & (self.ref_sq > 0)
+        ref, err = self.ref_sq[seen], self.err_sq[seen]
+        floor = ref * 10.0 ** (-cap_db / 10.0)
+        return 10.0 * np.log10(ref / np.maximum(err, floor))
+
+
+def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
+                  batches: Iterable[Any],
+                  registry: ObserverRegistry,
+                  obs_cfg: obs.ObserverConfig = obs.ObserverConfig()
+                  ) -> StatsCollector:
+    """Replay ``batches`` through ``forward_fn(tagged_params, batch)`` in
+    observe mode, returning the filled collector.
+
+    ``forward_fn`` must not be a jit cached OUTSIDE this call: the tap
+    gate and the collector's io_callback are captured at trace time, so a
+    trace cached before (or across) calibration runs would record into
+    the wrong collector — or into none. Plain Python forwards (inner
+    ``lax.scan``/``jit`` created fresh per trace are fine) re-trace per
+    collector. An all-empty collection raises instead of silently
+    producing fallback scales.
+    """
+    collector = StatsCollector(registry.n_ids, obs_cfg)
+    with tap.observing(collector):
+        for batch in batches:
+            out = forward_fn(tagged_params, batch)
+            jax.block_until_ready(out)
+    jax.effects_barrier()
+    if registry.n_ids and not np.any(collector.count > 0):
+        raise RuntimeError(
+            "observe pass recorded no statistics for any of the "
+            f"{registry.n_ids} registered projections — the forward was "
+            "likely traced (jitted) outside tap.observing, so the "
+            "observation callbacks were never staged; pass an un-cached "
+            "forward (see collect_stats docstring)")
+    return collector
+
+
+def scales_from_stats(collector: StatsCollector, registry: ObserverRegistry,
+                      x_bits: int, method: str, *, pct: float = 99.9,
+                      fallback_amax: float = 4.0
+                      ) -> dict[str, np.ndarray]:
+    """Lower accumulated stats into the ``program_weights`` scales map:
+    one float32 array per projection name, shaped like its stacked
+    leading axes (scan periods, experts)."""
+    scales: dict[str, np.ndarray] = {}
+    for name, (off, shape) in registry.entries.items():
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        vals = np.asarray(
+            [obs.select_scale(collector.state(off + j), x_bits, method,
+                              cfg=collector.obs_cfg, pct=pct,
+                              fallback_amax=fallback_amax)
+             for j in range(n)], np.float32)
+        scales[name] = vals.reshape(shape)
+    return scales

@@ -1,0 +1,189 @@
+"""Per-projection activation-statistic observers (jit/vmap-compatible).
+
+An :class:`ObserverState` is a small pytree of running statistics of the
+absolute activations one projection has seen — element count, running
+amax, and a fixed-grid histogram of |x|. States accumulate with
+:func:`observer_update` inside jitted/vmapped code and combine with
+:func:`observer_merge` across batches, shards, and hosts; every field is
+an exact commutative monoid (float32 sums of integer counts, max), so
+merging is order-invariant bit-for-bit and the empty state is a true
+identity.
+
+Scale *selection* happens after collection, on the host: three policies
+lower a state into the static activation scale ``sx`` the programmed
+runtime quantises against (see ``core/programmed.py``):
+
+  * ``amax``       — classic max-abs: sx = amax / qmax (no clipping).
+  * ``percentile`` — clip the |x| tail at the q-th percentile of the
+                     histogram CDF (robust to outlier spikes).
+  * ``mse``        — sweep candidate clip points and keep the one whose
+                     quantise-clip reconstruction MSE over the histogram
+                     is minimal (the OCS/TensorRT-style search; matches
+                     the signal-range fitting of Kang et al. 1610.07501).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserverConfig:
+    """Histogram geometry shared by every observer of one calibration run.
+
+    ``range_max`` is the upper edge of the |x| grid; values beyond it land
+    in the last (overflow) bin — amax is tracked exactly regardless, and
+    the scale selectors treat the overflow bin pessimistically (its mass
+    sits at the recorded amax).
+    """
+
+    n_bins: int = 256
+    range_max: float = 16.0
+
+
+class ObserverState(NamedTuple):
+    """Mergeable running statistics of |x| for one projection instance."""
+
+    count: jax.Array    # () float32 — number of elements observed
+    amax: jax.Array     # () float32 — running max |x|
+    hist: jax.Array     # (n_bins,) float32 — |x| counts on the fixed grid
+
+
+def observer_init(cfg: ObserverConfig = ObserverConfig()) -> ObserverState:
+    """The empty (identity) observer state."""
+    return ObserverState(jnp.zeros((), jnp.float32),
+                         jnp.zeros((), jnp.float32),
+                         jnp.zeros((cfg.n_bins,), jnp.float32))
+
+
+def observer_update(state: ObserverState, x: jax.Array,
+                    cfg: ObserverConfig = ObserverConfig()) -> ObserverState:
+    """Fold one activation tensor into a state. jit/vmap-safe; a
+    zero-element ``x`` (empty batch) is a no-op."""
+    v = jnp.abs(x.astype(jnp.float32)).reshape(-1)
+    if v.shape[0] == 0:     # static shape — resolved at trace time
+        return state
+    amax = jnp.maximum(state.amax, jnp.max(v))
+    idx = jnp.clip((v * (cfg.n_bins / cfg.range_max)).astype(jnp.int32),
+                   0, cfg.n_bins - 1)
+    hist = state.hist.at[idx].add(1.0)
+    return ObserverState(state.count + v.shape[0], amax, hist)
+
+
+def observer_merge(a: ObserverState, b: ObserverState) -> ObserverState:
+    """Combine two states; commutative/associative, exact in float32 for
+    any realistic count (integer-valued sums below 2^24 per bin)."""
+    return ObserverState(a.count + b.count, jnp.maximum(a.amax, b.amax),
+                         a.hist + b.hist)
+
+
+def summarize(x: jax.Array,
+              cfg: ObserverConfig = ObserverConfig()) -> ObserverState:
+    """One-shot state of a single tensor (what the tap emits per call)."""
+    return observer_update(observer_init(cfg), x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Host-side scale selection (numpy; runs once per calibration, not jitted).
+# ---------------------------------------------------------------------------
+
+SCALE_METHODS = ("amax", "percentile", "mse")
+
+
+def _bin_centers(cfg: ObserverConfig) -> np.ndarray:
+    w = cfg.range_max / cfg.n_bins
+    return (np.arange(cfg.n_bins) + 0.5) * w
+
+
+def _effective_centers(state: ObserverState,
+                       cfg: ObserverConfig) -> np.ndarray:
+    """Bin centers with the overflow bin pinned at the true amax (mass
+    beyond range_max clipped into the last bin must not be assumed small)."""
+    c = _bin_centers(cfg)
+    amax = float(state.amax)
+    if amax > cfg.range_max:
+        c = c.copy()
+        c[-1] = amax
+    return c
+
+
+def scale_amax(state: ObserverState, x_bits: int, *,
+               fallback_amax: float = 4.0) -> float:
+    """Max-abs scale: the finest grid that never clips what was seen."""
+    amax = float(state.amax)
+    if float(state.count) == 0.0 or amax == 0.0:
+        amax = fallback_amax
+    return amax / quant.qmax(x_bits)
+
+
+def scale_percentile(state: ObserverState, x_bits: int, *,
+                     pct: float = 99.9,
+                     cfg: ObserverConfig = ObserverConfig(),
+                     fallback_amax: float = 4.0) -> float:
+    """Clip at the pct-th percentile of |x| (histogram CDF upper edge)."""
+    count = float(state.count)
+    if count == 0.0 or float(state.amax) == 0.0:
+        return fallback_amax / quant.qmax(x_bits)
+    hist = np.asarray(state.hist, np.float64)
+    cdf = np.cumsum(hist)
+    target = pct / 100.0 * count
+    b = int(np.searchsorted(cdf, target, side="left"))
+    if b >= cfg.n_bins - 1:
+        # The percentile falls in the overflow bin: only amax bounds it.
+        amax_p = float(state.amax)
+    else:
+        amax_p = min((b + 1) * cfg.range_max / cfg.n_bins,
+                     float(state.amax))
+    return max(amax_p, 1e-8) / quant.qmax(x_bits)
+
+
+def scale_mse(state: ObserverState, x_bits: int, *,
+              cfg: ObserverConfig = ObserverConfig(),
+              n_candidates: int = 64,
+              fallback_amax: float = 4.0) -> float:
+    """Minimum quantise-clip-MSE clip point over the histogram.
+
+    For each candidate clip amax ``a`` the b-bit symmetric grid has scale
+    ``s = a / qmax``; a bin at center c contributes
+    ``hist * (c - clip(round(c/s), 0, qmax) * s)^2`` — in-range bins pay
+    rounding error ~s^2/12, clipped bins pay (c - a)^2. The sweep trades
+    tail clipping against grid resolution exactly like the hardware's
+    fixed input DAC does.
+    """
+    count = float(state.count)
+    amax = float(state.amax)
+    if count == 0.0 or amax == 0.0:
+        return fallback_amax / quant.qmax(x_bits)
+    qm = quant.qmax(x_bits)
+    hist = np.asarray(state.hist, np.float64)
+    centers = _effective_centers(state, cfg)
+    top = min(amax, cfg.range_max)
+    cands = np.linspace(top / n_candidates, max(top, 1e-8), n_candidates)
+    scales = cands / qm                                     # (C,)
+    q = np.clip(np.round(centers[None, :] / scales[:, None]), 0, qm)
+    err = (centers[None, :] - q * scales[:, None]) ** 2     # (C, B)
+    mse = err @ hist
+    return float(scales[int(np.argmin(mse))])
+
+
+def select_scale(state: ObserverState, x_bits: int, method: str, *,
+                 cfg: ObserverConfig = ObserverConfig(),
+                 pct: float = 99.9, fallback_amax: float = 4.0) -> float:
+    """Dispatch on ``method`` in :data:`SCALE_METHODS`."""
+    if method == "amax":
+        return scale_amax(state, x_bits, fallback_amax=fallback_amax)
+    if method == "percentile":
+        return scale_percentile(state, x_bits, pct=pct, cfg=cfg,
+                                fallback_amax=fallback_amax)
+    if method == "mse":
+        return scale_mse(state, x_bits, cfg=cfg,
+                         fallback_amax=fallback_amax)
+    raise ValueError(f"unknown scale method {method!r}; "
+                     f"expected one of {SCALE_METHODS}")

@@ -1,0 +1,149 @@
+"""Calibration + accuracy harness: does data-driven `sx` actually help?
+
+Two halves:
+
+  * :func:`calibrate` — generic corpus pass: tag a parameter tree, replay
+    batches through any forward in observe mode, lower the recorded
+    statistics into a :class:`~repro.calib.artifact.CalibrationArtifact`.
+    :func:`calibrate_lm` binds it to the unified LM forward (observation
+    runs the float MF reference — the distribution the DAC must cover).
+  * :func:`accuracy_report` — evaluation pass: run the fp32 MF reference
+    and the programmed CIM simulator over the same batches, accumulating
+    (a) per-projection SQNR through the error tap (each projection's CIM
+    output against its float MF correlation on the SAME inputs) and
+    (b) end-to-end logits error + top-1 agreement. :func:`evaluate_lm`
+    binds it to the LM forward; ``benchmarks/calib_report.py`` sweeps
+    calibration methods x ADC design points and emits BENCH_calib.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.calib import tap
+from repro.calib.artifact import CalibrationArtifact
+from repro.calib.corpus import (ErrorCollector, ObserverRegistry,
+                                attach_observer_ids, collect_stats,
+                                scales_from_stats)
+from repro.calib.observers import ObserverConfig
+from repro.core.programmed import DEFAULT_ACT_AMAX, program_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracyReport:
+    """One (model, CimConfig, scale-policy) accuracy measurement."""
+
+    rel_l2: float           # ||logits_cim - logits_ref||2 / ||logits_ref||2
+    top1_agree: float       # fraction of positions with matching argmax
+    mean_sqnr_db: float     # mean per-projection SQNR (CIM vs float MF)
+    min_sqnr_db: float
+    n_projections: int      # projection instances that saw signal
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def calibrate(forward_fn: Callable[[Any, Any], Any], params: Any,
+              batches: Sequence[Any], x_bits: int, *, method: str = "mse",
+              obs_cfg: ObserverConfig = ObserverConfig(), pct: float = 99.9,
+              fallback_amax: float = DEFAULT_ACT_AMAX,
+              meta: Optional[dict] = None) -> CalibrationArtifact:
+    """One corpus pass -> a calibration artifact, for ANY model forward.
+
+    ``forward_fn(tagged_params, batch)`` must route its projections
+    through ``apply_projection`` / ``conv_apply`` (everything in the model
+    zoo does); scan-stacked layers and MoE experts record one observer per
+    layer instance / expert.
+    """
+    tagged, registry = attach_observer_ids(params)
+    collector = collect_stats(forward_fn, tagged, batches, registry,
+                              obs_cfg)
+    scales = scales_from_stats(collector, registry, x_bits, method,
+                               pct=pct, fallback_amax=fallback_amax)
+    info = {"n_batches": len(batches), "n_projections": registry.n_ids,
+            "obs_bins": obs_cfg.n_bins, "obs_range_max": obs_cfg.range_max}
+    info.update(meta or {})
+    return CalibrationArtifact(method=method, x_bits=x_bits, scales=scales,
+                               meta=info)
+
+
+def accuracy_report(ref_forward: Callable[[Any], Any],
+                    cim_forward: Callable[[Any], Any],
+                    batches: Iterable[Any],
+                    registry: ObserverRegistry) -> AccuracyReport:
+    """Measure a programmed CIM forward against its float MF reference."""
+    err_col = ErrorCollector(registry.n_ids)
+    num = den = 0.0
+    agree = total = 0
+    for batch in batches:
+        ref = np.asarray(ref_forward(batch), np.float32)
+        with tap.measuring_error(err_col):
+            cim = np.asarray(cim_forward(batch), np.float32)
+        num += float(np.sum((cim - ref) ** 2))
+        den += float(np.sum(ref ** 2))
+        agree += int(np.sum(np.argmax(cim, -1) == np.argmax(ref, -1)))
+        total += int(np.prod(ref.shape[:-1]))
+    sqnr = err_col.sqnr_db()
+    return AccuracyReport(
+        rel_l2=float(np.sqrt(num / max(den, 1e-30))),
+        top1_agree=agree / max(total, 1),
+        mean_sqnr_db=float(np.mean(sqnr)) if sqnr.size else float("nan"),
+        min_sqnr_db=float(np.min(sqnr)) if sqnr.size else float("nan"),
+        n_projections=int(sqnr.size))
+
+
+# ---------------------------------------------------------------------------
+# LM bindings (the unified decoder-only forward).
+# ---------------------------------------------------------------------------
+
+def lm_ref_config(cfg):
+    """The float MF reference of a cim_sim model config."""
+    return dataclasses.replace(cfg, mf=dataclasses.replace(cfg.mf,
+                                                           mode="mf"))
+
+
+def _lm_forward(cfg):
+    from repro.models import transformer as T
+
+    def fwd(params, batch):
+        logits, _ = T.lm_forward(params, batch, cfg)
+        return logits
+
+    return fwd
+
+
+def calibrate_lm(params: Any, cfg, batches: Sequence[dict], *,
+                 method: str = "mse",
+                 obs_cfg: ObserverConfig = ObserverConfig(),
+                 pct: float = 99.9,
+                 fallback_amax: float = DEFAULT_ACT_AMAX
+                 ) -> CalibrationArtifact:
+    """Calibrate every projection of an LM config over a token corpus."""
+    fwd = _lm_forward(lm_ref_config(cfg))
+    return calibrate(fwd, params, batches, cfg.mf.cim.x_bits,
+                     method=method, obs_cfg=obs_cfg, pct=pct,
+                     fallback_amax=fallback_amax,
+                     meta={"model": cfg.name})
+
+
+def evaluate_lm(params: Any, cfg, batches: Sequence[dict], *,
+                artifact: Optional[CalibrationArtifact] = None,
+                act_amax: float = DEFAULT_ACT_AMAX) -> AccuracyReport:
+    """Accuracy of the programmed cim_sim forward vs the float reference.
+
+    ``artifact=None`` evaluates the static full-scale baseline
+    (``act_amax`` for every projection); with an artifact, its measured
+    per-projection scales are programmed instead.
+    """
+    tagged, registry = attach_observer_ids(params)
+    scales = artifact.scales if artifact is not None else None
+    progd = program_weights(tagged, cfg.mf.cim, scales=scales,
+                            act_amax=act_amax)
+    ref_fwd = _lm_forward(lm_ref_config(cfg))
+    cim_fwd = _lm_forward(cfg)
+    return accuracy_report(lambda b: ref_fwd(params, b),
+                           lambda b: cim_fwd(progd, b),
+                           batches, registry)

@@ -1,0 +1,70 @@
+"""Observation taps: how the calibration lab hooks the projection path.
+
+``core.mf.apply_projection`` (and the conv/expert entry points) call the
+module-level hooks below on every projection; when no collector is
+installed they are no-ops costing one global read at trace time. A
+calibration run installs a collector with the :func:`observing` /
+:func:`measuring_error` context managers and replays a corpus through the
+ordinary model forward — scan-stacked layers, vmapped experts and convs
+all included, because the obs-id arrays attached by
+``repro.calib.corpus.attach_observer_ids`` flow through ``jax.lax.scan``
+exactly like the parameters they shadow and arrive here as concrete
+per-instance ids at run time.
+
+This module intentionally imports nothing from ``repro`` (it is imported
+by ``repro.core.mf`` at module load): collectors are duck-typed objects
+with ``emit_activation(obs_id, x)`` / ``emit_error(obs_id, y, y_ref)``
+methods, defined in ``repro.calib.corpus``.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Optional
+
+_STATS: Optional[Any] = None
+_ERROR: Optional[Any] = None
+
+
+def stats_active() -> bool:
+    """True while an activation-statistics collector is installed."""
+    return _STATS is not None
+
+
+def error_active() -> bool:
+    """True while a projection-error (SQNR) collector is installed."""
+    return _ERROR is not None
+
+
+def record_activation(obs_id, x) -> None:
+    """Record the input of one projection call (observe mode)."""
+    if _STATS is not None and obs_id is not None:
+        _STATS.emit_activation(obs_id, x)
+
+
+def record_projection_error(obs_id, y, y_ref) -> None:
+    """Record one projection's CIM output against its float reference."""
+    if _ERROR is not None and obs_id is not None:
+        _ERROR.emit_error(obs_id, y, y_ref)
+
+
+@contextmanager
+def observing(collector):
+    """Install an activation-statistics collector for the enclosed pass."""
+    global _STATS
+    prev, _STATS = _STATS, collector
+    try:
+        yield collector
+    finally:
+        _STATS = prev
+
+
+@contextmanager
+def measuring_error(collector):
+    """Install a projection-error collector for the enclosed pass."""
+    global _ERROR
+    prev, _ERROR = _ERROR, collector
+    try:
+        yield collector
+    finally:
+        _ERROR = prev

@@ -38,7 +38,7 @@ from repro.core import quant
 from repro.core.cim import (CimConfig, CimPartials, cim_input_partials,
                             cim_mf_matmul, cim_mf_partials, cim_mf_recombine)
 from repro.core.programmed import (ProgrammedLayer, default_static_sx,
-                                   program_macro)
+                                   program_macro, unpack_weight_state)
 
 
 def compiled_matmul(x: jax.Array, w: jax.Array, plan: TilingPlan,
@@ -144,8 +144,9 @@ def compiled_matmul_programmed(x: jax.Array, prog: ProgrammedLayer,
         acc: Optional[CimPartials] = None
         for tile, (k0, k1) in zip(row, plan.k_slices):
             caps = None if cap_weights is None else cap_weights[k0:k1]
-            p = cim_input_partials(x2[:, k0:k1], tile.state, cfg, prog.sx,
-                                   caps, comparator_offset)
+            p = cim_input_partials(x2[:, k0:k1],
+                                   unpack_weight_state(tile.state, cfg),
+                                   cfg, prog.sx, caps, comparator_offset)
             acc = p if acc is None else acc + p
         s1_cols.append(acc.s1c)
         s2_cols.append(acc.s2c)

@@ -14,9 +14,14 @@ from repro.core.mapping import (FleetMappingPolicy, LayerStat, MappingPolicy,
 from repro.core.mf import (ExecMode, apply_projection, dense_init, hw_sign,
                            mf_conv2d, mf_correlate_ref,
                            mf_correlate_step_form, mf_dense_init, mf_matmul)
-from repro.core.programmed import (ProgrammedLayer, ProgrammedMacro,
-                                   cim_mf_matmul_programmed, program_macro,
-                                   program_weights, strip_programmed)
+from repro.core.programmed import (CimLosslessState, CimPackedPlanes,
+                                   ProgrammedLayer, ProgrammedMacro,
+                                   cim_mf_matmul_programmed, iter_projections,
+                                   map_projections, pack_weight_state,
+                                   program_macro, program_weights,
+                                   programmed_bytes,
+                                   programmed_bytes_unpacked,
+                                   strip_programmed, unpack_weight_state)
 from repro.core.quant import fake_quant, quantize, dequantize, calibrate_scale
 from repro.core.variability import (VariabilityConfig,
                                     mav_crossover_probability,
@@ -27,9 +32,12 @@ __all__ = [
     "CimConfig", "CimKernelState", "CimPartials", "CimWeightState",
     "cim_input_partials", "cim_mf_matmul", "cim_mf_matmul_ste",
     "cim_mf_partials", "cim_mf_recombine", "cim_program_kernel_state",
-    "cim_program_weight_state", "ProgrammedLayer", "ProgrammedMacro",
-    "cim_mf_matmul_programmed", "program_macro", "program_weights",
-    "strip_programmed", "DEFAULT_MACRO",
+    "cim_program_weight_state", "CimLosslessState", "CimPackedPlanes",
+    "ProgrammedLayer", "ProgrammedMacro",
+    "cim_mf_matmul_programmed", "iter_projections", "map_projections",
+    "pack_weight_state", "program_macro", "program_weights",
+    "programmed_bytes", "programmed_bytes_unpacked", "strip_programmed",
+    "unpack_weight_state", "DEFAULT_MACRO",
     "MacroParams", "mixed_system_tops_per_watt", "tops_per_watt",
     "unit_op_cycles", "unit_op_energy_j", "FleetMappingPolicy", "LayerStat",
     "MappingPolicy", "MappingReport", "plan_mapping", "ExecMode",

@@ -32,6 +32,11 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+# Calibration-lab observation taps (no-ops unless a calibration collector
+# is installed; `tap` deliberately imports nothing from repro so this
+# module-load import cannot cycle).
+from repro.calib import tap as _calib_tap
+
 
 class ExecMode(str, enum.Enum):
     """Execution backend for a weight-activation projection."""
@@ -224,9 +229,16 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
     via ``programmed`` or embedded as ``params["prog"]`` by
     ``core.programmed.program_weights`` — serving the projection from the
     frozen macro state (inference-only: no STE backward on that path).
+
+    Calibration taps (``repro.calib``): while a collector is installed,
+    the projection input is recorded against the embedded ``obs_id``
+    (observe mode), and in CIM_SIM mode the output is additionally scored
+    against the float MF reference on the same input (SQNR mode).
     """
     mode = ExecMode(mode)
     w = params["w"]
+    if _calib_tap.stats_active() and mode != ExecMode.REGULAR:
+        _calib_tap.record_activation(params.get("obs_id"), x)
     if mode == ExecMode.REGULAR:
         y = x @ w
     elif mode == ExecMode.MF:
@@ -243,6 +255,9 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
             y = cim_mf_matmul_programmed(x, prog, cim_cfg)
         else:
             y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
+        if _calib_tap.error_active():
+            _calib_tap.record_projection_error(
+                params.get("obs_id"), y, mf_correlate_ref(x, w, hw=True))
     elif mode == ExecMode.BNN:
         y = bnn_matmul(x, w)
     else:  # pragma: no cover

@@ -9,31 +9,38 @@ simulator:
   * :class:`ProgrammedMacro` — the frozen per-projection weight state: the
     calibrated weight scale ``sw``, a *static* activation scale ``sx``
     fixed at program time, the exact digital ``r_w`` residue, and either
-    the chunked einsum-path weight state (:class:`~repro.core.cim
-    .CimWeightState`) or the Pallas kernel's pre-packed chunk layout
-    (:class:`~repro.core.cim.CimKernelState`) built from
-    ``kernels/ops.pack_chunks``.
+    the bit-packed plane-level state (:class:`CimPackedPlanes` — 8 µArray
+    cells per byte), the Pallas kernel's pre-packed chunk layout
+    (:class:`~repro.core.cim.CimKernelState`), or the collapsed
+    exactly-lossless state (:class:`CimLosslessState`).
   * :func:`program_macro` — program one (K, N) projection.
   * :func:`program_weights` — walk a model parameter tree and attach a
     ``"prog"`` entry to every MF projection dict (those carrying the MF
-    neuron's ``alpha``), stacked-layer and vmapped layouts included, so the
-    programmed state flows through ``jax.lax.scan`` exactly like the
-    parameters it shadows. ``core.mf.apply_projection`` picks it up in
-    CIM_SIM mode.
+    neuron's ``alpha``), stacked-layer, conv, and MoE-expert layouts
+    included, so the programmed state flows through ``jax.lax.scan``
+    exactly like the parameters it shadows. ``core.mf.apply_projection``
+    picks it up in CIM_SIM mode; ``convnets.conv_apply`` and
+    ``moe._expert_ffn`` consume the conv / expert variants.
+  * :func:`map_projections` / :func:`iter_projections` — the shared tree
+    walk (also used by the calibration lab in ``repro.calib`` to attach
+    observers with the SAME names scale programming looks up).
   * :class:`ProgrammedLayer` — per-tile programmed slices of one
     compiler-tiled projection (see ``repro.compiler.execute``).
 
 Bit-exactness contract: for the same ``CimConfig`` and the same ``sx``,
 the programmed path is bit-identical to the on-the-fly path (monolithic
 and tiled) — both phases run the very same ops on the very same arrays,
-just split across time. The *static* ``sx`` is the one modelling choice
-(hardware cannot re-calibrate the input DAC per batch); see
-EXPERIMENTS.md "Static activation-scale calibration".
+just split across time; bit-packing is a pure storage transform (unpack
+reproduces the exact {0,1} cells). The *static* ``sx`` is the one
+modelling choice (hardware cannot re-calibrate the input DAC per batch);
+``repro.calib`` records corpus statistics and programs measured
+per-projection scales through the ``scales=`` hook below — see
+EXPERIMENTS.md "Corpus-driven activation calibration".
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +54,13 @@ from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
 
 # Full-scale assumption for the default static activation calibration:
 # post-norm activations are ~unit-RMS, so |x| <= ~4 covers >4 sigma. Used
-# only when no measured amax is supplied (see EXPERIMENTS.md).
+# only when no measured scale is supplied (see EXPERIMENTS.md).
 DEFAULT_ACT_AMAX = 4.0
+
+# The sign gate occupies the top bit of every packed byte; magnitude
+# planes fill bits [0, W_P-1). W_P <= 8 always holds (magnitudes are
+# stored as int8 |w_q| <= 127 everywhere in the simulator).
+_SIGN_BIT = 7
 
 
 def adc_exactly_lossless(cfg: CimConfig) -> bool:
@@ -63,17 +75,69 @@ def adc_exactly_lossless(cfg: CimConfig) -> bool:
     return 2 ** cfg.adc_bits - 1 == cfg.m_columns
 
 
+def _check_packable(cfg: CimConfig) -> None:
+    if cfg.w_planes > _SIGN_BIT:
+        raise ValueError(
+            f"w_bits={cfg.w_bits}: {cfg.w_planes} magnitude planes + sign "
+            f"do not fit one packed byte (the simulator stores |w_q| as "
+            f"int8, so w_bits <= 8)")
+
+
+class CimPackedPlanes(NamedTuple):
+    """Bit-packed plane-level programmed weight state (8 cells/byte).
+
+    One uint8 per µArray cell in the program-time (C, m, N) layout: bits
+    [0, W_P-1) hold the |w_q| magnitude bitplanes (LSB first — exactly the
+    rows the hardware stores), bit 7 holds the step(w) sign gate. This
+    cuts programmed-state memory ~(W_P)x versus one int8 per plane-cell
+    (8x at W_P=8); :func:`unpack_weight_state` reproduces the exact {0,1}
+    cells, so the step-time datapath is bit-identical to unpacked state.
+    """
+
+    packed: jax.Array   # (C, m, N) uint8 plane bits + sign gate
+    r_w: jax.Array      # (1, N) float32 exact digital sum_k |w_q|_kn
+
+
+def pack_weight_state(ws: CimWeightState, cfg: CimConfig) -> CimPackedPlanes:
+    """Pack chunked {0,1} plane/gate cells into one byte per cell."""
+    _check_packable(cfg)
+    bits = jnp.arange(cfg.w_planes, dtype=jnp.int32)
+    mag = jnp.sum(ws.wt.astype(jnp.int32) << bits, axis=-1)      # (C, m, N)
+    packed = mag | (ws.gwt.astype(jnp.int32) << _SIGN_BIT)
+    return CimPackedPlanes(packed.astype(jnp.uint8), ws.r_w)
+
+
+def unpack_weight_state(ps: CimPackedPlanes, cfg: CimConfig) -> CimWeightState:
+    """Exact inverse of :func:`pack_weight_state` (step-time expand)."""
+    p32 = ps.packed.astype(jnp.int32)
+    bits = jnp.arange(cfg.w_planes, dtype=jnp.int32)
+    wt = ((p32[..., None] >> bits) & 1).astype(jnp.int8)     # (C, m, N, Pw)
+    gwt = ((p32 >> _SIGN_BIT) & 1).astype(jnp.int8)          # (C, m, N)
+    return CimWeightState(wt, gwt, ps.r_w)
+
+
 class CimLosslessState(NamedTuple):
     """Collapsed weight state for exactly-lossless ADC design points.
 
-    Holds only the dense integer magnitudes and sign gates: the step
+    One uint8 per (K, N) cell: bits [0, 7) hold the integer |w_q|
+    magnitude (<= 127), bit 7 the step(w) sign gate — the sign bit rides
+    in the byte the hardware would spend on the sign row. The step
     becomes two (B, K) @ (K, N) matmuls — bit-identical to the plane-level
     pipeline (every partial sum is integer-valued, exact in float32) while
     streaming W_P-1 times fewer weight bytes per decode step.
     """
 
-    aw: jax.Array   # (K, N) int8 |w_q| integer magnitudes
-    gw: jax.Array   # (K, N) int8 step(w) sign gates
+    packed: jax.Array   # (K, N) uint8: |w_q| magnitude | sign gate << 7
+
+    def magnitudes(self) -> jax.Array:
+        """(K, N) float32 integer |w_q| magnitudes."""
+        return (self.packed.astype(jnp.int32)
+                & (2 ** _SIGN_BIT - 1)).astype(jnp.float32)
+
+    def gates(self) -> jax.Array:
+        """(K, N) float32 {0,1} step(w) sign gates."""
+        return ((self.packed.astype(jnp.int32) >> _SIGN_BIT)
+                & 1).astype(jnp.float32)
 
 
 class ProgrammedMacro(NamedTuple):
@@ -82,7 +146,7 @@ class ProgrammedMacro(NamedTuple):
     sw: jax.Array                          # calibrated weight scale
     sx: jax.Array                          # STATIC activation scale
     r_w: jax.Array                         # (1, N) digital |w| residue
-    state: Optional[CimWeightState]        # einsum-path chunked state
+    state: Optional[CimPackedPlanes]       # einsum-path bit-packed state
     kernel: Optional[CimKernelState]       # Pallas-path pre-packed state
     lossless: Optional[CimLosslessState]   # collapsed exact-ADC state
 
@@ -99,7 +163,10 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
     against for its whole service life; ``sw`` defaults to the max-abs
     calibration the on-the-fly path uses. The expensive weight-side work
     (quantise, sign/magnitude split, bitplanes, chunk/kernel packing)
-    happens exactly once, here.
+    happens exactly once, here. Plane-level and lossless states store one
+    byte per cell (magnitude bits + sign gate, :class:`CimPackedPlanes` /
+    :class:`CimLosslessState`); the kernel layout stays int8 — Mosaic
+    wants the cells pre-expanded.
 
     At exactly-lossless ADC design points the collapsed
     :class:`CimLosslessState` is programmed instead of the plane-level
@@ -113,14 +180,17 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
     if cfg.use_kernel:
         ks = cim_program_kernel_state(w, cfg, sw)
         return ProgrammedMacro(sw, sx, ks.r_w, None, ks, None)
+    _check_packable(cfg)
     if prefer_lossless and adc_exactly_lossless(cfg):
         step_w, abs_w, _ = _weight_operands(w, cfg, sw)
         r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
-        ls = CimLosslessState(abs_w.astype(jnp.int8),
-                              step_w.astype(jnp.int8))
+        packed = (abs_w.astype(jnp.int32)
+                  | (step_w.astype(jnp.int32) << _SIGN_BIT))
+        ls = CimLosslessState(packed.astype(jnp.uint8))
         return ProgrammedMacro(sw, sx, r_w, None, None, ls)
     ws = cim_program_weight_state(w, cfg, sw)
-    return ProgrammedMacro(sw, sx, ws.r_w, ws, None, None)
+    return ProgrammedMacro(sw, sx, ws.r_w, pack_weight_state(ws, cfg),
+                           None, None)
 
 
 def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
@@ -134,8 +204,8 @@ def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
     ``cim_mf_recombine``.
     """
     step_x, abs_x, _ = _input_operands(x2, cfg, sx)
-    s1c = step_x @ ls.aw.astype(jnp.float32)                   # (B, N)
-    s2c = abs_x.astype(jnp.float32) @ ls.gw.astype(jnp.float32)
+    s1c = step_x @ ls.magnitudes()                             # (B, N)
+    s2c = abs_x.astype(jnp.float32) @ ls.gates()
     rxc = jnp.sum(abs_x, axis=-1, keepdims=True).astype(jnp.float32)
     return CimPartials(s1c, s2c, rxc, r_w)
 
@@ -158,7 +228,8 @@ def cim_mf_matmul_programmed(x: jax.Array, prog: ProgrammedMacro,
     x2 = x.reshape(-1, K)
     inject = cap_weights is not None or comparator_offset is not None
     if prog.state is not None:
-        parts = cim_input_partials(x2, prog.state, cfg, prog.sx,
+        ws = unpack_weight_state(prog.state, cfg)
+        parts = cim_input_partials(x2, ws, cfg, prog.sx,
                                    cap_weights, comparator_offset)
         y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
     elif inject:
@@ -193,7 +264,7 @@ class ProgrammedLayer(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Whole-model programming (the serve-time entry point).
+# Projection-tree walk shared by programming and the calibration lab.
 # ---------------------------------------------------------------------------
 
 def default_static_sx(cfg: CimConfig,
@@ -205,30 +276,114 @@ def default_static_sx(cfg: CimConfig,
 def _is_projection(node: Any) -> bool:
     """MF projection dicts are exactly those carrying the neuron's alpha."""
     return (isinstance(node, dict) and "w" in node and "alpha" in node
-            and hasattr(node["w"], "ndim") and node["w"].ndim >= 2)
+            and hasattr(node["w"], "ndim") and node["w"].ndim >= 2
+            and hasattr(node["alpha"], "ndim"))
 
 
-def _program_nd(w: jax.Array, cfg: CimConfig, sx) -> ProgrammedMacro:
+def _is_conv_projection(node: Any) -> bool:
+    """Conv projections carry a (kh, kw, Cin, Cout) weight against a
+    per-channel alpha: two extra leading weight axes relative to a
+    (possibly stack-vmapped) linear projection, whose w/alpha ranks always
+    differ by exactly one."""
+    return node["w"].ndim - node["alpha"].ndim == 3
+
+
+_EXPERT_KEYS = ("up", "gate", "down")
+
+
+def _is_expert_bank(node: Any) -> bool:
+    """The MoE expert layout: stacked (E, K, N) arrays per projection role
+    plus the stacked MF alphas (``moe.moe_init``)."""
+    return (isinstance(node, dict) and "alpha_up" in node
+            and all(k in node and hasattr(node[k], "ndim")
+                    and node[k].ndim >= 3 for k in _EXPERT_KEYS))
+
+
+def map_projections(params: Any, fn: Callable[[str, dict, str], dict]) -> Any:
+    """Rebuild a parameter tree, transforming every MF projection.
+
+    ``fn(name, node, kind)`` is called with a stable dotted path name
+    (dict keys / sequence indices joined by '.'), the projection dict, and
+    ``kind`` in {'linear', 'conv', 'experts'}; its return value replaces
+    the node. Non-projection structure is preserved. The same walk (and
+    therefore the same names) drives both scale programming here and the
+    calibration observers in ``repro.calib`` — names line up by
+    construction.
+    """
+    def walk(node, path):
+        if _is_expert_bank(node):
+            return fn(".".join(path), node, "experts")
+        if _is_projection(node):
+            kind = "conv" if _is_conv_projection(node) else "linear"
+            return fn(".".join(path), node, kind)
+        if isinstance(node, dict):
+            return {k: walk(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v, path + (str(i),))
+                         for i, v in enumerate(node))
+        if isinstance(node, list):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+        return node
+
+    return walk(params, ())
+
+
+def iter_projections(params: Any) -> list[tuple[str, dict, str]]:
+    """List (name, node, kind) for every MF projection in ``params``."""
+    found: list[tuple[str, dict, str]] = []
+
+    def collect(name, node, kind):
+        found.append((name, node, kind))
+        return node
+
+    map_projections(params, collect)
+    return found
+
+
+def conv_weight_matrix(w: jax.Array) -> jax.Array:
+    """(kh, kw, Cin, Cout) conv weight -> the (Cin*kh*kw, Cout) im2col
+    matmul operand, matching ``convnets.conv_apply``'s patch layout."""
+    kh, kw, cin, cout = w.shape
+    return jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model programming (the serve-time entry point).
+# ---------------------------------------------------------------------------
+
+def _program_nd(w: jax.Array, cfg: CimConfig, sx: jax.Array
+                ) -> ProgrammedMacro:
     """Program a (..., K, N) weight, vmapping over stacked leading axes
     (scan periods, experts) so programmed leaves slice exactly like the
-    parameter leaves they shadow."""
+    parameter leaves they shadow; ``sx`` carries one scale per stacked
+    instance (shape = the leading axes)."""
     if w.ndim == 2:
         return program_macro(w, cfg, sx=sx)
-    return jax.vmap(lambda wi: _program_nd(wi, cfg, sx))(w)
+    return jax.vmap(lambda wi, si: _program_nd(wi, cfg, si))(w, sx)
 
 
 def program_weights(params: Any, cfg: CimConfig, *,
-                    act_amax: float = DEFAULT_ACT_AMAX) -> Any:
+                    act_amax: float = DEFAULT_ACT_AMAX,
+                    scales: Optional[dict] = None) -> Any:
     """Program every MF projection in a model parameter tree.
 
     Returns a copy of ``params`` where each projection dict gains a
     ``"prog"`` entry (a :class:`ProgrammedMacro`, possibly with stacked
-    leading axes). ``apply_projection`` then serves CIM_SIM projections
-    from the programmed state with no per-step weight-side work. Non-dict
-    projection layouts (e.g. the MoE expert arrays) keep the on-the-fly
-    path — see ROADMAP open items.
+    leading axes); MoE expert banks gain ``"prog_up"/"prog_gate"/
+    "prog_down"`` and conv projections a ``"prog"`` over the im2col
+    operand. ``apply_projection`` / ``conv_apply`` / ``_expert_ffn`` then
+    serve CIM_SIM projections from the programmed state with no per-step
+    weight-side work.
+
+    ``scales`` maps projection names (the :func:`map_projections` dotted
+    paths; expert banks use ``<name>.up/gate/down``) to static activation
+    scales — a scalar, or an array over the stacked leading axes (scan
+    periods, experts) for per-instance calibration. Unnamed projections
+    fall back to the full-scale ``act_amax`` assumption. Calibration
+    artifacts from ``repro.calib`` produce exactly this mapping.
     """
-    sx = jnp.float32(default_static_sx(cfg, act_amax))
+    default_sx = jnp.float32(default_static_sx(cfg, act_amax))
+    scales = scales or {}
     if cfg.use_kernel and cfg.m_columns > 0:
         # Fail early with the pack_chunks precondition rather than deep in
         # a traced program.
@@ -238,27 +393,40 @@ def program_weights(params: Any, cfg: CimConfig, *,
                 f"m_columns={cfg.m_columns} > CHUNK_PAD={CHUNK_PAD}: the "
                 f"kernel layout cannot hold this µArray geometry")
 
-    def walk(node):
-        if _is_projection(node):
-            out = dict(node)
-            out["prog"] = _program_nd(node["w"], cfg, sx)
-            return out
-        if isinstance(node, dict):
-            return {k: walk(v) for k, v in node.items()}
-        if isinstance(node, tuple):
-            return tuple(walk(v) for v in node)
-        if isinstance(node, list):
-            return [walk(v) for v in node]
-        return node
+    def sx_for(name: str, w: jax.Array) -> jax.Array:
+        sx = scales.get(name, default_sx)
+        return jnp.broadcast_to(jnp.asarray(sx, jnp.float32), w.shape[:-2])
 
-    return walk(params)
+    def prog(name, node, kind):
+        out = dict(node)
+        if kind == "experts":
+            for key in _EXPERT_KEYS:
+                w = node[key]
+                out[f"prog_{key}"] = _program_nd(
+                    w, cfg, sx_for(f"{name}.{key}", w))
+        elif kind == "conv":
+            w2 = conv_weight_matrix(node["w"])
+            out["prog"] = program_macro(
+                w2, cfg, sx=jnp.asarray(scales.get(name, default_sx),
+                                        jnp.float32))
+        else:
+            out["prog"] = _program_nd(node["w"], cfg,
+                                      sx_for(name, node["w"]))
+        return out
+
+    return map_projections(params, prog)
+
+
+def _is_prog_key(k: Any) -> bool:
+    return isinstance(k, str) and (k == "prog" or k.startswith("prog_"))
 
 
 def strip_programmed(params: Any) -> Any:
-    """Inverse of :func:`program_weights` (drop every ``"prog"`` entry)."""
+    """Inverse of :func:`program_weights` (drop every programmed entry)."""
     def walk(node):
         if isinstance(node, dict):
-            return {k: walk(v) for k, v in node.items() if k != "prog"}
+            return {k: walk(v) for k, v in node.items()
+                    if not _is_prog_key(k)}
         if isinstance(node, tuple):
             return tuple(walk(v) for v in node)
         if isinstance(node, list):
@@ -267,20 +435,68 @@ def strip_programmed(params: Any) -> Any:
     return walk(params)
 
 
-def programmed_bytes(params: Any) -> int:
-    """Total bytes held by programmed state in a parameter tree."""
-    total = 0
+def _walk_programmed(params: Any, fn: Callable[[Any], None]) -> None:
+    """Call ``fn`` on every programmed entry in a parameter tree."""
     def walk(node):
-        nonlocal total
         if isinstance(node, dict):
             for k, v in node.items():
-                if k == "prog":
-                    total += sum(leaf.size * leaf.dtype.itemsize
-                                 for leaf in jax.tree.leaves(v))
+                if _is_prog_key(k):
+                    fn(v)
                 else:
                     walk(v)
         elif isinstance(node, (tuple, list)):
             for v in node:
                 walk(v)
     walk(params)
+
+
+def programmed_bytes(params: Any) -> int:
+    """Total bytes held by programmed state in a parameter tree."""
+    total = 0
+
+    def count(v):
+        nonlocal total
+        total += sum(leaf.size * leaf.dtype.itemsize
+                     for leaf in jax.tree.leaves(v))
+
+    _walk_programmed(params, count)
+    return total
+
+
+def programmed_bytes_unpacked(params: Any, cfg: CimConfig) -> int:
+    """Bytes the same programmed state would occupy WITHOUT bit-packing.
+
+    The pre-packing layouts held one int8 per µArray plane-cell plus one
+    int8 sign-gate cell (plane-level state: ``w_planes + 1`` bytes per
+    cell) and separate int8 magnitude/gate arrays for the lossless
+    collapse (2 bytes per cell). Kernel-layout state is not packed, so it
+    counts as-is. The ratio against :func:`programmed_bytes` is the
+    packing win tracked in ``BENCH_serve.json``.
+    """
+    total = 0
+
+    def count(v):
+        nonlocal total
+
+        def one(pm):
+            nonlocal total
+            for leaf in jax.tree.leaves((pm.sw, pm.sx, pm.r_w)):
+                total += leaf.size * leaf.dtype.itemsize
+            if pm.state is not None:
+                total += pm.state.packed.size * (cfg.w_planes + 1)
+                total += pm.state.r_w.size * pm.state.r_w.dtype.itemsize
+            if pm.lossless is not None:
+                total += pm.lossless.packed.size * 2
+            if pm.kernel is not None:
+                total += sum(leaf.size * leaf.dtype.itemsize
+                             for leaf in jax.tree.leaves(pm.kernel))
+
+        if isinstance(v, ProgrammedMacro):
+            one(v)
+        elif isinstance(v, ProgrammedLayer):
+            for row in v.tiles:
+                for pm in row:
+                    one(pm)
+
+    _walk_programmed(params, count)
     return total

@@ -25,9 +25,10 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.calib import tap as _calib_tap
 from repro.core.cim import CimConfig
 from repro.core.mapping import LayerStat
-from repro.core.mf import ExecMode, mf_conv2d, mf_matmul
+from repro.core.mf import ExecMode, mf_conv2d, mf_correlate_ref, mf_matmul
 from repro.core import cim as cim_mod
 from repro.models import blocks
 
@@ -49,6 +50,17 @@ def conv_apply(p: dict, x: jax.Array, mode: ExecMode | str, *,
                ) -> jax.Array:
     mode = ExecMode(mode)
     w = p["w"]
+    if (_calib_tap.stats_active() and mode != ExecMode.REGULAR
+            and groups == 1 and "obs_id" in p):
+        # The CIM operand is the im2col patch matrix; patches are copies
+        # of x entries (plus SAME-padding zeros), so record the patches
+        # the input DAC will actually quantise.
+        kh, kw_, cin, _ = w.shape
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (kh, kw_), stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        _calib_tap.record_activation(p["obs_id"],
+                                     patches.reshape(-1, cin * kh * kw_))
     if mode == ExecMode.BNN:
         # binarized weights, straight-through gradient (Table I baseline)
         from repro.core.mf import hw_sign
@@ -67,14 +79,26 @@ def conv_apply(p: dict, x: jax.Array, mode: ExecMode | str, *,
     elif mode in (ExecMode.MF, ExecMode.MF_KERNEL):
         y = mf_conv2d(x, w, stride=stride, padding=padding)
     else:  # CIM_SIM
+        from repro.core.programmed import conv_weight_matrix
         kh, kw_, cin, cout = w.shape
         patches = jax.lax.conv_general_dilated_patches(
             x, (kh, kw_), stride, padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw_, cout)
+        w2 = conv_weight_matrix(w)
         b, oh, ow, _ = patches.shape
         flat = patches.reshape(-1, cin * kh * kw_)
-        y = cim_mod.cim_mf_matmul_ste(flat, w2, cim_cfg or CimConfig())
+        prog = p.get("prog")
+        if prog is not None:
+            # Weight-stationary: program_weights programmed this same
+            # conv_weight_matrix operand once — step-time input work only.
+            from repro.core.programmed import cim_mf_matmul_programmed
+            y = cim_mf_matmul_programmed(flat, prog,
+                                         cim_cfg or CimConfig())
+        else:
+            y = cim_mod.cim_mf_matmul_ste(flat, w2, cim_cfg or CimConfig())
+        if _calib_tap.error_active():
+            _calib_tap.record_projection_error(
+                p.get("obs_id"), y, mf_correlate_ref(flat, w2, hw=True))
         y = y.reshape(b, oh, ow, cout)
     if mode != ExecMode.REGULAR and "alpha" in p:
         y = y * p["alpha"]

@@ -76,16 +76,37 @@ def _router(p: dict, x2: jax.Array, top_k: int
     return weights, ids, aux
 
 
+def _sel(v, idx):
+    """Index a leading-E-stacked value (array or pytree, e.g. a
+    ProgrammedMacro); the full slice means 'already sliced, use as-is' —
+    which also keeps 0-d leaves (observer ids inside a scan) legal."""
+    if isinstance(idx, slice) and idx == slice(None):
+        return v
+    return jax.tree.map(lambda a: a[idx], v)
+
+
 def _expert_ffn(experts: dict, idx_or_slice, h: jax.Array,
                 mode: ExecMode | str, **kw) -> jax.Array:
-    """Apply expert FFN(s). h: (..., d); expert params indexed by leading E."""
-    up = {"w": experts["up"][idx_or_slice]}
-    gate = {"w": experts["gate"][idx_or_slice]}
-    down = {"w": experts["down"][idx_or_slice]}
+    """Apply expert FFN(s). h: (..., d); expert params indexed by leading E.
+
+    Programmed state (``core.programmed.program_weights`` attaches
+    ``prog_up/gate/down`` to the expert bank) and calibration observer ids
+    (``obs_id_up/...``) thread through to the per-role projection dicts,
+    so MoE experts serve weight-stationary and calibrate exactly like
+    every other projection.
+    """
+    up = {"w": _sel(experts["up"], idx_or_slice)}
+    gate = {"w": _sel(experts["gate"], idx_or_slice)}
+    down = {"w": _sel(experts["down"], idx_or_slice)}
     if "alpha_up" in experts:
-        up["alpha"] = experts["alpha_up"][idx_or_slice]
-        gate["alpha"] = experts["alpha_up"][idx_or_slice]
-        down["alpha"] = experts["alpha_down"][idx_or_slice]
+        up["alpha"] = _sel(experts["alpha_up"], idx_or_slice)
+        gate["alpha"] = _sel(experts["alpha_up"], idx_or_slice)
+        down["alpha"] = _sel(experts["alpha_down"], idx_or_slice)
+    for role, d in (("up", up), ("gate", gate), ("down", down)):
+        if f"prog_{role}" in experts:
+            d["prog"] = _sel(experts[f"prog_{role}"], idx_or_slice)
+        if f"obs_id_{role}" in experts:
+            d["obs_id"] = _sel(experts[f"obs_id_{role}"], idx_or_slice)
     z = (jax.nn.silu(blocks.proj_apply(gate, h, mode, **kw))
          * blocks.proj_apply(up, h, mode, **kw))
     return blocks.proj_apply(down, z, mode, **kw)

@@ -61,7 +61,7 @@ class Request:
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
-                 seed: int = 0, program: bool = True):
+                 seed: int = 0, program: bool = True, calibration=None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -70,11 +70,37 @@ class ServeEngine:
         # Weight-stationary programming: freeze every CIM projection's
         # macro state now so the jitted step does input-side work only.
         # ``program=False`` keeps the legacy on-the-fly path (benchmarks).
+        # ``calibration`` (a repro.calib CalibrationArtifact, or a path to
+        # a saved one) programs its measured per-projection activation
+        # scales instead of the static full-scale default.
         self._exec_params = params
         self.programmed = False
-        if program and cfg.mf.enabled and cfg.mf.mode == "cim_sim":
+        self.calibration = None
+        programmable = (program and cfg.mf.enabled
+                        and cfg.mf.mode == "cim_sim")
+        if calibration is not None and not programmable:
+            raise ValueError(
+                "a calibration artifact was supplied but the engine is not "
+                "programming CIM macros (program=False or the config does "
+                "not map projections to cim_sim) — the scales would be "
+                "silently dropped")
+        if programmable:
             from repro.core.programmed import program_weights
-            self._exec_params = program_weights(params, cfg.mf.cim)
+            scales = None
+            if calibration is not None:
+                from repro.calib.artifact import CalibrationArtifact
+                if not isinstance(calibration, CalibrationArtifact):
+                    calibration = CalibrationArtifact.load(calibration)
+                if calibration.x_bits != cfg.mf.cim.x_bits:
+                    raise ValueError(
+                        f"calibration artifact is for x_bits="
+                        f"{calibration.x_bits}, model runs x_bits="
+                        f"{cfg.mf.cim.x_bits}")
+                _check_calibration_names(params, calibration)
+                scales = calibration.scales
+                self.calibration = calibration
+            self._exec_params = program_weights(params, cfg.mf.cim,
+                                                scales=scales)
             self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
         self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
@@ -87,17 +113,32 @@ class ServeEngine:
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.requests) if r is None]
 
-    def submit(self, req: Request) -> bool:
+    def submit_many(self, reqs: list[Request]) -> int:
+        """Admit up to ``len(free_slots)`` requests in ONE jitted scatter.
+
+        Multi-slot admission waves (engine start, post-completion refills)
+        previously paid one ``_reset_slot`` dispatch per request; all
+        admitted slots now reset through a single ``_reset_slots`` call
+        whose slot vector is padded to a fixed length (repeating the first
+        slot — idempotent zeroing), so every wave reuses one compiled
+        program. Returns the number of requests admitted.
+        """
         free = self.free_slots
-        if not free:
-            return False
-        s = free[0]
-        self.requests[s] = req
-        self._feed[s] = req.prompt[0]
-        self._prompt_left[s] = len(req.prompt) - 1
-        # reset the slot's cache position
-        self.cache = _reset_slot(self.cache, s)
-        return True
+        take = reqs[:len(free)]
+        if not take:
+            return 0
+        sel = free[:len(take)]
+        for s, req in zip(sel, take):
+            self.requests[s] = req
+            self._feed[s] = req.prompt[0]
+            self._prompt_left[s] = len(req.prompt) - 1
+        pad = np.full((self.slots,), sel[0], np.int32)
+        pad[:len(sel)] = sel
+        self.cache = _reset_slots(self.cache, jnp.asarray(pad))
+        return len(take)
+
+    def submit(self, req: Request) -> bool:
+        return self.submit_many([req]) == 1
 
     def step(self) -> None:
         """One engine tick: decode every occupied slot by one token."""
@@ -137,8 +178,9 @@ class ServeEngine:
         ticks = 0
         while (pending or any(r is not None for r in self.requests)) \
                 and ticks < max_ticks:
-            while pending and self.free_slots:
-                self.submit(pending.pop(0))
+            if pending and self.free_slots:
+                admitted = self.submit_many(pending)
+                del pending[:admitted]
             before = [r for r in self.requests]
             self.step()
             for r in before:
@@ -156,14 +198,51 @@ class ServeEngine:
         return done
 
 
+def _check_calibration_names(params, calibration) -> None:
+    """Fail loudly when an artifact's projection names don't belong to
+    this model — otherwise every scale lookup would miss and the engine
+    would serve the static full-scale default while claiming to be
+    calibrated."""
+    from repro.core.programmed import iter_projections
+    expected: set[str] = set()
+    for name, _, kind in iter_projections(params):
+        if kind == "experts":
+            expected.update(f"{name}.{k}" for k in ("up", "gate", "down"))
+        else:
+            expected.add(name)
+    unknown = set(calibration.scales) - expected
+    if unknown or not (set(calibration.scales) & expected):
+        raise ValueError(
+            f"calibration artifact does not match this model's "
+            f"projections (unknown names: {sorted(unknown)[:5]}; model "
+            f"has {len(expected)} projections) — was it calibrated for a "
+            f"different config?")
+
+
+@partial(jax.jit, donate_argnums=0)
+def _reset_slots(cache, slots):
+    """Zero a VECTOR of slots' positions in one on-device scatter.
+
+    ``slots`` is an int32 vector (duplicates allowed — zeroing is
+    idempotent, which is what lets ``submit_many`` pad admission waves to
+    a fixed length and reuse one compiled program). The cache argument is
+    donated — callers always rebind (``cache = _reset_slots(cache, s)``),
+    so the untouched KV leaves alias in place instead of being copied per
+    admission."""
+    def fix(path, v):
+        last = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if last in ("len", "pos"):
+            if v.ndim == 1:
+                return v.at[slots].set(0)
+            return v.at[:, slots].set(0)
+        return v
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
 @partial(jax.jit, donate_argnums=0)
 def _reset_slot(cache, slot):
-    """Zero one slot's positions, on device (no host round trip: a jitted
-    ``.at[..., slot].set(0)`` tree-map instead of numpy cache surgery).
-
-    The cache argument is donated — callers always rebind
-    (``cache = _reset_slot(cache, s)``), so the untouched KV leaves alias
-    in place instead of being copied per admission."""
+    """Single-slot variant of :func:`_reset_slots` (kept for callers that
+    admit one request outside a wave)."""
     def fix(path, v):
         last = str(path[-1].key) if hasattr(path[-1], "key") else ""
         if last in ("len", "pos"):

@@ -277,3 +277,77 @@ class TestServeEngine:
         out = _reset_slot(cache, 1)
         pos = np.asarray(out["pos"])
         np.testing.assert_array_equal(pos, [5, 0, 5])
+
+
+class TestBitPackedState:
+    """ISSUE 3 satellite: plane-level programmed state packs 8 bitplane
+    cells per byte (sign gate in bit 7); the lossless collapse packs
+    magnitude+sign into one byte per (K, N) cell. Unpacking is exact."""
+
+    def test_pack_unpack_round_trip(self):
+        from repro.core.cim import cim_program_weight_state
+        from repro.core.programmed import (pack_weight_state,
+                                           unpack_weight_state)
+        cfg = CimConfig(8, 8, 5, 31)
+        w = jax.random.normal(jax.random.PRNGKey(0), (70, 9))
+        sw = quant.calibrate_scale(w, cfg.w_bits)
+        ws = cim_program_weight_state(w, cfg, sw)
+        packed = pack_weight_state(ws, cfg)
+        assert packed.packed.dtype == jnp.uint8
+        back = unpack_weight_state(packed, cfg)
+        np.testing.assert_array_equal(np.asarray(ws.wt),
+                                      np.asarray(back.wt))
+        np.testing.assert_array_equal(np.asarray(ws.gwt),
+                                      np.asarray(back.gwt))
+        np.testing.assert_array_equal(np.asarray(ws.r_w),
+                                      np.asarray(back.r_w))
+
+    def test_plane_state_bytes_drop_8x(self):
+        from repro.core.programmed import (programmed_bytes,
+                                           programmed_bytes_unpacked)
+        cfg = CimConfig(8, 8, 4, 31)    # non-lossless -> plane-level state
+        w = jax.random.normal(jax.random.PRNGKey(0), (124, 16))
+        p = {"w": w, "alpha": jnp.ones((16,))}
+        pp = program_weights({"proj": p}, cfg)
+        prog = pp["proj"]["prog"]
+        assert prog.state is not None and prog.lossless is None
+        packed = programmed_bytes(pp)
+        unpacked = programmed_bytes_unpacked(pp, cfg)
+        # cell tensors shrink exactly (w_planes + 1)x = 8x at W_P=8; the
+        # small f32 residues dilute the whole-state ratio slightly.
+        cells = prog.state.packed.size
+        assert unpacked - packed == cells * (cfg.w_planes + 1) - cells
+        assert unpacked / packed > 6.0
+
+    def test_lossless_state_bytes_drop_2x(self):
+        from repro.core.programmed import (programmed_bytes,
+                                           programmed_bytes_unpacked)
+        cfg = CimConfig(8, 8, 5, 31)    # lossless collapse
+        w = jax.random.normal(jax.random.PRNGKey(0), (124, 16))
+        p = {"w": w, "alpha": jnp.ones((16,))}
+        pp = program_weights({"proj": p}, cfg)
+        prog = pp["proj"]["prog"]
+        assert prog.lossless is not None
+        assert prog.lossless.packed.dtype == jnp.uint8
+        assert (programmed_bytes_unpacked(pp, cfg) - programmed_bytes(pp)
+                == prog.lossless.packed.size)
+
+    def test_packed_magnitudes_and_gates_recover(self):
+        from repro.core.cim import _weight_operands
+        cfg = CimConfig(8, 8, 5, 31)
+        w = jax.random.normal(jax.random.PRNGKey(1), (45, 7))
+        sw = quant.calibrate_scale(w, cfg.w_bits)
+        step_w, abs_w, _ = _weight_operands(w, cfg, sw)
+        prog = program_macro(w, cfg, sx=0.02)
+        np.testing.assert_array_equal(
+            np.asarray(prog.lossless.magnitudes()),
+            np.asarray(abs_w).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(prog.lossless.gates()),
+            np.asarray(step_w).astype(np.float32))
+
+    def test_w_bits_over_8_rejected(self):
+        cfg = CimConfig(9, 8, 5, 31)
+        w = jax.random.normal(jax.random.PRNGKey(0), (40, 4))
+        with pytest.raises(ValueError, match="w_bits"):
+            program_macro(w, cfg, sx=0.02)
