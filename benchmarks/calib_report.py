@@ -7,8 +7,11 @@ For each evaluation model (the qwen3 smoke LM with every projection on
      calibration corpus (one observe pass, float MF reference forward),
   2. programs the model four ways — static full-scale ``act_amax=4.0``
      (the PR 2 default) and the three corpus-driven policies (amax /
-     percentile / MSE-optimal) — at BOTH paper ADC design points
-     (8x62 -> 5-bit, 8x30 -> 4-bit),
+     percentile / MSE-optimal) — at both paper ADC design points
+     (8x62 -> 5-bit, 8x30 -> 4-bit, exactly lossless) AND two non-lossless
+     points where real ADC quantisation error is in play: A_P=6 at M=31
+     (moderate rounding noise, gated) and A_P=4 at M=31 (noise-dominated,
+     reported as a diagnostic only — see ``UNGATED_DESIGNS``),
   3. measures each against the fp32 MF reference on held-out batches:
      end-to-end logits error (relative L2), top-1 agreement, and
      per-projection SQNR through the error tap,
@@ -42,15 +45,29 @@ from repro.calib.report import accuracy_report, lm_ref_config
 from repro.configs.base import MFTechniqueConfig
 from repro.configs.qwen3_0_6b import SMOKE
 from repro.core.cim import CimConfig
-from repro.core.programmed import (DEFAULT_ACT_AMAX, default_static_sx,
-                                   program_weights)
+from repro.core.programmed import (DEFAULT_ACT_AMAX, adc_exactly_lossless,
+                                   default_static_sx, program_weights)
 from repro.data.synthetic import DataConfig, image_batch, lm_batch
 from repro.models import convnets as C
 from repro.models import transformer as T
 
 OUT_PATH = os.environ.get("BENCH_CALIB_OUT", "BENCH_calib.json")
 
-DESIGNS = ((31, 5), (15, 4))          # (m_columns, adc_bits) paper points
+# (m_columns, adc_bits) design points: the two paper pairings are exactly
+# lossless (2^A_P - 1 == M: ADC code == discharge count), so their cells
+# coincide by the lossless identity and never exercise real ADC
+# quantisation. The third point (A_P=6 at M=31) is deliberately NOT
+# lossless — 63 ADC levels digitising 31-column charge averages round
+# every non-trivial count — so calibration there interacts with genuine
+# ADC quantisation error (SQNR drops ~14 dB vs the lossless points) and
+# the calibrated-beats-static gate covers it.
+DESIGNS = ((31, 5), (15, 4), (31, 6))
+# Diagnostic-only design points, reported but NOT gated: A_P=4 at M=31
+# (the severely under-provisioned ADC) is so lossy that outputs are
+# rounding-noise dominated (rel_l2 > 1, SQNR ~3-5 dB) — no activation
+# scale policy reliably beats another inside pure ADC noise, which is
+# itself a finding worth keeping on the record.
+UNGATED_DESIGNS = ((31, 4),)
 METHODS = ("static", "amax", "percentile", "mse")
 
 
@@ -140,6 +157,7 @@ def run(quick: bool = True):
         "act_amax_static": DEFAULT_ACT_AMAX,
         "methods": list(METHODS),
         "designs": [f"{m}x{a}" for m, a in DESIGNS],
+        "ungated_designs": [f"{m}x{a}" for m, a in UNGATED_DESIGNS],
         "configs": {},
     }
     obs_cfg = ObserverConfig()
@@ -153,7 +171,8 @@ def run(quick: bool = True):
         rows.append((f"calib_collect_{setup.name}", collect_us,
                      f"projections={registry.n_ids}"))
         per_design = {}
-        for m, a in DESIGNS:
+        for m, a in DESIGNS + UNGATED_DESIGNS:
+            gated = (m, a) in DESIGNS
             cim = CimConfig(w_bits=8, x_bits=8, adc_bits=a, m_columns=m)
             cim_fwd = setup.cim_forward_builder(cim)
             cells = {}
@@ -178,7 +197,8 @@ def run(quick: bool = True):
                        key=lambda c: c["rel_l2"])
             improved = (best["rel_l2"] < static["rel_l2"]
                         and best["mean_sqnr_db"] > static["mean_sqnr_db"])
-            all_improved = all_improved and improved
+            if gated:
+                all_improved = all_improved and improved
             # Parity gate: the static default programmed THROUGH the
             # scales hook is the identical computation.
             prog_a = program_weights(tagged, cim)
@@ -191,6 +211,8 @@ def run(quick: bool = True):
                 np.asarray(setup.cim_forward_builder(cim)(prog_b, batch0))))
             per_design[f"{m}x{a}"] = {
                 "cells": cells,
+                "adc_exactly_lossless": adc_exactly_lossless(cim),
+                "gated": gated,
                 "calibrated_beats_static": improved,
                 "static_scales_parity": parity,
             }

@@ -1,11 +1,18 @@
-"""Decode throughput: programmed (weight-stationary) vs legacy CIM serving.
+"""Serving benchmarks: programmed decode, batched prefill, reprogram cost.
 
-Spins up two ``ServeEngine`` instances on the qwen3 config with every MF
-projection mapped to ``cim_sim`` — one programmed at construction
-(weights frozen into macro state, step does input-side work only) and one
-on the legacy on-the-fly path (recalibrate/requantise/bitplane/pack every
-step) — fills all slots with decode-bound requests, and measures
-steady-state decode tokens/sec.
+Three sections on the qwen3 config with every MF projection mapped to
+``cim_sim``:
+
+  * **decode** — programmed (weight-stationary) vs legacy on-the-fly CIM
+    serving: steady-state decode tokens/sec (PR 2's >= 2x gate).
+  * **prefill** — batched programmed prefill (one (B, T) forward per
+    admission wave, the T > 1 prompt axis folded into the collapsed
+    step-time matmuls) vs prefill-as-decode (one decode step per prompt
+    token): prompt-ingestion tokens/sec, gated >= 2x.
+  * **reprogram** — the same model served from a fleet too small to pin
+    it: round-interleaved decode (``rounds > 1``) must produce bit-exact
+    tokens vs the pinned path, and the run's ``ServeReport`` charges
+    every reprogram event against the Eq. 4 roll-up (reload bits / nJ).
 
 Emits ``BENCH_serve.json`` (the serving perf trajectory anchor) and the
 ``benchmarks/run.py`` CSV rows.
@@ -24,6 +31,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compiler.tiling import Fleet
 from repro.configs.base import MFTechniqueConfig
 from repro.configs.qwen3_0_6b import SMOKE
 from repro.core.cim import CimConfig
@@ -65,6 +73,33 @@ def _decode_tok_per_s(engine: ServeEngine, ticks: int, warmup: int = 3,
     return engine.slots * ticks / float(np.median(times))
 
 
+def _prompt_tok_per_s(engine: ServeEngine, prompt_len: int, reps: int = 3
+                      ) -> float:
+    """Median prompt-ingestion throughput (prompt tokens/sec) over full
+    ``run()`` waves of ``slots`` requests with one generated token each."""
+    import numpy as np
+
+    def one_wave():
+        reqs = [Request(prompt=list(range(1, prompt_len + 1)),
+                        max_new_tokens=1) for _ in range(engine.slots)]
+        t0 = time.perf_counter()
+        done = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in done)
+        return dt
+
+    one_wave()                                    # warmup (compile)
+    times = [one_wave() for _ in range(reps)]
+    return engine.slots * (prompt_len - 1) / float(np.median(times))
+
+
+def _greedy_tokens(engine: ServeEngine, prompt: list[int], n: int,
+                   n_reqs: int) -> list[list[int]]:
+    done = engine.run([Request(prompt=list(prompt), max_new_tokens=n)
+                       for _ in range(n_reqs)])
+    return [r.out for r in done]
+
+
 def run(quick: bool = True):
     cfg = _serve_cfg(quick)
     params = T.lm_init(jax.random.PRNGKey(0), cfg)
@@ -92,6 +127,57 @@ def run(quick: bool = True):
     legacy_tok_s = _decode_tok_per_s(legacy_eng, ticks, warmup, reps)
     speedup = prog_tok_s / legacy_tok_s if legacy_tok_s else 0.0
 
+    # ---- batched programmed prefill vs prefill-as-decode -----------------
+    prompt_len = 33 if quick else 65              # 32 / 64 prefill tokens
+    pre_len = prompt_len + 8
+    pre_batched = ServeEngine(params, cfg, slots=slots, max_len=pre_len)
+    pre_decode = ServeEngine(params, cfg, slots=slots, max_len=pre_len,
+                             batched_prefill=False)
+    assert pre_batched.batched_prefill and not pre_decode.batched_prefill
+    batched_ptok_s = _prompt_tok_per_s(pre_batched, prompt_len, reps)
+    decode_ptok_s = _prompt_tok_per_s(pre_decode, prompt_len, reps)
+    prefill_speedup = batched_ptok_s / decode_ptok_s if decode_ptok_s \
+        else 0.0
+    # Acceptance gate: batched prefill must at least double prompt
+    # ingestion over paying one decode step per token.
+    assert prefill_speedup >= 2.0, (
+        f"batched prefill speedup {prefill_speedup:.2f}x < 2x "
+        f"({batched_ptok_s:.1f} vs {decode_ptok_s:.1f} prompt tok/s)")
+
+    # ---- round-interleaved serving on a fleet too small to pin -----------
+    cim = cfg.mf.cim
+    swap_fleet = Fleet(n_macros=64 if quick else 1024, cfg=cim)
+    swap_eng = ServeEngine(params, cfg, slots=slots, max_len=16,
+                           fleet=swap_fleet, batched_prefill=False)
+    sched = swap_eng.schedule
+    pinned_fleet = Fleet(n_macros=-(-sched.total_tiles // 2), cfg=cim)
+    pin_eng = ServeEngine(params, cfg, slots=slots, max_len=16,
+                          fleet=pinned_fleet, batched_prefill=False)
+    assert pin_eng.schedule.pinned and not sched.pinned
+    assert sched.rounds_max > 1, (
+        f"fleet {swap_fleet.n_macros} macros did not force rounds > 1")
+    # The executed datapath really is round-interleaved: every projection
+    # the swap engine serves carries SwappedMacro state (apply_projection
+    # dispatches on it), while the pinned engine holds resident macros.
+    from repro.core.programmed import SwappedMacro, iter_projections
+    swap_progs = [n["prog"] for _, n, _ in
+                  iter_projections(swap_eng._exec_params)]
+    assert swap_progs and all(isinstance(p, SwappedMacro)
+                              for p in swap_progs)
+    assert not any(isinstance(n.get("prog"), SwappedMacro) for _, n, _ in
+                   iter_projections(pin_eng._exec_params))
+    n_new = 4
+    pin_out = _greedy_tokens(pin_eng, [1, 2, 3], n_new, slots)
+    t0 = time.perf_counter()
+    swap_out = _greedy_tokens(swap_eng, [1, 2, 3], n_new, slots)
+    swap_dt = time.perf_counter() - t0
+    bit_exact = swap_out == pin_out
+    assert bit_exact, "round-interleaved decode diverged from pinned path"
+    rep = swap_eng.last_report
+    assert rep.streams > 0 and rep.reprogram_events > 0
+    pin_rep = pin_eng.last_report
+    assert pin_rep.reprogram_events == 0 and pin_rep.reload_bits == 0
+
     payload = {
         "bench": "serve_decode",
         "config": cfg.name,
@@ -108,6 +194,30 @@ def run(quick: bool = True):
         "programmed_tok_s": prog_tok_s,
         "legacy_tok_s": legacy_tok_s,
         "speedup": speedup,
+        "prefill": {
+            "prompt_len": prompt_len,
+            "batched_prompt_tok_s": batched_ptok_s,
+            "as_decode_prompt_tok_s": decode_ptok_s,
+            "speedup": prefill_speedup,
+            "gate_2x": prefill_speedup >= 2.0,
+        },
+        "reprogram": {
+            "n_macros": swap_fleet.n_macros,
+            "tile_slots": swap_fleet.tile_slots,
+            "total_tiles": sched.total_tiles,
+            "pinned": sched.pinned,
+            "rounds_max": sched.rounds_max,
+            "reprogram_events_per_stream": sched.total_reprogram_events,
+            "reload_bits_per_stream": sched.total_reload_bits,
+            "streams": rep.streams,
+            "reprogram_events": rep.reprogram_events,
+            "reload_bits": rep.reload_bits,
+            "reload_energy_nj": rep.reload_energy_nj,
+            "reload_s": rep.reload_s,
+            "utilization": rep.utilization,
+            "swapped_tok_s": slots * n_new / swap_dt,
+            "bit_exact_vs_pinned": bit_exact,
+        },
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
@@ -120,6 +230,20 @@ def run(quick: bool = True):
          f"tok_s={legacy_tok_s:.1f}"),
         ("serve_decode_speedup", 0.0,
          f"programmed/legacy={speedup:.2f}x json={OUT_PATH}"),
+        ("serve_prefill_batched", 1e6 / batched_ptok_s,
+         f"prompt_tok_s={batched_ptok_s:.1f}"),
+        ("serve_prefill_as_decode", 1e6 / decode_ptok_s,
+         f"prompt_tok_s={decode_ptok_s:.1f}"),
+        ("serve_prefill_speedup", 0.0,
+         f"batched/as_decode={prefill_speedup:.2f}x gate>=2x"),
+        ("serve_reprogram_rounds", 0.0,
+         f"rounds_max={sched.rounds_max} "
+         f"reprog/stream={sched.total_reprogram_events} "
+         f"reload_bits/stream={sched.total_reload_bits} "
+         f"bit_exact={bit_exact}"),
+        ("serve_reprogram_rollup", 0.0,
+         f"streams={rep.streams} events={rep.reprogram_events} "
+         f"reload={rep.reload_energy_nj:.2f}nJ util={rep.utilization:.2f}"),
     ]
 
 

@@ -169,18 +169,25 @@ def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
     """Replay ``batches`` through ``forward_fn(tagged_params, batch)`` in
     observe mode, returning the filled collector.
 
-    ``forward_fn`` must not be a jit cached OUTSIDE this call: the tap
-    gate and the collector's io_callback are captured at trace time, so a
-    trace cached before (or across) calibration runs would record into
-    the wrong collector — or into none. Plain Python forwards (inner
-    ``lax.scan``/``jit`` created fresh per trace are fine) re-trace per
-    collector. An all-empty collection raises instead of silently
-    producing fallback scales.
+    The observe forward is jitted ONCE here, inside the observing
+    context, so large-corpus calibration traces a single program per
+    batch shape instead of paying eager per-batch (re)tracing of every
+    inner scan — the observation io_callbacks are staged into the traced
+    program and fire per execution. The jit is created fresh per
+    ``collect_stats`` call because the tap gate and the collector are
+    captured at TRACE time: ``forward_fn`` itself must not be a jit
+    cached OUTSIDE this call (a trace cached before — or across —
+    calibration runs would record into the wrong collector, or into
+    none). An all-empty collection raises instead of silently producing
+    fallback scales.
     """
     collector = StatsCollector(registry.n_ids, obs_cfg)
     with tap.observing(collector):
+        # Fresh jit per collector: traces (and stages the callbacks) on
+        # the first batch of each shape, replays compiled thereafter.
+        jitted = jax.jit(lambda p, b: forward_fn(p, b))
         for batch in batches:
-            out = forward_fn(tagged_params, batch)
+            out = jitted(tagged_params, batch)
             jax.block_until_ready(out)
     jax.effects_barrier()
     if registry.n_ids and not np.any(collector.count > 0):

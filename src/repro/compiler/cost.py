@@ -38,6 +38,7 @@ class LayerCost:
     utilization: float          # unit_ops / (n_macros * macro_unit_ops)
     waste_fraction: float       # padded µArray cells
     rounds: int
+    reprogram_events: int = 0   # weight-program events (0 when preloaded)
 
     @property
     def energy_j(self) -> float:
@@ -60,6 +61,7 @@ class FleetCost:
     reload_energy_j: float
     utilization: float
     digital_ops: int = 0        # ops left on the digital fabric
+    reprogram_events: int = 0   # weight-program events per input stream
 
     @property
     def energy_j(self) -> float:
@@ -93,7 +95,8 @@ def layer_cost(sched: LayerSchedule, fleet: Fleet,
         reload_energy_j=sched.reload_bits * fleet.reload_j_per_bit,
         utilization=sched.unit_ops / busy if busy else 0.0,
         waste_fraction=sched.plan.waste_fraction,
-        rounds=sched.rounds)
+        rounds=sched.rounds,
+        reprogram_events=sched.reprogram_events)
 
 
 def rollup(costs: Sequence[LayerCost], fleet: Fleet,
@@ -113,7 +116,8 @@ def rollup(costs: Sequence[LayerCost], fleet: Fleet,
         compute_energy_j=unit_ops * unit_op_energy_j(fleet.cfg, macro),
         reload_energy_j=sum(c.reload_energy_j for c in costs),
         utilization=unit_ops / busy if busy else 0.0,
-        digital_ops=digital_ops)
+        digital_ops=digital_ops,
+        reprogram_events=sum(c.reprogram_events for c in costs))
 
 
 def model_cost(msched: ModelSchedule, macro: MacroParams = DEFAULT_MACRO
@@ -121,3 +125,34 @@ def model_cost(msched: ModelSchedule, macro: MacroParams = DEFAULT_MACRO
     costs = [layer_cost(s, msched.fleet, macro) for s in msched.layers]
     return costs, rollup(costs, msched.fleet, macro,
                          digital_ops=msched.digital_ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeReloadCost:
+    """Eq. 4 reprogramming charge of serving ``streams`` input streams.
+
+    Every stream through a non-pinned model replays the schedule's weight
+    reloads (the fleet holds one working set at a time); pinned models
+    amortise programming to zero in steady state, so all fields are 0.
+    """
+
+    streams: int
+    reprogram_events: int       # schedule events x streams
+    reload_bits: int
+    reload_energy_j: float      # bits x SRAM write energy (Eq. 4b term)
+    reload_s: float             # bits / load-port bandwidth, serialised
+
+
+def serve_reload_cost(msched: ModelSchedule, streams: int) -> ServeReloadCost:
+    """Charge the schedule's reprogram events against ``streams`` decode
+    steps / batched-prefill calls (one stream each)."""
+    if streams < 0:
+        raise ValueError(f"streams must be >= 0, got {streams}")
+    bits = msched.total_reload_bits * streams
+    fleet = msched.fleet
+    return ServeReloadCost(
+        streams=streams,
+        reprogram_events=msched.total_reprogram_events * streams,
+        reload_bits=bits,
+        reload_energy_j=bits * fleet.reload_j_per_bit,
+        reload_s=bits / fleet.reload_bits_per_s)

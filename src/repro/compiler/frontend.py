@@ -11,6 +11,7 @@ blocks, embeddings/heads flagged digital-by-name as in the paper).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 from repro.configs.base import ModelConfig
@@ -57,3 +58,62 @@ def lm_layer_stats(cfg: ModelConfig, tokens: int = 1024,
 
 def total_ops(stats: Sequence[LayerStat]) -> int:
     return sum(s.ops for s in stats)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionGroup:
+    """One named MF projection of a parameter tree (possibly stacked)."""
+
+    name: str               # the map_projections walk name (+ expert role)
+    kind: str               # 'linear' | 'conv' | 'experts'
+    k: int
+    n: int
+    n_instances: int        # stacked leading instances (scan periods, E)
+
+
+def projection_layer_stats(params, *, calls: int = 1
+                           ) -> tuple[list[LayerStat],
+                                      list[ProjectionGroup]]:
+    """Per-INSTANCE layer stats straight from a model parameter tree.
+
+    Unlike :func:`lm_layer_stats` (which prices shapes from a config),
+    this walks the actual parameters via ``core.programmed
+    .iter_projections`` — the very walk scale programming and the serve
+    engine use — so the schedule the engine compiles covers exactly the
+    projections it executes, with names that line up by construction.
+    Stacked layers (scan periods) and MoE experts emit one
+    :class:`LayerStat` per weight instance (each is a separate tile
+    placement on the fleet); ``calls`` is the input vectors streamed per
+    instance per forward (= engine slots for one decode step).
+    """
+    import numpy as np
+
+    from repro.core.programmed import (_EXPERT_KEYS, conv_weight_matrix,
+                                       iter_projections)
+
+    stats: list[LayerStat] = []
+    groups: list[ProjectionGroup] = []
+
+    def add(name: str, kind: str, k: int, n: int, n_inst: int) -> None:
+        groups.append(ProjectionGroup(name, kind, k, n, n_inst))
+        for j in range(n_inst):
+            inst = f"{name}[{j}]" if n_inst > 1 else name
+            stats.append(LayerStat(inst, params=k * n, ops=2 * k * n * calls,
+                                   k=k, n=n))
+
+    for name, node, kind in iter_projections(params):
+        if kind == "experts":
+            for key in _EXPERT_KEYS:
+                w = node[key]
+                k, n = w.shape[-2:]
+                n_inst = int(np.prod(w.shape[:-2], dtype=np.int64))
+                add(f"{name}.{key}", kind, k, n, n_inst)
+        elif kind == "conv":
+            k, n = conv_weight_matrix(node["w"]).shape
+            add(name, kind, k, n, 1)
+        else:
+            w = node["w"]
+            k, n = w.shape[-2:]
+            n_inst = int(np.prod(w.shape[:-2], dtype=np.int64))
+            add(name, kind, k, n, n_inst)
+    return stats, groups

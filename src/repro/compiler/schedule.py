@@ -105,6 +105,22 @@ class ModelSchedule:
         """Weight-program events across the model (0 when pinned)."""
         return sum(s.reprogram_events for s in self.layers)
 
+    @property
+    def total_reload_bits(self) -> int:
+        """µArray weight bits written per input stream (0 when pinned).
+
+        A non-pinned model pays this for EVERY stream it serves: the fleet
+        cannot hold the weights across streams, so each decode step (or
+        batched-prefill call) replays the full reload — the regime where
+        Eq. 4 reload energy dominates (see ``cost.serve_reload_cost``).
+        """
+        return sum(s.reload_bits for s in self.layers)
+
+    @property
+    def rounds_max(self) -> int:
+        """Deepest weight-swap round count of any layer."""
+        return max((s.rounds for s in self.layers), default=0)
+
 
 def compile_model(stats: Sequence[LayerStat], fleet: Fleet,
                   policy: Optional[MappingPolicy] = None) -> ModelSchedule:

@@ -233,9 +233,7 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
         codes2 = adc(counts2 / inv)                              # (C, Px, B, N)
         s2c = jnp.einsum("cqbn,q->bn", codes2, px)
         # R_x via the dummy all-ones row (shared across weight vectors).
-        counts_rx = jnp.sum(xp, axis=-1)                         # (Px, B, C)
-        codes_rx = adc(counts_rx / inv)
-        rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]      # (B, 1)
+        rxc = _nominal_rx(xp, cfg)                               # (B, 1)
         return CimPartials(s1c, s2c, rxc, ws.r_w)
 
     # Variability injection: capacitor mismatch and/or comparator offset
@@ -260,6 +258,36 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     codes_rx = adc(num_rx / cap_sum[None, None, :])              # (Px, B, C)
     rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]          # (B, 1)
     return CimPartials(s1c, s2c, rxc, ws.r_w)
+
+
+def _nominal_rx(xp: jax.Array, cfg: CimConfig) -> jax.Array:
+    """Nominal |x| dummy-row code sum from chunked x-planes (Px, B, C, m).
+
+    The single implementation behind both :func:`cim_input_partials`'s
+    ``rxc`` field and :func:`cim_rx_partials` — sharing it makes their
+    bit-identity structural rather than hand-synchronised.
+    """
+    px = 2.0 ** jnp.arange(cfg.x_planes)
+    counts_rx = jnp.sum(xp, axis=-1)                             # (Px, B, C)
+    codes_rx = adc_codes(counts_rx / jnp.float32(cfg.m_columns),
+                         cfg.adc_bits)
+    return jnp.einsum("pbc,p->b", codes_rx, px)[:, None]         # (B, 1)
+
+
+def cim_rx_partials(x2: jax.Array, cfg: CimConfig, sx: jax.Array
+                    ) -> jax.Array:
+    """Nominal |x| dummy-row code sum R_x over the FULL contraction dim.
+
+    x2: (B, K) -> (B, 1). Bit-identical to the ``rxc`` field
+    :func:`cim_input_partials` produces for the same (full-K) input slice:
+    the dummy all-ones row is shared across every weight vector and has no
+    N dependence, so round-interleaved execution (``core.programmed
+    .cim_mf_matmul_swapped``) computes it once per input stream instead of
+    accumulating it tile by tile.
+    """
+    K = x2.shape[-1]
+    _, _, x_planes = _input_operands(x2, cfg, sx)
+    return _nominal_rx(_chunk(x_planes, cfg.m_columns, K), cfg)
 
 
 def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,

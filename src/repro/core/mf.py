@@ -251,8 +251,15 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
         assert cim_cfg is not None, "CIM_SIM mode requires a CimConfig"
         prog = programmed if programmed is not None else params.get("prog")
         if prog is not None:
-            from repro.core.programmed import cim_mf_matmul_programmed
-            y = cim_mf_matmul_programmed(x, prog, cim_cfg)
+            from repro.core.programmed import (SwappedMacro,
+                                               cim_mf_matmul_programmed,
+                                               cim_mf_matmul_swapped)
+            if isinstance(prog, SwappedMacro):
+                # Fleet too small to pin this projection: round-interleaved
+                # execution re-programs tiles per input stream.
+                y = cim_mf_matmul_swapped(x, w, prog, cim_cfg)
+            else:
+                y = cim_mf_matmul_programmed(x, prog, cim_cfg)
         else:
             y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
         if _calib_tap.error_active():

@@ -50,7 +50,7 @@ from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
                             CimWeightState, _input_operands, _weight_operands,
                             cim_input_partials, cim_kernel_forward,
                             cim_mf_recombine, cim_program_kernel_state,
-                            cim_program_weight_state)
+                            cim_program_weight_state, cim_rx_partials)
 
 # Full-scale assumption for the default static activation calibration:
 # post-norm activations are ~unit-RMS, so |x| <= ~4 covers >4 sigma. Used
@@ -264,6 +264,169 @@ class ProgrammedLayer(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
+# Round-interleaved (weight-swapped) serving of oversized projections.
+# ---------------------------------------------------------------------------
+
+class CimSwapSchedule(NamedTuple):
+    """STATIC round partition of one (K, N) projection over a fleet.
+
+    When a model's µArray tiles exceed the fleet's resident ``tile_slots``,
+    the layer executes in *rounds* (paper Sec. V dataflow): program up to
+    ``tile_slots`` tiles, stream every input through them, swap in the
+    next batch. Tiles are enumerated column-major (output channel outer,
+    K-chunk inner), so each round covers at most three contiguous operand
+    segments: a partial leading channel, a block of whole channels, and a
+    partial trailing channel. ``rounds[r]`` lists that round's segments as
+    ``(n0, n1, k0, k1)`` half-open index ranges over the original operand;
+    every k-range is M-chunk aligned (except the ragged final chunk), which
+    is exactly the tiled-bit-exactness condition of
+    :mod:`repro.compiler.execute`.
+
+    All fields are plain ints / int tuples — the schedule is hashable and
+    rides pytrees as static aux data (see :class:`SwappedMacro`).
+    """
+
+    k: int
+    n: int
+    m_columns: int
+    tile_slots: int
+    rounds: tuple[tuple[tuple[int, int, int, int], ...], ...]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def n_chunks(self) -> int:
+        return -(-self.k // self.m_columns)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_chunks * self.n
+
+
+def build_swap_schedule(k: int, n: int, m_columns: int,
+                        tile_slots: int) -> CimSwapSchedule:
+    """Partition a (k, n) projection's µArray tiles into weight-swap
+    rounds of at most ``tile_slots`` tiles. The round count equals the
+    compiler's ``ceil(tiles / tile_slots)``
+    (:func:`repro.compiler.schedule.schedule_layer`) by construction."""
+    if k <= 0 or n <= 0:
+        raise ValueError(f"degenerate projection ({k}, {n})")
+    if tile_slots < 1:
+        raise ValueError(f"tile_slots must be >= 1, got {tile_slots}")
+    m = m_columns
+    chunks = -(-k // m)
+    total = chunks * n
+
+    def k_range(c0: int, c1: int) -> tuple[int, int]:
+        return c0 * m, min(c1 * m, k)
+
+    rounds = []
+    for t0 in range(0, total, tile_slots):
+        t1 = min(t0 + tile_slots, total)
+        n_lo, c_lo = divmod(t0, chunks)
+        n_hi, c_hi = divmod(t1 - 1, chunks)
+        c_hi += 1                       # exclusive chunk end in channel n_hi
+        segs: list[tuple[int, int, int, int]] = []
+        if n_lo == n_hi:
+            segs.append((n_lo, n_lo + 1) + k_range(c_lo, c_hi))
+        else:
+            mid_lo = n_lo
+            if c_lo > 0:
+                segs.append((n_lo, n_lo + 1) + k_range(c_lo, chunks))
+                mid_lo = n_lo + 1
+            mid_hi = n_hi + 1 if c_hi == chunks else n_hi
+            if mid_hi > mid_lo:
+                segs.append((mid_lo, mid_hi) + k_range(0, chunks))
+            if c_hi < chunks:
+                segs.append((n_hi, n_hi + 1) + k_range(0, c_hi))
+        rounds.append(tuple(segs))
+    return CimSwapSchedule(k=k, n=n, m_columns=m, tile_slots=tile_slots,
+                           rounds=tuple(rounds))
+
+
+@jax.tree_util.register_pytree_node_class
+class SwappedMacro:
+    """Swap-scheduled (NOT fleet-resident) state of one (K, N) projection.
+
+    The fleet is too small to pin this model, so the projection owns no
+    frozen weight-plane state: every input stream re-programs its tiles
+    round by round (the schedule's reprogram events) and only the scales
+    persist — ``sw``/``sx`` are fixed at construction exactly like a
+    resident :class:`ProgrammedMacro`'s, which is what keeps swapped
+    execution bit-identical to the pinned path. Children are the scale
+    arrays (stacked leading axes ride ``jax.lax.scan`` like parameters);
+    the :class:`CimSwapSchedule` is static aux data.
+    """
+
+    def __init__(self, sw: jax.Array, sx: jax.Array,
+                 sched: CimSwapSchedule):
+        self.sw = sw
+        self.sx = sx
+        self.sched = sched
+
+    def tree_flatten(self):
+        return (self.sw, self.sx), self.sched
+
+    @classmethod
+    def tree_unflatten(cls, sched, children):
+        return cls(children[0], children[1], sched)
+
+
+def swap_macro(w: jax.Array, cfg: CimConfig, tile_slots: int, *,
+               sx, sw=None) -> SwappedMacro:
+    """Build swap-scheduled state for a (..., K, N) weight (stacked leading
+    axes get per-instance ``sw``/``sx``, sharing one static schedule)."""
+    K, N = w.shape[-2:]
+    sched = build_swap_schedule(K, N, cfg.m_columns, tile_slots)
+    if sw is None:
+        w2 = w.reshape((-1, K, N))
+        sw = jax.vmap(lambda wi: quant.calibrate_scale(wi, cfg.w_bits))(w2)
+        sw = sw.reshape(w.shape[:-2])
+    sw = jnp.asarray(sw, jnp.float32)
+    sx = jnp.broadcast_to(jnp.asarray(sx, jnp.float32), w.shape[:-2])
+    return SwappedMacro(sw, sx, sched)
+
+
+def cim_mf_matmul_swapped(x: jax.Array, w: jax.Array, swap: SwappedMacro,
+                          cfg: CimConfig) -> jax.Array:
+    """Round-interleaved MF correlation x:(...,K) against a swap-scheduled
+    projection: program round r's tiles (weight-side work, per STREAM — the
+    reprogram events billed by the compiler's Eq. 4 roll-up), stream the
+    step-time inputs through them, swap in round r+1.
+
+    Bit-identical to ``cim_mf_matmul_programmed`` against a resident macro
+    programmed with the same ``sw``/``sx``: partial code sums are
+    integer-valued floats, so per-segment ``.at[].add`` accumulation is
+    exact regardless of the round partition, and the single final
+    recombine applies the same rounding sequence.
+    """
+    sched = swap.sched
+    K, N = sched.k, sched.n
+    if w.shape != (K, N):
+        raise ValueError(f"swap schedule is for ({K}, {N}), weight is "
+                         f"{w.shape}")
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    b = x2.shape[0]
+    s1 = jnp.zeros((b, N), jnp.float32)
+    s2 = jnp.zeros((b, N), jnp.float32)
+    r_w = jnp.zeros((1, N), jnp.float32)
+    for segments in sched.rounds:
+        for (n0, n1, k0, k1) in segments:
+            ws = cim_program_weight_state(w[k0:k1, n0:n1], cfg, swap.sw)
+            p = cim_input_partials(x2[:, k0:k1], ws, cfg, swap.sx)
+            s1 = s1.at[:, n0:n1].add(p.s1c)
+            s2 = s2.at[:, n0:n1].add(p.s2c)
+            r_w = r_w.at[:, n0:n1].add(p.r_w)
+    rxc = cim_rx_partials(x2, cfg, swap.sx)
+    y = cim_mf_recombine(CimPartials(s1, s2, rxc, r_w), swap.sw, swap.sx,
+                         cfg)
+    return y.reshape(batch_shape + (N,)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Projection-tree walk shared by programming and the calibration lab.
 # ---------------------------------------------------------------------------
 
@@ -364,7 +527,8 @@ def _program_nd(w: jax.Array, cfg: CimConfig, sx: jax.Array
 
 def program_weights(params: Any, cfg: CimConfig, *,
                     act_amax: float = DEFAULT_ACT_AMAX,
-                    scales: Optional[dict] = None) -> Any:
+                    scales: Optional[dict] = None,
+                    swap: Optional[dict[str, int]] = None) -> Any:
     """Program every MF projection in a model parameter tree.
 
     Returns a copy of ``params`` where each projection dict gains a
@@ -381,9 +545,16 @@ def program_weights(params: Any, cfg: CimConfig, *,
     periods, experts) for per-instance calibration. Unnamed projections
     fall back to the full-scale ``act_amax`` assumption. Calibration
     artifacts from ``repro.calib`` produce exactly this mapping.
+
+    ``swap`` maps projection names to a fleet's resident ``tile_slots``:
+    those projections are NOT pinned — they get a :class:`SwappedMacro`
+    whose round-interleaved execution re-programs tiles every input
+    stream (the fleet cannot hold the model; see ``repro.serve.engine``).
+    Only linear projections can swap; scales compose with ``swap``.
     """
     default_sx = jnp.float32(default_static_sx(cfg, act_amax))
     scales = scales or {}
+    swap = swap or {}
     if cfg.use_kernel and cfg.m_columns > 0:
         # Fail early with the pack_chunks precondition rather than deep in
         # a traced program.
@@ -399,6 +570,15 @@ def program_weights(params: Any, cfg: CimConfig, *,
 
     def prog(name, node, kind):
         out = dict(node)
+        if name in swap:
+            if kind != "linear":
+                raise NotImplementedError(
+                    f"{name}: round-interleaved weight swapping covers "
+                    f"linear projections only ({kind} projections must "
+                    f"stay fleet-resident)")
+            out["prog"] = swap_macro(node["w"], cfg, swap[name],
+                                     sx=sx_for(name, node["w"]))
+            return out
         if kind == "experts":
             for key in _EXPERT_KEYS:
                 w = node[key]

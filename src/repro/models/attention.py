@@ -318,10 +318,19 @@ def gqa_apply(p: dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
               window: Optional[int] = None,
               cache: Optional[dict] = None,
               attn_block: int = 1024, attn_block_skip: bool = False,
-              pctx=None, **kw
+              pctx=None, prefill_valid: Optional[jax.Array] = None, **kw
               ) -> tuple[jax.Array, Optional[dict]]:
     """Full GQA block. With ``cache`` (decode): append one token and attend
-    against the cache; without: blockwise self-attention over x."""
+    against the cache; without: blockwise self-attention over x.
+
+    ``prefill_valid`` (with ``cache``) switches to batched prefill: x is a
+    (B, T) slab of prompt tokens, per-batch lengths ``prefill_valid`` of
+    which are real; causal self-attention runs over the slab and only the
+    valid positions' K/V are written into the cache (slots with
+    ``prefill_valid == 0`` — e.g. mid-decode neighbours in a serving batch
+    — keep their cache rows and length untouched). Requires fresh slots
+    (``cache['len'] == 0`` wherever valid > 0) and a non-ring cache.
+    """
     b, t, _ = x.shape
     q = _split_heads(blocks.proj_apply(p["q"], x, mode, **kw), n_heads)
     k = _split_heads(blocks.proj_apply(p["k"], x, mode, **kw), n_kv_heads)
@@ -337,6 +346,31 @@ def gqa_apply(p: dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
                                 block=attn_block,
                                 block_skip=attn_block_skip)
         new_cache = None
+    elif prefill_valid is not None:
+        # Batched prefill: fold the whole (B, T) prompt slab through one
+        # forward. Causal masking already confines every consumed query
+        # position to real prefix keys (padding positions beyond a slot's
+        # valid length only feed query rows nobody reads and cache rows
+        # the write mask drops), so plain causal attention over the slab
+        # is enough — no per-slot key masking needed.
+        s = cache["k"].shape[1]
+        if window is not None and s <= window:
+            raise ValueError("batched prefill does not support ring-buffer "
+                             "(local-attention) caches")
+        if t > s:
+            raise ValueError(f"prefill slab length {t} exceeds cache "
+                             f"length {s}")
+        out = blocked_attention(q, k, v, causal=causal, window=window,
+                                block=attn_block,
+                                block_skip=attn_block_skip)
+        mask = (jnp.arange(t)[None, :]
+                < prefill_valid[:, None])[..., None, None]     # (B,T,1,1)
+        k_cache = cache["k"].at[:, :t].set(
+            jnp.where(mask, k.astype(cache["k"].dtype), cache["k"][:, :t]))
+        v_cache = cache["v"].at[:, :t].set(
+            jnp.where(mask, v.astype(cache["v"].dtype), cache["v"][:, :t]))
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "len": cache["len"] + prefill_valid}
     else:
         # Decode: write k/v at cache_len, attend over the whole cache.
         # When the cache is smaller than the sequence (local attention) it

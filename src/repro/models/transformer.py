@@ -186,12 +186,19 @@ def _moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, pctx: ParallelContext,
 
 def _block_apply(p: dict, x: jax.Array, kind: str, cfg: ModelConfig,
                  modes: dict, positions: jax.Array, pctx: ParallelContext,
-                 cache: Optional[dict] = None
+                 cache: Optional[dict] = None,
+                 prefill_valid: Optional[jax.Array] = None
                  ) -> tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (x_out, new_cache, aux_loss)."""
     kw = _mf_kw(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Optional[dict] = None
+    if prefill_valid is not None and not (
+            kind in ("attn", "local_attn") and cfg.attn_type != "mla"):
+        raise ValueError(
+            f"batched prefill is implemented for GQA attention caches "
+            f"only; block kind {kind!r} (attn_type={cfg.attn_type}) must "
+            f"ingest prompts through the decode step")
     if kind in ("attn", "local_attn"):
         window = cfg.window if kind == "local_attn" else (
             cfg.window if cfg.block_pattern is None else None)
@@ -212,7 +219,8 @@ def _block_apply(p: dict, x: jax.Array, kind: str, cfg: ModelConfig,
                 mode=modes["attn"], qk_norm=cfg.qk_norm, causal=True,
                 window=window, cache=attn_cache,
                 attn_block=cfg.attn_block,
-                attn_block_skip=cfg.attn_block_skip, pctx=pctx, **kw)
+                attn_block_skip=cfg.attn_block_skip, pctx=pctx,
+                prefill_valid=prefill_valid, **kw)
         x = x + a
         h = blocks.norm_apply(cfg.norm_type, p["ln2"], x)
         if cfg.moe is not None:
@@ -510,6 +518,66 @@ def lm_decode_step(params: dict, cache: dict, tokens: jax.Array,
     new_cache = {"layers": new_layer_caches, "tail": tuple(new_tail),
                  "pos": cache["pos"] + 1}
     return logits[:, 0], new_cache
+
+
+def prefill_supported(cfg: ModelConfig) -> bool:
+    """True when ``lm_prefill_cache`` can ingest prompts for this config:
+    every block is a GQA attention block with a non-ring (full-length) KV
+    cache. Recurrent mixers (rgLRU/xLSTM) and MLA caches fall back to
+    prefill-as-decode in the serve engine."""
+    kinds_ok = all(k in ("attn", "local_attn") for k in cfg.pattern)
+    return kinds_ok and cfg.attn_type != "mla" and cfg.window is None
+
+
+def lm_prefill_cache(params: dict, cache: dict, tokens: jax.Array,
+                     valid: jax.Array, cfg: ModelConfig,
+                     pctx: ParallelContext = ParallelContext()) -> dict:
+    """Batched prompt ingestion: fold a (B, T) prompt slab into the cache.
+
+    The T > 1 prompt axis rides the same collapsed step-time matmuls as
+    decode (every CIM projection reshapes (..., K) -> (B*T, K), so
+    programmed/swapped macro execution is identical per position) while
+    attention runs causally over the slab — prompt ingestion stops paying
+    one decode step per token. ``valid`` gives each slot's real prompt
+    length within the slab (0 = slot not participating: its cache rows,
+    length and position are left untouched, so mid-decode neighbours in a
+    serving batch are safe). Participating slots must be fresh
+    (``cache['pos'] == 0``). Returns the new cache only — sampling the
+    first output token happens in the ordinary decode step that feeds the
+    last prompt token.
+    """
+    if not prefill_supported(cfg):
+        raise ValueError(
+            f"{cfg.name}: batched prefill needs an all-GQA-attention "
+            f"pattern with a full-length KV cache")
+    modes = resolve_modes(cfg)
+    x = blocks.embed_apply(params["embed"], tokens)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def period_body(h, inp):
+        period_params, period_cache = inp
+        new_caches = []
+        for pos, kind in enumerate(cfg.pattern):
+            h, nc, _ = _block_apply(period_params[pos], h, kind, cfg, modes,
+                                    positions, pctx,
+                                    cache=period_cache[pos],
+                                    prefill_valid=valid)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_layer_caches = jax.lax.scan(
+        period_body, x, (params["layers"], cache["layers"]),
+        unroll=pctx.cfg.scan_unroll)
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, nc, _ = _block_apply(p, x, cfg.pattern[i], cfg, modes, positions,
+                                pctx, cache=cache["tail"][i],
+                                prefill_valid=valid)
+        new_tail.append(nc)
+    # No final norm / LM head: prefill produces cache state, not logits.
+    return {"layers": new_layer_caches, "tail": tuple(new_tail),
+            "pos": cache["pos"] + valid.astype(cache["pos"].dtype)}
 
 
 def lm_loss(params: dict, batch: dict, cfg: ModelConfig,

@@ -2,8 +2,9 @@
 step, greedy/temperature sampling, and prompt ingestion.
 
 The engine owns a fixed-capacity KV cache (`slots` x `max_len`); requests
-occupy slots, prompts are ingested token-by-token through the same jitted
-decode step (prefill-as-decode keeps one compiled program), and finished
+occupy slots, prompts are ingested through batched programmed prefill
+(one (B, T) forward per admission wave) when the architecture supports it
+— token-by-token through the jitted decode step otherwise — and finished
 slots are recycled. `serve_step` — the function the decode dry-run cells
 lower — is a single fused (decode + sample) step over the whole batch.
 
@@ -13,11 +14,24 @@ Weight-stationary CIM serving: when the model config maps projections to
 from the frozen macro state — the per-step weight recalibrate/requantise/
 bitplane/pack work of the on-the-fly path disappears from the hot loop,
 mirroring how the hardware writes the µArray once and streams inputs.
+
+Fleet-faithful serving: constructed with a ``Fleet``, the engine compiles
+the model's projections onto it (`repro.compiler.schedule.compile_model`).
+A model whose µArray tiles all fit the fleet's ``tile_slots`` is *pinned*
+— weights stay resident, reloads amortise to zero. A model that does NOT
+fit decodes through round-interleaved execution: every projection becomes
+a :class:`~repro.core.programmed.SwappedMacro` whose step re-programs
+tile rounds per input stream (program round r, stream the step-time
+inputs through the resident tiles, swap in round r+1) — bit-exact against
+the pinned path, with every reprogram event charged against the Eq. 4
+roll-up (`repro.compiler.cost.serve_reload_cost`) in the
+:class:`ServeReport` each ``run()`` produces.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Optional
 
@@ -58,10 +72,45 @@ class Request:
     timed_out: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    """Per-``run()`` serving accounting (also at ``engine.last_report``).
+
+    ``streams`` counts the input streams the fleet served: decode steps
+    plus batched-prefill calls — each one replays the full weight reload
+    of a non-pinned schedule, which is what the Eq. 4 reload fields
+    charge (``repro.compiler.cost.serve_reload_cost``). Pinned models
+    (and engines built without a fleet) report zero reload cost.
+    """
+
+    decode_tokens: int          # tokens generated this run
+    decode_steps: int           # engine ticks this run
+    prefill_tokens: int         # prompt tokens ingested via batched prefill
+    prefill_calls: int          # batched-prefill invocations (waves)
+    elapsed_s: float
+    tok_s: float                # generated tokens / elapsed
+    pinned: Optional[bool]      # None = no fleet attached
+    rounds_max: int             # deepest weight-swap round of any layer
+    reprogram_events: int       # schedule events x streams
+    reload_bits: int
+    reload_energy_j: float
+    reload_s: float
+    utilization: float          # fleet compute-slot occupancy (schedule)
+
+    @property
+    def streams(self) -> int:
+        return self.decode_steps + self.prefill_calls
+
+    @property
+    def reload_energy_nj(self) -> float:
+        return self.reload_energy_j * 1e9
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
-                 seed: int = 0, program: bool = True, calibration=None):
+                 seed: int = 0, program: bool = True, calibration=None,
+                 fleet=None, batched_prefill: Optional[bool] = None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -73,9 +122,14 @@ class ServeEngine:
         # ``calibration`` (a repro.calib CalibrationArtifact, or a path to
         # a saved one) programs its measured per-projection activation
         # scales instead of the static full-scale default.
+        # ``fleet`` (a repro.compiler.tiling.Fleet) makes serving
+        # fleet-faithful: models that exceed its resident tile slots are
+        # served round-interleaved (see module docstring).
         self._exec_params = params
         self.programmed = False
         self.calibration = None
+        self.fleet = fleet
+        self.schedule = None
         programmable = (program and cfg.mf.enabled
                         and cfg.mf.mode == "cim_sim")
         if calibration is not None and not programmable:
@@ -84,6 +138,12 @@ class ServeEngine:
                 "programming CIM macros (program=False or the config does "
                 "not map projections to cim_sim) — the scales would be "
                 "silently dropped")
+        if fleet is not None and not programmable:
+            raise ValueError(
+                "a fleet was supplied but the engine is not programming "
+                "CIM macros (program=False or the config does not map "
+                "projections to cim_sim) — the schedule would not "
+                "describe the executed datapath")
         if programmable:
             from repro.core.programmed import program_weights
             scales = None
@@ -99,8 +159,10 @@ class ServeEngine:
                 _check_calibration_names(params, calibration)
                 scales = calibration.scales
                 self.calibration = calibration
+            swap = self._compile_fleet_schedule() if fleet is not None \
+                else None
             self._exec_params = program_weights(params, cfg.mf.cim,
-                                                scales=scales)
+                                                scales=scales, swap=swap)
             self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
         self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
@@ -108,6 +170,60 @@ class ServeEngine:
         self._feed = np.zeros((slots,), np.int32)       # next token to feed
         self._prompt_left = np.zeros((slots,), np.int64)
         self._rng = jax.random.PRNGKey(seed)
+        # Batched programmed prefill: one (slots, T) forward per admission
+        # wave instead of one decode step per prompt token. Auto-enabled
+        # when the architecture supports it (GQA attention caches);
+        # ``batched_prefill=False`` forces prefill-as-decode.
+        supported = T.prefill_supported(cfg)
+        if batched_prefill and not supported:
+            raise ValueError(
+                f"{cfg.name}: batched prefill needs an all-GQA-attention "
+                f"pattern with a full-length KV cache")
+        self.batched_prefill = supported if batched_prefill is None \
+            else bool(batched_prefill)
+        self._prefill_fn = jax.jit(
+            lambda p, c, tok, val: T.lm_prefill_cache(p, c, tok, val, cfg))
+        # Stream counters feeding the per-run ServeReport.
+        self._decode_steps = 0
+        self._decode_tokens = 0
+        self._prefill_calls = 0
+        self._prefill_tokens = 0
+        self.last_report: Optional[ServeReport] = None
+
+    def _compile_fleet_schedule(self):
+        """Compile the model's projections onto the fleet; returns the
+        ``program_weights`` swap map (None when the model pins)."""
+        from repro.compiler.frontend import projection_layer_stats
+        from repro.compiler.schedule import compile_model
+        from repro.core.mapping import MappingPolicy
+        fleet, cim = self.fleet, self.cfg.mf.cim
+        if (fleet.cfg.m_columns, fleet.cfg.w_bits) != (cim.m_columns,
+                                                       cim.w_bits):
+            raise ValueError(
+                f"fleet µArray geometry (M={fleet.cfg.m_columns}, "
+                f"W_P={fleet.cfg.w_bits}) does not match the model's "
+                f"CimConfig (M={cim.m_columns}, W_P={cim.w_bits})")
+        stats, groups = projection_layer_stats(self.params,
+                                               calls=self.slots)
+        # Every walked projection executes in cim_sim here, so the policy
+        # gate is wide open — the fleet decides residency, not ops/param.
+        self.schedule = compile_model(
+            stats, fleet, policy=MappingPolicy(threshold=0.0,
+                                               always_digital=()))
+        # The schedule is frozen for the engine's lifetime: roll up its
+        # Eq. 4 utilization once instead of per run().
+        from repro.compiler.cost import model_cost
+        self._fleet_utilization = model_cost(self.schedule)[1].utilization
+        if self.schedule.pinned:
+            return None
+        not_linear = [g.name for g in groups if g.kind != "linear"]
+        if not_linear:
+            raise NotImplementedError(
+                f"model does not fit the fleet ({self.schedule.total_tiles}"
+                f" tiles > {fleet.tile_slots} slots) and round-interleaved "
+                f"serving covers linear projections only; non-linear "
+                f"projections: {not_linear[:4]}")
+        return {g.name: fleet.tile_slots for g in groups}
 
     @property
     def free_slots(self) -> list[int]:
@@ -121,8 +237,13 @@ class ServeEngine:
         admitted slots now reset through a single ``_reset_slots`` call
         whose slot vector is padded to a fixed length (repeating the first
         slot — idempotent zeroing), so every wave reuses one compiled
-        program. Returns the number of requests admitted.
+        program. With batched prefill enabled, the admitted requests'
+        prompts (all but the final token, which feeds the first sampling
+        decode step) are then ingested in one ``lm_prefill_cache`` call
+        instead of one decode tick per token. Returns the number of
+        requests admitted.
         """
+        self._validate(reqs)
         free = self.free_slots
         take = reqs[:len(free)]
         if not take:
@@ -135,7 +256,50 @@ class ServeEngine:
         pad = np.full((self.slots,), sel[0], np.int32)
         pad[:len(sel)] = sel
         self.cache = _reset_slots(self.cache, jnp.asarray(pad))
+        if self.batched_prefill:
+            self._prefill_wave([(s, r) for s, r in zip(sel, take)
+                                if len(r.prompt) > 1])
         return len(take)
+
+    def _prefill_wave(self, wave: list[tuple[int, Request]]) -> None:
+        """Ingest the admitted prompts' first ``len - 1`` tokens in one
+        batched forward; the final prompt token stays in ``_feed`` so the
+        next ordinary decode tick samples the first output token exactly
+        like the prefill-as-decode flow. Slab length buckets to the next
+        power of two to bound recompiles; non-participating slots carry
+        ``valid = 0`` and are untouched."""
+        if not wave:
+            return
+        t_max = max(len(r.prompt) - 1 for _, r in wave)
+        t_b = min(1 << (t_max - 1).bit_length(), self.max_len)
+        tokens = np.zeros((self.slots, t_b), np.int32)
+        valid = np.zeros((self.slots,), np.int32)
+        for s, req in wave:
+            n = len(req.prompt) - 1
+            tokens[s, :n] = req.prompt[:n]
+            valid[s] = n
+            self._feed[s] = req.prompt[n]
+            self._prompt_left[s] = 0
+        self.cache = self._prefill_fn(self._exec_params, self.cache,
+                                      jnp.asarray(tokens),
+                                      jnp.asarray(valid))
+        self._prefill_calls += 1
+        self._prefill_tokens += int(valid.sum())
+
+    def _validate(self, reqs: list[Request]) -> None:
+        """Reject malformed requests BEFORE any engine state mutates."""
+        for req in reqs:
+            if not req.prompt:
+                raise ValueError(
+                    "request has an empty prompt — the decode step needs "
+                    "at least one token to feed (submit a BOS token "
+                    "explicitly if that is what you mean)")
+            if len(req.prompt) > self.max_len:
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens exceeds the "
+                    f"engine's KV cache (max_len={self.max_len}) — "
+                    f"ingesting it would silently wrap and corrupt the "
+                    f"cache")
 
     def submit(self, req: Request) -> bool:
         return self.submit_many([req]) == 1
@@ -146,6 +310,7 @@ class ServeEngine:
         tokens = jnp.asarray(self._feed)
         nxt, _, self.cache = self.step_fn(self._exec_params, self.cache,
                                           tokens, sub)
+        self._decode_steps += 1
         nxt = np.asarray(nxt)
         for s, req in enumerate(self.requests):
             if req is None:
@@ -158,6 +323,7 @@ class ServeEngine:
                 continue
             tok = int(nxt[s])
             req.out.append(tok)
+            self._decode_tokens += 1
             self._feed[s] = tok
             if (self.eos_id is not None and tok == self.eos_id) or \
                     len(req.out) >= req.max_new_tokens:
@@ -168,11 +334,22 @@ class ServeEngine:
             ) -> list[Request]:
         """Serve ``reqs`` to completion (or until ``max_ticks``).
 
-        Every submitted request comes back: requests still in flight — or
-        never scheduled — when the tick budget runs out are marked
-        ``timed_out`` and returned with their partial output, and their
-        slots are released.
+        Every submitted request comes back, in SUBMISSION order — callers
+        zipping results to inputs stay aligned no matter which wave or
+        slot a request landed on (requests already in flight from direct
+        ``submit`` calls are appended after, in completion order).
+        Requests still in flight — or never scheduled — when the tick
+        budget runs out are marked ``timed_out`` and returned with their
+        partial output, and their slots are released.
+
+        Each run also produces a :class:`ServeReport` (``last_report``)
+        charging the fleet schedule's reprogram events against the run's
+        input streams.
         """
+        self._validate(reqs)
+        t0 = time.perf_counter()
+        steps0, tokens0 = self._decode_steps, self._decode_tokens
+        pcalls0, ptokens0 = self._prefill_calls, self._prefill_tokens
         pending = list(reqs)
         done: list[Request] = []
         ticks = 0
@@ -195,7 +372,47 @@ class ServeEngine:
         for r in pending:
             r.timed_out = True
             done.append(r)
-        return done
+        elapsed = time.perf_counter() - t0
+        self.last_report = self._build_report(
+            decode_steps=self._decode_steps - steps0,
+            decode_tokens=self._decode_tokens - tokens0,
+            prefill_calls=self._prefill_calls - pcalls0,
+            prefill_tokens=self._prefill_tokens - ptokens0,
+            elapsed_s=elapsed)
+        # Submission order first; extras (in-flight from direct submit
+        # calls before this run) keep completion order after.
+        submitted = {id(r) for r in reqs}
+        extras = [r for r in done if id(r) not in submitted]
+        return list(reqs) + extras
+
+    def _build_report(self, *, decode_steps: int, decode_tokens: int,
+                      prefill_calls: int, prefill_tokens: int,
+                      elapsed_s: float) -> ServeReport:
+        pinned = None
+        rounds_max = 0
+        utilization = 0.0
+        reprogram = reload_bits = 0
+        reload_j = reload_s = 0.0
+        if self.schedule is not None:
+            from repro.compiler.cost import serve_reload_cost
+            pinned = self.schedule.pinned
+            rounds_max = self.schedule.rounds_max
+            utilization = self._fleet_utilization
+            reload = serve_reload_cost(self.schedule,
+                                       decode_steps + prefill_calls)
+            reprogram = reload.reprogram_events
+            reload_bits = reload.reload_bits
+            reload_j = reload.reload_energy_j
+            reload_s = reload.reload_s
+        return ServeReport(
+            decode_tokens=decode_tokens, decode_steps=decode_steps,
+            prefill_tokens=prefill_tokens, prefill_calls=prefill_calls,
+            elapsed_s=elapsed_s,
+            tok_s=decode_tokens / elapsed_s if elapsed_s > 0 else 0.0,
+            pinned=pinned, rounds_max=rounds_max,
+            reprogram_events=reprogram, reload_bits=reload_bits,
+            reload_energy_j=reload_j, reload_s=reload_s,
+            utilization=utilization)
 
 
 def _check_calibration_names(params, calibration) -> None:
