@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cim import CimConfig
-from repro.core.variability import (VariabilityConfig, calibrated_offset,
-                                    mav_crossover_probability)
+from repro.silicon.variability import (VariabilityConfig, calibrated_offset,
+                                       mav_crossover_probability)
 
 
 def run(quick: bool = True):

@@ -21,6 +21,7 @@ SUITES = (
     "kernel_bench",
     "serve_bench",
     "calib_report",
+    "silicon_report",
     "roofline_report",
 )
 

@@ -4,6 +4,9 @@
 # (programmed vs legacy CIM decode) and leaves BENCH_serve.json behind.
 # TIER1_CALIB_BENCH=1 additionally runs the calibration accuracy smoke
 # (calibrated vs static activation scales) and leaves BENCH_calib.json.
+# TIER1_SILICON_BENCH=1 additionally runs the silicon variation smoke
+# (sigma=0 parity, yield sweeps, offset-correction recovery, drift
+# auto-recalibration) and leaves BENCH_silicon.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,4 +18,7 @@ if [[ "${TIER1_SERVE_BENCH:-0}" == "1" ]]; then
 fi
 if [[ "${TIER1_CALIB_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.calib_report --smoke
+fi
+if [[ "${TIER1_SILICON_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.silicon_report --smoke
 fi

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Iterable, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro.calib import tap
@@ -115,18 +116,75 @@ def _lm_forward(cfg):
     return fwd
 
 
+def restore_lm_params(checkpoint: str, template: Any, cfg,
+                      step: Optional[int] = None,
+                      train_cfg: Optional[Any] = None
+                      ) -> tuple[Any, int]:
+    """Restore trained LM parameters from a ``train.checkpoint`` root.
+
+    ``template`` (a fresh ``lm_init`` tree for ``cfg``) provides structure
+    and dtypes. Two checkpoint layouts are accepted, distinguished by the
+    manifest's leaf count: a bare parameter tree, or the full
+    ``TrainState`` the launch loop saves (``launch/train.py``) — there
+    the optimizer-state template is rebuilt from ``cfg`` (+ ``train_cfg``
+    when the run used a non-default optimizer) and the trained ``params``
+    sub-tree is returned. Returns ``(params, restored_step)`` — the step
+    actually read, resolved once (a concurrent training run may commit a
+    newer checkpoint at any moment).
+    """
+    from repro.train import checkpoint as ckpt
+    want = step if step is not None else ckpt.latest_step(checkpoint)
+    if want is None:
+        raise FileNotFoundError(f"no committed checkpoint under "
+                                f"{checkpoint}")
+    n_saved = ckpt.read_manifest(checkpoint, want)["n_leaves"]
+    n_params = len(jax.tree_util.tree_leaves(template))
+    if n_saved == n_params:
+        return ckpt.restore(checkpoint, template, step=want), want
+    from repro.configs.base import TrainConfig
+    from repro.train import train_loop as TL
+    state = TL.init_state(jax.random.PRNGKey(0), cfg,
+                          train_cfg or TrainConfig())
+    state = dataclasses.replace(state, params=template)
+    n_state = len(jax.tree_util.tree_leaves(state))
+    if n_saved != n_state:
+        raise ValueError(
+            f"checkpoint at {checkpoint} (step {want}) has {n_saved} "
+            f"leaves; the model's parameter tree has {n_params} and a "
+            f"default TrainState {n_state} — was it written for a "
+            f"different config/optimizer? Pass the matching train_cfg.")
+    return ckpt.restore(checkpoint, state, step=want).params, want
+
+
 def calibrate_lm(params: Any, cfg, batches: Sequence[dict], *,
                  method: str = "mse",
                  obs_cfg: ObserverConfig = ObserverConfig(),
                  pct: float = 99.9,
-                 fallback_amax: float = DEFAULT_ACT_AMAX
+                 fallback_amax: float = DEFAULT_ACT_AMAX,
+                 checkpoint: Optional[str] = None,
+                 checkpoint_step: Optional[int] = None,
+                 train_cfg: Optional[Any] = None
                  ) -> CalibrationArtifact:
-    """Calibrate every projection of an LM config over a token corpus."""
+    """Calibrate every projection of an LM config over a token corpus.
+
+    ``checkpoint`` (a ``train.checkpoint`` root directory) restores
+    TRAINED parameters into the structure of ``params`` before observing,
+    so the recorded statistics — and the SQNR/logits gates downstream —
+    track a trained activation distribution instead of random init
+    (ROADMAP "trained-model calibration"). The artifact notes the
+    restored step in its metadata.
+    """
+    meta: dict = {"model": cfg.name}
+    if checkpoint is not None:
+        params, restored = restore_lm_params(checkpoint, params, cfg,
+                                             step=checkpoint_step,
+                                             train_cfg=train_cfg)
+        meta["checkpoint"] = checkpoint
+        meta["checkpoint_step"] = restored
     fwd = _lm_forward(lm_ref_config(cfg))
     return calibrate(fwd, params, batches, cfg.mf.cim.x_bits,
                      method=method, obs_cfg=obs_cfg, pct=pct,
-                     fallback_amax=fallback_amax,
-                     meta={"model": cfg.name})
+                     fallback_amax=fallback_amax, meta=meta)
 
 
 def evaluate_lm(params: Any, cfg, batches: Sequence[dict], *,

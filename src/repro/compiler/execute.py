@@ -35,8 +35,9 @@ import jax.numpy as jnp
 
 from repro.compiler.tiling import TilingPlan
 from repro.core import quant
-from repro.core.cim import (CimConfig, CimPartials, cim_input_partials,
-                            cim_mf_matmul, cim_mf_partials, cim_mf_recombine)
+from repro.core.cim import (CimConfig, CimPartials, ProjectionSilicon,
+                            cim_input_partials, cim_mf_matmul,
+                            cim_mf_partials, cim_mf_recombine)
 from repro.core.programmed import (ProgrammedLayer, default_static_sx,
                                    program_macro, unpack_weight_state)
 
@@ -123,13 +124,17 @@ def program_layer_tiles(w: jax.Array, plan: TilingPlan, cfg: CimConfig, *,
 def compiled_matmul_programmed(x: jax.Array, prog: ProgrammedLayer,
                                plan: TilingPlan, cfg: CimConfig,
                                cap_weights: Optional[jax.Array] = None,
-                               comparator_offset: Optional[jax.Array] = None
+                               comparator_offset: Optional[jax.Array] = None,
+                               silicon: Optional[ProjectionSilicon] = None
                                ) -> jax.Array:
     """Step-time tiled execution against programmed tile slices.
 
     Bit-exact with :func:`compiled_matmul` (and hence with the monolithic
     paths) when ``prog`` was programmed with the same scales — only the
-    input-side work runs per call.
+    input-side work runs per call. ``silicon`` threads the projection's
+    per-tile ADC instances (``repro.silicon``): each execution slice
+    digitises with the instances of exactly the tiles it covers, so the
+    tiled result matches the monolithic silicon route bit for bit.
     """
     K, N = plan.k, plan.n
     if len(prog.tiles) != len(plan.n_slices) or any(
@@ -144,9 +149,12 @@ def compiled_matmul_programmed(x: jax.Array, prog: ProgrammedLayer,
         acc: Optional[CimPartials] = None
         for tile, (k0, k1) in zip(row, plan.k_slices):
             caps = None if cap_weights is None else cap_weights[k0:k1]
+            sil = None if silicon is None else \
+                silicon.slice(n0, n1, k0, k1, cfg.m_columns)
             p = cim_input_partials(x2[:, k0:k1],
                                    unpack_weight_state(tile.state, cfg),
-                                   cfg, prog.sx, caps, comparator_offset)
+                                   cfg, prog.sx, caps, comparator_offset,
+                                   sil)
             acc = p if acc is None else acc + p
         s1_cols.append(acc.s1c)
         s2_cols.append(acc.s2c)

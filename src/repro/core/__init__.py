@@ -1,10 +1,10 @@
 """MF-Net core: the paper's contribution as composable JAX modules."""
 
 from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
-                            CimWeightState, cim_input_partials,
-                            cim_mf_matmul, cim_mf_matmul_ste,
-                            cim_mf_partials, cim_mf_recombine,
-                            cim_program_kernel_state,
+                            CimWeightState, ProjectionSilicon,
+                            cim_input_partials, cim_mf_matmul,
+                            cim_mf_matmul_ste, cim_mf_partials,
+                            cim_mf_recombine, cim_program_kernel_state,
                             cim_program_weight_state)
 from repro.core.energy import (DEFAULT_MACRO, MacroParams,
                                mixed_system_tops_per_watt, tops_per_watt,
@@ -30,6 +30,7 @@ from repro.core.variability import (VariabilityConfig,
 
 __all__ = [
     "CimConfig", "CimKernelState", "CimPartials", "CimWeightState",
+    "ProjectionSilicon",
     "cim_input_partials", "cim_mf_matmul", "cim_mf_matmul_ste",
     "cim_mf_partials", "cim_mf_recombine", "cim_program_kernel_state",
     "cim_program_weight_state", "CimLosslessState", "CimPackedPlanes",

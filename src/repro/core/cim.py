@@ -14,9 +14,11 @@ Models the µArray execution of the MF operator bit-for-bit:
   * Eq. 2 recombination with the two residues: sum|x| via an ADC'd dummy
     all-ones row, sum|w| as an exact digital weight statistic.
 
-Optional process variability (core/variability.py) perturbs the charge
-averaging with per-column capacitor mismatch and adds comparator offset
-before digitisation.
+Optional process variability (the silicon lab, ``repro.silicon``) perturbs
+the charge averaging with per-column capacitor mismatch and adds comparator
+offset before digitisation — either one shared draw (legacy
+``cap_weights``/``comparator_offset``) or one sampled ADC instance per
+µArray tile slot (:class:`ProjectionSilicon`).
 
 The datapath is split along the hardware's program-time / step-time
 boundary: ``cim_program_weight_state`` / ``cim_program_kernel_state`` do
@@ -148,6 +150,51 @@ class CimPartials(NamedTuple):
                            self.rxc + other.rxc, self.r_w + other.r_w)
 
 
+class ProjectionSilicon(NamedTuple):
+    """Per-tile sampled ADC instances of one macro-mapped (K, N) projection.
+
+    The SA-ADC of the paper is *memory-immersed*: its capacitive DAC is the
+    bit-line parasitic capacitance of the µArray half it digitises, so cap
+    mismatch and comparator offset are properties of the physical SLOT a
+    tile occupies, not of the weights programmed into it. This struct is
+    the projection-shaped gather of a fleet's per-slot silicon state
+    (:mod:`repro.silicon.instance` builds it): tile (c, n) — K-chunk ``c``
+    of output channel ``n`` — reads the cap-DAC weights and comparator
+    offset of the slot it is placed in. The |x| dummy-row conversion of
+    chunk ``c`` (shared across every output channel) uses a designated
+    per-chunk instance (``rx_*``, the slot of channel 0's tile).
+
+    With all caps exactly 1.0 and all offsets exactly 0.0 the silicon
+    route below is *bitwise identical* to the nominal fast path: every
+    pre-ADC numerator is an integer-valued count, the denominator sums to
+    exactly ``m``, and plane/code recombinations sum the same integers in
+    a different order — exact in float32 (the σ=0 collapse gate of
+    ``benchmarks/silicon_report.py``).
+    """
+
+    cap: jax.Array        # (N, C, m) per-tile cap-DAC weights, 1.0 nominal
+    offset: jax.Array     # (N, C) per-tile comparator offset (FS fraction)
+    rx_cap: jax.Array     # (C, m) dummy-row conversion instance
+    rx_offset: jax.Array  # (C,) dummy-row comparator offset
+
+    def slice(self, n0: int, n1: int, k0: int, k1: int,
+              m_columns: int) -> "ProjectionSilicon":
+        """The silicon view of operand segment [k0:k1, n0:n1].
+
+        ``k0`` must be M-chunk aligned (the tiled/swapped bit-exactness
+        condition), so segment chunk boundaries coincide with the
+        projection's global chunking.
+        """
+        if k0 % m_columns:
+            raise ValueError(
+                f"segment k0={k0} is not aligned to m_columns={m_columns}: "
+                f"the sliced silicon chunks would not match the tiles")
+        c0, c1 = k0 // m_columns, -(-k1 // m_columns)
+        return ProjectionSilicon(self.cap[n0:n1, c0:c1],
+                                 self.offset[n0:n1, c0:c1],
+                                 self.rx_cap[c0:c1], self.rx_offset[c0:c1])
+
+
 class CimWeightState(NamedTuple):
     """Program-time weight-side state of one macro-mapped projection.
 
@@ -187,7 +234,8 @@ def cim_program_weight_state(w: jax.Array, cfg: CimConfig,
 def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
                        sx: jax.Array,
                        cap_weights: Optional[jax.Array] = None,
-                       comparator_offset: Optional[jax.Array] = None
+                       comparator_offset: Optional[jax.Array] = None,
+                       silicon: Optional[ProjectionSilicon] = None
                        ) -> CimPartials:
     """Step-time pass: stream x2:(B, Kt) through a programmed µArray.
 
@@ -200,7 +248,19 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     float32 for any summation order — so the nominal fast path below may
     contract in the program-time layout and still produce codes identical
     to the cap-weighted reference einsums.
+
+    Variability injection, two flavours (mutually exclusive):
+      * ``cap_weights`` (K,) + scalar ``comparator_offset`` — one shared
+        mismatch draw across the projection (the legacy Fig. 8 model);
+      * ``silicon`` — a :class:`ProjectionSilicon` giving every µArray
+        TILE its own cap-DAC weights and comparator offset (the fleet-
+        faithful per-slot model of ``repro.silicon``).
     """
+    if silicon is not None and (cap_weights is not None
+                                or comparator_offset is not None):
+        raise ValueError(
+            "pass either per-tile `silicon` or the legacy shared "
+            "cap_weights/comparator_offset injection, not both")
     K = x2.shape[-1]
     step_x, _, x_planes = _input_operands(x2, cfg, sx)
 
@@ -213,6 +273,9 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     px = 2.0 ** jnp.arange(cfg.x_planes)
     gx = _chunk(step_x, m, K)                                    # (B, C, m)
     xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
+
+    if silicon is not None:
+        return _silicon_partials(gx, xp, ws, cfg, silicon, pw, px)
 
     if cap_weights is None and comparator_offset is None:
         # Nominal macro: the charge-average denominator is exactly m and
@@ -260,6 +323,52 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     return CimPartials(s1c, s2c, rxc, ws.r_w)
 
 
+def _silicon_partials(gx: jax.Array, xp: jax.Array, ws: CimWeightState,
+                      cfg: CimConfig, sil: ProjectionSilicon,
+                      pw: jax.Array, px: jax.Array) -> CimPartials:
+    """Per-tile silicon route: every (chunk, channel) tile digitises with
+    its own sampled cap-DAC weights and comparator offset.
+
+    The zero-padded tail columns of the final chunk keep their sampled
+    capacitance in the denominator (a padded cell stores 0 and never
+    discharges, but its bit-line parasitic still loads the DAC) — at σ=0
+    the denominator is therefore exactly ``m`` and this route collapses
+    bitwise to the nominal fast path.
+    """
+    nchunks, n_out = gx.shape[-2], ws.wt.shape[2]
+    if sil.cap.shape != (n_out, nchunks, cfg.m_columns):
+        raise ValueError(
+            f"silicon cap shape {sil.cap.shape} does not match this "
+            f"projection's ({n_out}, {nchunks}, {cfg.m_columns}) tiles")
+    cap = sil.cap.astype(jnp.float32)                            # (N, C, m)
+    cap_sum = jnp.sum(cap, axis=-1)                              # (N, C)
+    off = sil.offset.astype(jnp.float32)                         # (N, C)
+    wp = jnp.transpose(ws.wt.astype(jnp.float32),
+                       (2, 3, 0, 1))                             # (N, Pw, C, m)
+    gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
+    num1 = jnp.einsum("bcm,npcm,ncm->bnpc", gx, wp, cap)
+    codes1 = adc_codes(num1 / cap_sum[:, None, :], cfg.adc_bits,
+                       off[:, None, :])                          # (B, N, Pw, C)
+    s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
+    num2 = jnp.einsum("qbcm,ncm,ncm->qbnc", xp, gw, cap)
+    codes2 = adc_codes(num2 / cap_sum, cfg.adc_bits, off)        # (Px, B, N, C)
+    s2c = jnp.einsum("qbnc,q->bn", codes2, px)
+    rxc = _silicon_rx(xp, cfg, sil)                              # (B, 1)
+    return CimPartials(s1c, s2c, rxc, ws.r_w)
+
+
+def _silicon_rx(xp: jax.Array, cfg: CimConfig, sil: ProjectionSilicon
+                ) -> jax.Array:
+    """|x| dummy-row code sum digitised by the per-chunk rx instances."""
+    px = 2.0 ** jnp.arange(cfg.x_planes)
+    rx_cap = sil.rx_cap.astype(jnp.float32)                      # (C, m)
+    rx_sum = jnp.sum(rx_cap, axis=-1)                            # (C,)
+    num_rx = jnp.einsum("qbcm,cm->qbc", xp, rx_cap)
+    codes_rx = adc_codes(num_rx / rx_sum, cfg.adc_bits,
+                         sil.rx_offset.astype(jnp.float32))      # (Px, B, C)
+    return jnp.einsum("qbc,q->b", codes_rx, px)[:, None]         # (B, 1)
+
+
 def _nominal_rx(xp: jax.Array, cfg: CimConfig) -> jax.Array:
     """Nominal |x| dummy-row code sum from chunked x-planes (Px, B, C, m).
 
@@ -274,26 +383,32 @@ def _nominal_rx(xp: jax.Array, cfg: CimConfig) -> jax.Array:
     return jnp.einsum("pbc,p->b", codes_rx, px)[:, None]         # (B, 1)
 
 
-def cim_rx_partials(x2: jax.Array, cfg: CimConfig, sx: jax.Array
+def cim_rx_partials(x2: jax.Array, cfg: CimConfig, sx: jax.Array,
+                    silicon: Optional[ProjectionSilicon] = None
                     ) -> jax.Array:
-    """Nominal |x| dummy-row code sum R_x over the FULL contraction dim.
+    """|x| dummy-row code sum R_x over the FULL contraction dim.
 
     x2: (B, K) -> (B, 1). Bit-identical to the ``rxc`` field
     :func:`cim_input_partials` produces for the same (full-K) input slice:
     the dummy all-ones row is shared across every weight vector and has no
     N dependence, so round-interleaved execution (``core.programmed
     .cim_mf_matmul_swapped``) computes it once per input stream instead of
-    accumulating it tile by tile.
+    accumulating it tile by tile. With ``silicon``, the per-chunk rx
+    instances digitise the dummy row instead of the nominal ADC.
     """
     K = x2.shape[-1]
     _, _, x_planes = _input_operands(x2, cfg, sx)
-    return _nominal_rx(_chunk(x_planes, cfg.m_columns, K), cfg)
+    xp = _chunk(x_planes, cfg.m_columns, K)
+    if silicon is not None:
+        return _silicon_rx(xp, cfg, silicon)
+    return _nominal_rx(xp, cfg)
 
 
 def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,
                     sw: jax.Array, sx: jax.Array,
                     cap_weights: Optional[jax.Array] = None,
-                    comparator_offset: Optional[jax.Array] = None
+                    comparator_offset: Optional[jax.Array] = None,
+                    silicon: Optional[ProjectionSilicon] = None
                     ) -> CimPartials:
     """µArray pass over one tile: x2:(B, Kt) against w:(Kt, N_t).
 
@@ -306,7 +421,7 @@ def cim_mf_partials(x2: jax.Array, w: jax.Array, cfg: CimConfig,
     """
     ws = cim_program_weight_state(w, cfg, sw)
     return cim_input_partials(x2, ws, cfg, sx, cap_weights,
-                              comparator_offset)
+                              comparator_offset, silicon)
 
 
 def cim_mf_recombine(parts: CimPartials, sw: jax.Array, sx: jax.Array,
@@ -351,13 +466,22 @@ def cim_program_kernel_state(w: jax.Array, cfg: CimConfig,
 
 
 def cim_kernel_forward(x2: jax.Array, ks: CimKernelState, cfg: CimConfig,
-                       sw: jax.Array, sx: jax.Array) -> jax.Array:
+                       sw: jax.Array, sx: jax.Array,
+                       silicon: Optional[ProjectionSilicon] = None
+                       ) -> jax.Array:
     """Step-time fused Pallas pass against programmed kernel state.
 
     Per-chunk MAV + ADC + plane recombination without materialising the
     MAV tensor; only the streaming input side is packed per call (the
     x-plane packing is shared between the S2 and R_x passes).
     """
+    if silicon is not None:
+        raise NotImplementedError(
+            "per-slot silicon injection is not available on the fused "
+            "Pallas path: cim_mav_packed digitises with the nominal ADC "
+            "transfer inside the kernel. Program the projection with "
+            "use_kernel=False (plane-level state) to model silicon "
+            "variation.")
     from repro.kernels import ops as kops
     K = x2.shape[-1]
     m = cfg.m_columns
@@ -376,7 +500,8 @@ def cim_kernel_forward(x2: jax.Array, ks: CimKernelState, cfg: CimConfig,
 
 def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
                   cap_weights: Optional[jax.Array] = None,
-                  comparator_offset: Optional[jax.Array] = None) -> jax.Array:
+                  comparator_offset: Optional[jax.Array] = None,
+                  silicon: Optional[ProjectionSilicon] = None) -> jax.Array:
     """Hardware-faithful MF correlation x:(...,K) (+) w:(K,N) -> (...,N).
 
     cap_weights: optional (K,) positive per-column capacitor weights
@@ -385,6 +510,8 @@ def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
     out of the charge average (cap weight 0).
     comparator_offset: optional scalar/broadcastable offset in full-scale
     fractions added inside the ADC.
+    silicon: optional :class:`ProjectionSilicon` giving every µArray tile
+    its own sampled ADC instance (exclusive with the two legacy knobs).
     """
     K, N = w.shape
     batch_shape = x.shape[:-1]
@@ -393,14 +520,15 @@ def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,
     sw = quant.calibrate_scale(w, cfg.w_bits)
     sx = quant.calibrate_scale(x2, cfg.x_bits)
 
-    if cfg.use_kernel and cap_weights is None and comparator_offset is None:
+    if cfg.use_kernel and cap_weights is None and comparator_offset is None \
+            and silicon is None:
         # Fused Pallas path (no variability injection).
         ks = cim_program_kernel_state(w, cfg, sw)
         y = cim_kernel_forward(x2, ks, cfg, sw, sx)
         return y.reshape(batch_shape + (N,)).astype(x.dtype)
 
     parts = cim_mf_partials(x2, w, cfg, sw, sx, cap_weights,
-                            comparator_offset)
+                            comparator_offset, silicon)
     y = cim_mf_recombine(parts, sw, sx, cfg)
     return y.reshape(batch_shape + (N,)).astype(x.dtype)
 

@@ -254,12 +254,16 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
             from repro.core.programmed import (SwappedMacro,
                                                cim_mf_matmul_programmed,
                                                cim_mf_matmul_swapped)
+            # Per-slot silicon instances (repro.silicon.instance
+            # .attach_silicon embeds them as "sil", riding scans exactly
+            # like the programmed state they perturb).
+            sil = params.get("sil")
             if isinstance(prog, SwappedMacro):
                 # Fleet too small to pin this projection: round-interleaved
                 # execution re-programs tiles per input stream.
-                y = cim_mf_matmul_swapped(x, w, prog, cim_cfg)
+                y = cim_mf_matmul_swapped(x, w, prog, cim_cfg, silicon=sil)
             else:
-                y = cim_mf_matmul_programmed(x, prog, cim_cfg)
+                y = cim_mf_matmul_programmed(x, prog, cim_cfg, silicon=sil)
         else:
             y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
         if _calib_tap.error_active():

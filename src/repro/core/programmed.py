@@ -47,7 +47,8 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
-                            CimWeightState, _input_operands, _weight_operands,
+                            CimWeightState, ProjectionSilicon,
+                            _input_operands, _weight_operands,
                             cim_input_partials, cim_kernel_forward,
                             cim_mf_recombine, cim_program_kernel_state,
                             cim_program_weight_state, cim_rx_partials)
@@ -213,29 +214,43 @@ def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
 def cim_mf_matmul_programmed(x: jax.Array, prog: ProgrammedMacro,
                              cfg: CimConfig,
                              cap_weights: Optional[jax.Array] = None,
-                             comparator_offset: Optional[jax.Array] = None
+                             comparator_offset: Optional[jax.Array] = None,
+                             silicon: Optional[ProjectionSilicon] = None
                              ) -> jax.Array:
     """Step-time MF correlation x:(...,K) against a programmed macro.
 
     Bit-identical to ``cim_mf_matmul(x, w, cfg)`` whenever ``prog`` was
     programmed with the same ``cfg`` and the dynamic activation scale of
-    ``x`` (the parity tested by tests/test_programmed.py). Per-step
-    variability injection (cap mismatch / comparator offset) is supported
-    on the plane-level einsum path only.
+    ``x`` (the parity tested by tests/test_programmed.py).
+
+    Variability injection — the legacy shared draw (``cap_weights`` /
+    ``comparator_offset``) or per-tile ``silicon`` instances — runs on the
+    bit-packed plane-level state (:class:`CimPackedPlanes`): the packed
+    bytes expand to the exact {0,1} cells, so injection composes with bit
+    packing. The collapsed lossless state and the Pallas kernel layout
+    have no per-chunk ADC evaluations to perturb and raise instead.
     """
     K = x.shape[-1]
     batch_shape = x.shape[:-1]
     x2 = x.reshape(-1, K)
-    inject = cap_weights is not None or comparator_offset is not None
+    inject = (cap_weights is not None or comparator_offset is not None
+              or silicon is not None)
     if prog.state is not None:
         ws = unpack_weight_state(prog.state, cfg)
         parts = cim_input_partials(x2, ws, cfg, prog.sx,
-                                   cap_weights, comparator_offset)
+                                   cap_weights, comparator_offset, silicon)
         y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
     elif inject:
+        held = ("the collapsed exactly-lossless state"
+                if prog.lossless is not None
+                else "the Pallas kernel layout")
         raise ValueError(
-            "variability injection needs a plane-level ProgrammedMacro "
-            "(program with use_kernel=False, prefer_lossless=False)")
+            f"variability injection needs the (bit-packed) plane-level "
+            f"programmed state, but this macro holds {held}: its step "
+            f"collapses the per-chunk ADC evaluations that mismatch and "
+            f"comparator offset perturb. Re-program the projection with "
+            f"use_kernel=False and prefer_lossless=False "
+            f"(program_weights(..., prefer_lossless=False)).")
     elif prog.lossless is not None:
         parts = _lossless_partials(x2, prog.lossless, cfg, prog.sx,
                                    prog.r_w)
@@ -390,7 +405,9 @@ def swap_macro(w: jax.Array, cfg: CimConfig, tile_slots: int, *,
 
 
 def cim_mf_matmul_swapped(x: jax.Array, w: jax.Array, swap: SwappedMacro,
-                          cfg: CimConfig) -> jax.Array:
+                          cfg: CimConfig,
+                          silicon: Optional[ProjectionSilicon] = None
+                          ) -> jax.Array:
     """Round-interleaved MF correlation x:(...,K) against a swap-scheduled
     projection: program round r's tiles (weight-side work, per STREAM — the
     reprogram events billed by the compiler's Eq. 4 roll-up), stream the
@@ -401,6 +418,12 @@ def cim_mf_matmul_swapped(x: jax.Array, w: jax.Array, swap: SwappedMacro,
     integer-valued floats, so per-segment ``.at[].add`` accumulation is
     exact regardless of the round partition, and the single final
     recombine applies the same rounding sequence.
+
+    ``silicon`` carries the per-TILE ADC instances of the projection: the
+    swap rounds fill fleet slots 0..S-1 in tile order, and the silicon
+    gather (``repro.silicon.instance.projection_silicon``) uses exactly
+    that assignment, so tile (c, n) digitises through the same physical
+    slot's instance whether the projection is pinned or swapped.
     """
     sched = swap.sched
     K, N = sched.k, sched.n
@@ -416,11 +439,14 @@ def cim_mf_matmul_swapped(x: jax.Array, w: jax.Array, swap: SwappedMacro,
     for segments in sched.rounds:
         for (n0, n1, k0, k1) in segments:
             ws = cim_program_weight_state(w[k0:k1, n0:n1], cfg, swap.sw)
-            p = cim_input_partials(x2[:, k0:k1], ws, cfg, swap.sx)
+            sil = None if silicon is None else \
+                silicon.slice(n0, n1, k0, k1, sched.m_columns)
+            p = cim_input_partials(x2[:, k0:k1], ws, cfg, swap.sx,
+                                   silicon=sil)
             s1 = s1.at[:, n0:n1].add(p.s1c)
             s2 = s2.at[:, n0:n1].add(p.s2c)
             r_w = r_w.at[:, n0:n1].add(p.r_w)
-    rxc = cim_rx_partials(x2, cfg, swap.sx)
+    rxc = cim_rx_partials(x2, cfg, swap.sx, silicon)
     y = cim_mf_recombine(CimPartials(s1, s2, rxc, r_w), swap.sw, swap.sx,
                          cfg)
     return y.reshape(batch_shape + (N,)).astype(x.dtype)
@@ -514,21 +540,23 @@ def conv_weight_matrix(w: jax.Array) -> jax.Array:
 # Whole-model programming (the serve-time entry point).
 # ---------------------------------------------------------------------------
 
-def _program_nd(w: jax.Array, cfg: CimConfig, sx: jax.Array
-                ) -> ProgrammedMacro:
+def _program_nd(w: jax.Array, cfg: CimConfig, sx: jax.Array,
+                prefer_lossless: bool = True) -> ProgrammedMacro:
     """Program a (..., K, N) weight, vmapping over stacked leading axes
     (scan periods, experts) so programmed leaves slice exactly like the
     parameter leaves they shadow; ``sx`` carries one scale per stacked
     instance (shape = the leading axes)."""
     if w.ndim == 2:
-        return program_macro(w, cfg, sx=sx)
-    return jax.vmap(lambda wi, si: _program_nd(wi, cfg, si))(w, sx)
+        return program_macro(w, cfg, sx=sx, prefer_lossless=prefer_lossless)
+    return jax.vmap(lambda wi, si: _program_nd(wi, cfg, si,
+                                               prefer_lossless))(w, sx)
 
 
 def program_weights(params: Any, cfg: CimConfig, *,
                     act_amax: float = DEFAULT_ACT_AMAX,
                     scales: Optional[dict] = None,
-                    swap: Optional[dict[str, int]] = None) -> Any:
+                    swap: Optional[dict[str, int]] = None,
+                    prefer_lossless: bool = True) -> Any:
     """Program every MF projection in a model parameter tree.
 
     Returns a copy of ``params`` where each projection dict gains a
@@ -551,6 +579,11 @@ def program_weights(params: Any, cfg: CimConfig, *,
     whose round-interleaved execution re-programs tiles every input
     stream (the fleet cannot hold the model; see ``repro.serve.engine``).
     Only linear projections can swap; scales compose with ``swap``.
+
+    ``prefer_lossless=False`` forces plane-level (bit-packed) state even
+    at exactly-lossless ADC design points — required when per-tile
+    silicon variation will be injected at step time (the lossless
+    collapse has no per-chunk ADC evaluations to perturb).
     """
     default_sx = jnp.float32(default_static_sx(cfg, act_amax))
     scales = scales or {}
@@ -583,15 +616,17 @@ def program_weights(params: Any, cfg: CimConfig, *,
             for key in _EXPERT_KEYS:
                 w = node[key]
                 out[f"prog_{key}"] = _program_nd(
-                    w, cfg, sx_for(f"{name}.{key}", w))
+                    w, cfg, sx_for(f"{name}.{key}", w), prefer_lossless)
         elif kind == "conv":
             w2 = conv_weight_matrix(node["w"])
             out["prog"] = program_macro(
                 w2, cfg, sx=jnp.asarray(scales.get(name, default_sx),
-                                        jnp.float32))
+                                        jnp.float32),
+                prefer_lossless=prefer_lossless)
         else:
             out["prog"] = _program_nd(node["w"], cfg,
-                                      sx_for(name, node["w"]))
+                                      sx_for(name, node["w"]),
+                                      prefer_lossless)
         return out
 
     return map_projections(params, prog)
@@ -601,18 +636,29 @@ def _is_prog_key(k: Any) -> bool:
     return isinstance(k, str) and (k == "prog" or k.startswith("prog_"))
 
 
-def strip_programmed(params: Any) -> Any:
-    """Inverse of :func:`program_weights` (drop every programmed entry)."""
+def strip_keys(params: Any, drop: Callable[[Any], bool]) -> Any:
+    """Rebuild a parameter tree without the dict entries whose KEY
+    matches ``drop`` — the shared walk behind :func:`strip_programmed`
+    and the silicon lab's ``strip_silicon``. NamedTuple pytree nodes
+    (ProgrammedMacro, ProjectionSilicon, ...) are leaves: rebuilding
+    them as plain tuples would corrupt the tree, and they cannot contain
+    dict entries to strip."""
     def walk(node):
         if isinstance(node, dict):
-            return {k: walk(v) for k, v in node.items()
-                    if not _is_prog_key(k)}
+            return {k: walk(v) for k, v in node.items() if not drop(k)}
         if isinstance(node, tuple):
+            if hasattr(node, "_fields"):
+                return node
             return tuple(walk(v) for v in node)
         if isinstance(node, list):
             return [walk(v) for v in node]
         return node
     return walk(params)
+
+
+def strip_programmed(params: Any) -> Any:
+    """Inverse of :func:`program_weights` (drop every programmed entry)."""
+    return strip_keys(params, _is_prog_key)
 
 
 def _walk_programmed(params: Any, fn: Callable[[Any], None]) -> None:

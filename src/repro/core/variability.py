@@ -1,153 +1,21 @@
-"""Process-variability models + on-chip calibration (paper Sec. V-D, Fig. 8).
+"""Re-export shim: the variability models moved to ``repro.silicon``.
 
-Three effects are modelled, all as deterministic keyed-RNG Monte-Carlo:
-
-  1. PL-capacitor mismatch: per-column C_PL = C_nom * (1 + eps),
-     eps ~ N(0, sigma^2). Mismatched capacitors skew the charge averaging
-     (MAV = sum c_j b_j / sum c_j) so adjacent MAV levels can cross over
-     (Fig. 8a/8d). Global C_PL variation is common-mode (the reference DAC
-     lives in the other half of the same array) and cancels — only mismatch
-     matters, which is why we model eps per column only.
-
-  2. Column screening (Fig. 8b/8c): the strength of each PL capacitor is
-     estimated on-chip by counting charge cycles to a threshold; the most
-     extreme columns are 'discarded' by writing all-ones (they always
-     discharge, contributing only to the averaging denominator, and their
-     fixed numerator contribution is subtracted digitally).
-
-  3. Comparator offset (Fig. 8e): offset ~ N(0, sigma_cmp); a 2-bit
-     tail-current calibration quantises away the bulk, leaving the residue
-     (paper: +-45 mV -> +-12 mV).
+The process-variability distributions (cap mismatch, comparator offset,
+screening, Fig. 8 crossover Monte-Carlos) are now part of the silicon lab
+subsystem — :mod:`repro.silicon.variability` — next to the per-slot fleet
+instance sampling (:mod:`repro.silicon.instance`) that consumes them.
+This module keeps every historical import path working.
 """
 
-from __future__ import annotations
+from repro.silicon.variability import (VariabilityConfig, calibrated_offset,
+                                       estimate_cap_strength,
+                                       mav_crossover_probability,
+                                       sample_cap_weights,
+                                       sample_comparator_offset,
+                                       screen_columns)
 
-import dataclasses
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.cim import CimConfig, adc_quantize
-
-
-@dataclasses.dataclass(frozen=True)
-class VariabilityConfig:
-    cap_sigma: float = 0.04        # per-column C_PL mismatch (fraction)
-    comparator_sigma_v: float = 0.045 / 3.0  # so +-3 sigma ~ +-45 mV
-    v_full_scale: float = 0.4      # MAV full-scale voltage (= V_PCH)
-    calibrate_comparator: bool = True
-    comparator_cal_bits: int = 2   # tail-current DAC bits (Fig. 8e)
-    screen_fraction: float = 0.03  # discard worst ~3% of columns (Fig. 8d)
-    screen_cycles: int = 64        # charge-count cycles for estimation
-
-
-def sample_cap_weights(key: jax.Array, n_columns: int,
-                       cfg: VariabilityConfig) -> jax.Array:
-    """Per-column capacitor weights, 1.0 nominal."""
-    eps = cfg.cap_sigma * jax.random.normal(key, (n_columns,))
-    return 1.0 + eps
-
-
-def sample_comparator_offset(key: jax.Array, cfg: VariabilityConfig
-                             ) -> jax.Array:
-    """Comparator offset as a fraction of ADC full scale, post-calibration."""
-    off_v = cfg.comparator_sigma_v * jax.random.normal(key, ())
-    if cfg.calibrate_comparator:
-        off_v = calibrated_offset(off_v, cfg)
-    return off_v / cfg.v_full_scale
-
-
-def calibrated_offset(offset_v: jax.Array, cfg: VariabilityConfig
-                      ) -> jax.Array:
-    """2-bit tail-current calibration: subtract the nearest DAC step.
-
-    The counter-based scheme estimates the offset sign from the metastable
-    0/1 statistics and adds tail transistors until the bias flips; the
-    residue is half an LSB of the calibration DAC. +-45 mV at 2 bits ->
-    steps of 30 mV over [-45, 45] -> residue <= 15 mV ~ the paper's 12 mV.
-    """
-    full = 3.0 * cfg.comparator_sigma_v            # +-45 mV range
-    steps = 2 ** cfg.comparator_cal_bits
-    lsb = 2.0 * full / steps
-    return offset_v - jnp.clip(jnp.round(offset_v / lsb), -(steps // 2),
-                               steps // 2) * lsb
-
-
-def estimate_cap_strength(cap_weights: jax.Array, cfg: VariabilityConfig,
-                          key: Optional[jax.Array] = None) -> jax.Array:
-    """On-chip charge-cycle counting estimator of per-column C_PL (Fig. 8c).
-
-    Each cycle deposits charge ~ c_j onto the sum line; cycles to cross a
-    fixed threshold ~ T/c_j (+ comparator sampling noise). Returns the
-    estimated relative strength (bigger = stronger capacitor).
-    """
-    thresh = cfg.screen_cycles  # nominal column crosses in screen_cycles
-    cycles = jnp.ceil(thresh / cap_weights)
-    if key is not None:
-        cycles = cycles + jax.random.randint(key, cycles.shape, 0, 2)
-    return thresh / cycles
-
-
-def screen_columns(cap_weights: jax.Array, cfg: VariabilityConfig,
-                   key: Optional[jax.Array] = None) -> jax.Array:
-    """Boolean mask of columns to KEEP after screening the extremes.
-
-    Discards the ``screen_fraction`` columns whose estimated strength
-    deviates most from the median.
-    """
-    n = cap_weights.shape[0]
-    est = estimate_cap_strength(cap_weights, cfg, key)
-    dev = jnp.abs(est - jnp.median(est))
-    k_discard = int(round(cfg.screen_fraction * n))
-    if k_discard == 0:
-        return jnp.ones((n,), bool)
-    cutoff = jnp.sort(dev)[n - k_discard]   # smallest discarded deviation
-    return dev < cutoff
-
-
-# ---------------------------------------------------------------------------
-# Fig. 8d: MAV crossover probability Monte-Carlo.
-# ---------------------------------------------------------------------------
-
-def mav_crossover_probability(key: jax.Array, cim: CimConfig,
-                              var: VariabilityConfig, n_trials: int = 2000,
-                              screened: bool = False) -> jax.Array:
-    """P(two adjacent MAV levels cross) for an M-column µArray half.
-
-    Fig. 8a/8d: each MAV level k is realised by *some* subset of k
-    discharging columns, so mismatched capacitors spread each level into a
-    distribution. We Monte-Carlo the per-comparison crossover: draw a
-    mismatch sample, draw independent random column subsets realising
-    counts k and k+1, and report the probability that the level-(k+1)
-    realisation does not exceed the level-k realisation (averaged over k
-    and trials). ``screened=True`` first discards the extreme columns via
-    the on-chip estimator (Fig. 8b/8c): they are written all-ones, always
-    discharge, and their constant contribution is removed digitally.
-    """
-    m = cim.m_columns
-    n_keep = m - (int(round(var.screen_fraction * m)) if screened else 0)
-
-    def one_trial(k):
-        kc, ks, k1, k2 = jax.random.split(k, 4)
-        caps = sample_cap_weights(kc, m, var)
-        if screened:
-            keep = screen_columns(caps, var, ks)
-        else:
-            keep = jnp.ones((m,), bool)
-        denom = jnp.sum(caps)
-
-        def level_caps(kperm):
-            # random order with kept columns first: signal subsets draw
-            # from kept columns only; discarded columns always discharge
-            # and their constant term cancels in adjacent comparisons.
-            perm = jax.random.permutation(kperm, m)
-            order = perm[jnp.argsort(~keep[perm], stable=True)]
-            return jnp.cumsum(caps[order]) / denom
-
-        ca, cb = level_caps(k1), level_caps(k2)
-        cross = (cb[1:] <= ca[:-1]) & (jnp.arange(m - 1) < n_keep - 1)
-        return jnp.sum(cross.astype(jnp.float32)) / (n_keep - 1)
-
-    keys = jax.random.split(key, n_trials)
-    return jnp.mean(jax.vmap(one_trial)(keys))
+__all__ = [
+    "VariabilityConfig", "calibrated_offset", "estimate_cap_strength",
+    "mav_crossover_probability", "sample_cap_weights",
+    "sample_comparator_offset", "screen_columns",
+]

@@ -93,7 +93,8 @@ def conv_apply(p: dict, x: jax.Array, mode: ExecMode | str, *,
             # conv_weight_matrix operand once — step-time input work only.
             from repro.core.programmed import cim_mf_matmul_programmed
             y = cim_mf_matmul_programmed(flat, prog,
-                                         cim_cfg or CimConfig())
+                                         cim_cfg or CimConfig(),
+                                         silicon=p.get("sil"))
         else:
             y = cim_mod.cim_mf_matmul_ste(flat, w2, cim_cfg or CimConfig())
         if _calib_tap.error_active():

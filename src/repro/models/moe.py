@@ -107,6 +107,10 @@ def _expert_ffn(experts: dict, idx_or_slice, h: jax.Array,
             d["prog"] = _sel(experts[f"prog_{role}"], idx_or_slice)
         if f"obs_id_{role}" in experts:
             d["obs_id"] = _sel(experts[f"obs_id_{role}"], idx_or_slice)
+        if f"sil_{role}" in experts:
+            # Per-slot silicon instances (repro.silicon) slice by expert
+            # exactly like the programmed state they perturb.
+            d["sil"] = _sel(experts[f"sil_{role}"], idx_or_slice)
     z = (jax.nn.silu(blocks.proj_apply(gate, h, mode, **kw))
          * blocks.proj_apply(up, h, mode, **kw))
     return blocks.proj_apply(down, z, mode, **kw)

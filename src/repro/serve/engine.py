@@ -26,6 +26,18 @@ inputs through the resident tiles, swap in round r+1) — bit-exact against
 the pinned path, with every reprogram event charged against the Eq. 4
 roll-up (`repro.compiler.cost.serve_reload_cost`) in the
 :class:`ServeReport` each ``run()`` produces.
+
+Silicon-aware serving (``repro.silicon``): constructed with a
+``SiliconConfig``, the engine samples one ADC instance per fleet tile
+slot (cap-DAC mismatch, comparator offset + tail-current correction,
+noise floor, drift directions) and every stream decodes through the
+per-tile silicon datapath. A ``DriftPolicy`` adds the aging loop: the
+fleet ages one unit per input stream, drifted views are refreshed on
+cadence, and a probe corpus is replayed against the float MF reference
+on cadence — past the alarm thresholds the engine re-runs the comparator
+offset calibration, re-measures per-projection activation scales on the
+healed datapath, re-programs every macro, and charges the rewrite in the
+``ServeReport`` next to the per-stream reload costs.
 """
 
 from __future__ import annotations
@@ -81,6 +93,12 @@ class ServeReport:
     of a non-pinned schedule, which is what the Eq. 4 reload fields
     charge (``repro.compiler.cost.serve_reload_cost``). Pinned models
     (and engines built without a fleet) report zero reload cost.
+
+    The ``drift_*`` / ``recal_*`` fields account the silicon lab's
+    auto-recalibration (``repro.silicon.drift``): every recalibration
+    rewrites the whole model's µArray weights (the scales changed), so
+    its reload bits are charged next to the per-stream reload cost at the
+    same fleet write energy / load-port bandwidth.
     """
 
     decode_tokens: int          # tokens generated this run
@@ -96,6 +114,12 @@ class ServeReport:
     reload_energy_j: float
     reload_s: float
     utilization: float          # fleet compute-slot occupancy (schedule)
+    drift_checks: int = 0       # drift probes run this run
+    drift_alarms: int = 0       # probes that raised the drift alarm
+    recalibrations: int = 0     # auto-recalibration events this run
+    recal_reload_bits: int = 0  # µArray weight bits rewritten by recals
+    recal_energy_j: float = 0.0
+    recal_s: float = 0.0
 
     @property
     def streams(self) -> int:
@@ -105,12 +129,17 @@ class ServeReport:
     def reload_energy_nj(self) -> float:
         return self.reload_energy_j * 1e9
 
+    @property
+    def recal_energy_nj(self) -> float:
+        return self.recal_energy_j * 1e9
+
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
                  seed: int = 0, program: bool = True, calibration=None,
-                 fleet=None, batched_prefill: Optional[bool] = None):
+                 fleet=None, batched_prefill: Optional[bool] = None,
+                 silicon=None, silicon_key=None, drift=None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -125,11 +154,27 @@ class ServeEngine:
         # ``fleet`` (a repro.compiler.tiling.Fleet) makes serving
         # fleet-faithful: models that exceed its resident tile slots are
         # served round-interleaved (see module docstring).
+        # ``silicon`` (a repro.silicon SiliconConfig) samples one ADC
+        # instance per fleet tile slot (keyed by ``silicon_key``, default
+        # PRNGKey(silicon.seed)) and serves every decode/prefill stream
+        # through the per-tile silicon datapath.
+        # ``drift`` (a repro.silicon.drift DriftPolicy) probes the live
+        # datapath against the calibration baseline every
+        # ``check_interval`` streams and auto-recalibrates on alarm.
         self._exec_params = params
         self.programmed = False
         self.calibration = None
         self.fleet = fleet
         self.schedule = None
+        self.silicon = None                 # sampled FleetSilicon
+        self.silicon_cfg = None
+        self.drift = drift
+        self.drift_log = []                 # DriftStatus per probe
+        self.last_drift_status = None
+        self._monitor = None
+        self._registry = None
+        self._swap_map = None
+        self._drifting = False
         programmable = (program and cfg.mf.enabled
                         and cfg.mf.mode == "cim_sim")
         if calibration is not None and not programmable:
@@ -144,8 +189,22 @@ class ServeEngine:
                 "CIM macros (program=False or the config does not map "
                 "projections to cim_sim) — the schedule would not "
                 "describe the executed datapath")
+        if silicon is not None:
+            if not programmable or fleet is None:
+                raise ValueError(
+                    "silicon variation is per fleet tile slot: it needs a "
+                    "programmed CIM engine built with a fleet (the slots "
+                    "the sampled ADC instances live in)")
+            if cfg.mf.cim.use_kernel:
+                raise ValueError(
+                    "per-slot silicon injection is not available on the "
+                    "fused Pallas kernel path (use use_kernel=False)")
+        if drift is not None and calibration is None:
+            raise ValueError(
+                "drift monitoring compares live probes against the "
+                "programmed calibration artifact — construct the engine "
+                "with calibration=")
         if programmable:
-            from repro.core.programmed import program_weights
             scales = None
             if calibration is not None:
                 from repro.calib.artifact import CalibrationArtifact
@@ -159,10 +218,29 @@ class ServeEngine:
                 _check_calibration_names(params, calibration)
                 scales = calibration.scales
                 self.calibration = calibration
-            swap = self._compile_fleet_schedule() if fleet is not None \
-                else None
-            self._exec_params = program_weights(params, cfg.mf.cim,
-                                                scales=scales, swap=swap)
+            self._swap_map = self._compile_fleet_schedule() \
+                if fleet is not None else None
+            self._base_params = params
+            if drift is not None:
+                # Observer ids ride the programmed tree so the live amax
+                # tap (and recalibration observe passes) can address every
+                # projection instance.
+                from repro.calib.corpus import attach_observer_ids
+                self._base_params, self._registry = \
+                    attach_observer_ids(params)
+            if silicon is not None:
+                from repro.silicon.instance import (SiliconConfig,
+                                                    fleet_silicon)
+                if not isinstance(silicon, SiliconConfig):
+                    raise TypeError(
+                        f"silicon= takes a repro.silicon.SiliconConfig, "
+                        f"got {type(silicon).__name__}")
+                self.silicon_cfg = silicon
+                self.silicon = fleet_silicon(fleet, silicon, silicon_key)
+                self._drifting = (
+                    silicon.drift_sigma_v_per_kstream != 0.0
+                    or silicon.drift_cap_sigma_per_kstream != 0.0)
+            self._program(scales)
             self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
         self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
@@ -188,7 +266,41 @@ class ServeEngine:
         self._decode_tokens = 0
         self._prefill_calls = 0
         self._prefill_tokens = 0
+        self._drift_checks = 0
+        self._drift_alarms = 0
+        self._recals = 0
+        self._recal_bits = 0
         self.last_report: Optional[ServeReport] = None
+        if drift is not None:
+            from repro.silicon.drift import DriftMonitor
+            self._monitor = DriftMonitor(cfg, params, drift, self._registry,
+                                         scales or {}, cfg.mf.cim.x_bits)
+            # Pin the pre-drift probe error: the recovery gate every
+            # post-recalibration measurement is judged against.
+            self._monitor.record_baseline(self._exec_params)
+
+    def _program(self, scales) -> None:
+        """(Re-)program every macro from the base tree, then overlay the
+        current silicon state. Plane-level (bit-packed) state is forced
+        whenever silicon is attached — the lossless collapse has no ADC
+        evaluations to perturb."""
+        from repro.core.programmed import program_weights
+        self._programmed_params = program_weights(
+            self._base_params, self.cfg.mf.cim, scales=scales,
+            swap=self._swap_map, prefer_lossless=self.silicon is None)
+        self._refresh_silicon()
+
+    def _refresh_silicon(self) -> None:
+        """Re-gather the per-projection silicon views from the fleet's
+        CURRENT state (age/corrections) into the exec tree."""
+        if self.silicon is None:
+            self._exec_params = self._programmed_params
+            return
+        from repro.silicon.instance import attach_silicon
+        pinned = self.schedule.pinned if self.schedule is not None else True
+        self._exec_params = attach_silicon(
+            self._programmed_params, self.silicon, self.silicon_cfg,
+            self.cfg.mf.cim, pinned=pinned)
 
     def _compile_fleet_schedule(self):
         """Compile the model's projections onto the fleet; returns the
@@ -285,6 +397,7 @@ class ServeEngine:
                                       jnp.asarray(valid))
         self._prefill_calls += 1
         self._prefill_tokens += int(valid.sum())
+        self._after_stream()
 
     def _validate(self, reqs: list[Request]) -> None:
         """Reject malformed requests BEFORE any engine state mutates."""
@@ -329,6 +442,82 @@ class ServeEngine:
                     len(req.out) >= req.max_new_tokens:
                 req.done = True
                 self.requests[s] = None
+        self._after_stream()
+
+    # -- silicon aging + drift monitoring -----------------------------------
+
+    # Re-gather cadence for a drifting fleet served WITHOUT a DriftPolicy
+    # (the silicon still ages; nobody is watching the probe).
+    _SILICON_UPDATE_DEFAULT = 8
+
+    def _after_stream(self) -> None:
+        """Per-input-stream hook: age the silicon, refresh the drifted
+        views on cadence, run the drift probe on cadence."""
+        if self.silicon is None and self._monitor is None:
+            return
+        streams = self._decode_steps + self._prefill_calls
+        if self.silicon is not None and self._drifting:
+            # A fleet with zero drift sigmas never changes with age, so
+            # static-silicon engines skip the per-token aging entirely.
+            from repro.silicon.instance import age
+            self.silicon = age(self.silicon, 1)
+            interval = (self.drift.silicon_update_interval
+                        if self.drift is not None
+                        else self._SILICON_UPDATE_DEFAULT)
+            if streams % max(interval, 1) == 0:
+                self._refresh_silicon()
+        if (self._monitor is not None
+                and streams % max(self.drift.check_interval, 1) == 0):
+            self._drift_check(streams)
+
+    def _drift_check(self, streams: int) -> None:
+        self._drift_checks += 1
+        status = self._monitor.check(self._exec_params, streams)
+        if status.alarm:
+            self._drift_alarms += 1
+            if self.drift.auto_recalibrate:
+                post = self._recalibrate(streams)
+                status = dataclasses.replace(status, recalibrated=True,
+                                             post_rel_l2=post)
+        self.drift_log.append(status)
+        self.last_drift_status = status
+
+    def _recalibrate(self, streams: int) -> float:
+        """Auto-recalibration: re-run the comparator offset calibration
+        against the DRIFTED silicon, re-measure per-projection activation
+        scales on the healed datapath, re-program every macro, and charge
+        the full weight rewrite. Returns the post-recovery probe rel-L2.
+        """
+        from repro.calib.artifact import CalibrationArtifact
+        from repro.calib.corpus import scales_from_stats
+        if self.silicon is not None:
+            from repro.silicon.instance import recalibrate_comparators
+            self.silicon = recalibrate_comparators(self.silicon,
+                                                   self.silicon_cfg)
+            self._refresh_silicon()
+        # One probe replay on the healed datapath measures the live
+        # activation statistics (the monitor's observe forward is
+        # compiled once; re-attachment changes leaf values only).
+        _, collector = self._monitor.observe(self._exec_params)
+        scales = scales_from_stats(collector, self._registry,
+                                   self.cfg.mf.cim.x_bits,
+                                   self.calibration.method)
+        self._program(scales)
+        self._monitor.set_scales(scales)
+        self.calibration = CalibrationArtifact(
+            method=self.calibration.method, x_bits=self.calibration.x_bits,
+            scales=scales,
+            meta=dict(self.calibration.meta,
+                      recalibrated_at_stream=streams))
+        self._recals += 1
+        if self.schedule is not None:
+            self._recal_bits += (self.schedule.total_tiles
+                                 * self.fleet.tile_weight_bits)
+        post = self._monitor.rel_l2(self._exec_params)
+        # Future drift is judged against the healed datapath, not day
+        # zero — the re-programmed scales shifted the noise floor.
+        self._monitor.rebaseline(post)
+        return post
 
     def run(self, reqs: list[Request], max_ticks: int = 10_000
             ) -> list[Request]:
@@ -350,6 +539,8 @@ class ServeEngine:
         t0 = time.perf_counter()
         steps0, tokens0 = self._decode_steps, self._decode_tokens
         pcalls0, ptokens0 = self._prefill_calls, self._prefill_tokens
+        checks0, alarms0 = self._drift_checks, self._drift_alarms
+        recals0, rbits0 = self._recals, self._recal_bits
         pending = list(reqs)
         done: list[Request] = []
         ticks = 0
@@ -378,7 +569,11 @@ class ServeEngine:
             decode_tokens=self._decode_tokens - tokens0,
             prefill_calls=self._prefill_calls - pcalls0,
             prefill_tokens=self._prefill_tokens - ptokens0,
-            elapsed_s=elapsed)
+            elapsed_s=elapsed,
+            drift_checks=self._drift_checks - checks0,
+            drift_alarms=self._drift_alarms - alarms0,
+            recalibrations=self._recals - recals0,
+            recal_reload_bits=self._recal_bits - rbits0)
         # Submission order first; extras (in-flight from direct submit
         # calls before this run) keep completion order after.
         submitted = {id(r) for r in reqs}
@@ -387,12 +582,15 @@ class ServeEngine:
 
     def _build_report(self, *, decode_steps: int, decode_tokens: int,
                       prefill_calls: int, prefill_tokens: int,
-                      elapsed_s: float) -> ServeReport:
+                      elapsed_s: float, drift_checks: int = 0,
+                      drift_alarms: int = 0, recalibrations: int = 0,
+                      recal_reload_bits: int = 0) -> ServeReport:
         pinned = None
         rounds_max = 0
         utilization = 0.0
         reprogram = reload_bits = 0
         reload_j = reload_s = 0.0
+        recal_j = recal_s = 0.0
         if self.schedule is not None:
             from repro.compiler.cost import serve_reload_cost
             pinned = self.schedule.pinned
@@ -404,6 +602,10 @@ class ServeEngine:
             reload_bits = reload.reload_bits
             reload_j = reload.reload_energy_j
             reload_s = reload.reload_s
+            # Recalibration rewrites are priced at the same fleet weight-
+            # load port the per-stream reloads go through.
+            recal_j = recal_reload_bits * self.fleet.reload_j_per_bit
+            recal_s = recal_reload_bits / self.fleet.reload_bits_per_s
         return ServeReport(
             decode_tokens=decode_tokens, decode_steps=decode_steps,
             prefill_tokens=prefill_tokens, prefill_calls=prefill_calls,
@@ -412,7 +614,10 @@ class ServeEngine:
             pinned=pinned, rounds_max=rounds_max,
             reprogram_events=reprogram, reload_bits=reload_bits,
             reload_energy_j=reload_j, reload_s=reload_s,
-            utilization=utilization)
+            utilization=utilization, drift_checks=drift_checks,
+            drift_alarms=drift_alarms, recalibrations=recalibrations,
+            recal_reload_bits=recal_reload_bits, recal_energy_j=recal_j,
+            recal_s=recal_s)
 
 
 def _check_calibration_names(params, calibration) -> None:

@@ -1,0 +1,37 @@
+"""Silicon lab: fleet-scale analog non-ideality modeling for the CIM runtime.
+
+Three layers:
+
+  * :mod:`repro.silicon.variability` — the distributional models (cap
+    mismatch, comparator offset, tail-current calibration, Fig. 8
+    screening/crossover Monte-Carlos); re-exported by the legacy
+    ``repro.core.variability`` path.
+  * :mod:`repro.silicon.instance` — per-slot sampled ADC instances of a
+    whole fleet (:class:`FleetSilicon`), drift/aging, and the
+    projection-shaped gathers the step-time datapath consumes.
+  * :mod:`repro.silicon.montecarlo` / :mod:`repro.silicon.drift` — vmapped
+    multi-seed yield sweeps and the drift monitor the serve engine uses
+    for auto-recalibration (imported lazily by their consumers: they pull
+    in the calibration lab).
+"""
+
+from repro.silicon.variability import (VariabilityConfig, calibrated_offset,
+                                       mav_crossover_probability,
+                                       sample_cap_weights,
+                                       sample_comparator_offset,
+                                       screen_columns)
+from repro.silicon.instance import (FleetSilicon, SiliconConfig,
+                                    age, attach_silicon, effective_caps,
+                                    effective_offsets, fleet_silicon, merge,
+                                    projection_silicon,
+                                    recalibrate_comparators, sample_fleet,
+                                    strip_silicon)
+
+__all__ = [
+    "VariabilityConfig", "calibrated_offset", "mav_crossover_probability",
+    "sample_cap_weights", "sample_comparator_offset", "screen_columns",
+    "FleetSilicon", "SiliconConfig", "age", "attach_silicon",
+    "effective_caps", "effective_offsets", "fleet_silicon", "merge",
+    "projection_silicon", "recalibrate_comparators", "sample_fleet",
+    "strip_silicon",
+]

@@ -1,0 +1,215 @@
+"""Drift monitor: detect silicon aging in a serving engine and steer
+auto-recalibration.
+
+Long-lived CIM serving cannot assume the silicon it calibrated at day
+zero: comparator offsets and cap-DAC weights drift with age, and the
+programmed per-projection activation scales go stale with them. The
+monitor closes ROADMAP's "re-calibration drift detection" loop:
+
+  * a fixed PROBE corpus is replayed through two forwards — the float MF
+    reference (the distribution calibration targeted) and the live CIM
+    datapath (programmed state + current silicon) — and the end-to-end
+    logits rel-L2 is compared against the baseline recorded when the
+    engine was built;
+  * the same probe runs under the calibration lab's activation tap
+    (``repro.calib``), giving live per-projection amax which is compared
+    against the DAC full scale the programmed
+    :class:`~repro.calib.artifact.CalibrationArtifact` scales imply — a
+    clipping ratio > 1 means activations have outgrown the programmed
+    input DAC range;
+  * either signal past its threshold raises a drift ALARM; the serve
+    engine then re-runs the comparator offset calibration
+    (:func:`repro.silicon.instance.recalibrate_comparators`) and
+    re-programs measured activation scales, charging the reload against
+    the Eq. 4 roll-up in its :class:`~repro.serve.engine.ServeReport`.
+
+The monitor itself is engine-agnostic: it measures, the engine acts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.calib import tap
+from repro.calib.corpus import ObserverRegistry, StatsCollector
+from repro.calib.observers import ObserverConfig
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """When to probe, when to alarm, whether to self-heal.
+
+    ``probe_batches`` are ordinary forward batches (LMs: ``{"tokens":
+    (B, T)}``) — kept small; they run at every check and double as the
+    recalibration corpus. Intervals are in input STREAMS (decode steps +
+    batched-prefill calls), the clock the drift process runs on.
+    """
+
+    probe_batches: Sequence[Any]
+    check_interval: int = 32            # streams between drift probes
+    silicon_update_interval: int = 8    # streams between drift re-gathers
+    rel_l2_alarm_ratio: float = 1.5     # alarm: rel_l2 > ratio * baseline
+    rel_l2_alarm_floor: float = 0.02    # ... and above this absolute floor
+    clip_alarm_ratio: float = 1.25      # alarm: live amax > ratio * DAC range
+    auto_recalibrate: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftStatus:
+    """One drift probe's verdict (``ServeEngine.drift_log`` entries)."""
+
+    stream: int
+    rel_l2: float
+    baseline_rel_l2: float
+    max_clip_ratio: float
+    alarm: bool
+    reasons: tuple[str, ...]
+    recalibrated: bool = False
+    post_rel_l2: float = math.nan
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {"reasons": list(self.reasons)}
+
+
+class DriftMonitor:
+    """Probe harness bound to one LM config + probe corpus.
+
+    The float-reference logits are computed once (they never drift). The
+    live probe forward is traced exactly once — inside an observing
+    context so the activation-tap ``io_callback``s are staged into the
+    compiled program, bound to one long-lived collector whose
+    accumulators are zeroed per probe — and re-run against whatever exec
+    params the engine currently serves (recalibration changes leaf
+    VALUES only, so no retrace). One replay therefore yields BOTH drift
+    signals: the probe logits for rel-L2 and the per-projection live
+    amax for the clip check.
+    """
+
+    def __init__(self, cfg, ref_params: Any, policy: DriftPolicy,
+                 registry: ObserverRegistry, scales: dict,
+                 x_bits: int, obs_cfg: ObserverConfig = ObserverConfig()):
+        from repro.calib.report import lm_ref_config
+        from repro.models import transformer as T
+        self.policy = policy
+        self.registry = registry
+        self.obs_cfg = obs_cfg
+        self._cfg = cfg
+        self._scales = dict(scales)
+        self._qmax = quant.qmax(x_bits)
+        ref_cfg = lm_ref_config(cfg)
+        ref_fwd = jax.jit(lambda p, b: T.lm_forward(p, b, ref_cfg)[0])
+        self._ref_logits = [np.asarray(ref_fwd(ref_params, b), np.float32)
+                            for b in policy.probe_batches]
+        self._collector = StatsCollector(registry.n_ids, obs_cfg)
+        self._cim_fwd = jax.jit(lambda p, b: T.lm_forward(p, b, cfg)[0])
+        self.baseline_rel_l2: Optional[float] = None
+        # The day-zero probe error, never re-baselined: recovery gates
+        # (is the healed datapath comparable to fresh silicon?) are
+        # judged against this even after maintenance re-baselines.
+        self.initial_baseline_rel_l2: Optional[float] = None
+
+    # -- probes -------------------------------------------------------------
+
+    def observe(self, exec_params: Any) -> tuple[float, StatsCollector]:
+        """One probe replay of the CIM datapath: returns the logits
+        rel-L2 vs the frozen float reference AND the filled activation
+        collector (count/amax/histogram per projection instance)."""
+        col = self._collector
+        col.count[:] = 0.0
+        col.amax[:] = 0.0
+        col.hist[:] = 0.0
+        num = den = 0.0
+        # The observing context is re-entered every probe so that any
+        # retrace (first call, new batch shape) stages the callbacks
+        # into THIS collector; already-compiled replays carry them.
+        with tap.observing(col):
+            for batch, ref in zip(self.policy.probe_batches,
+                                  self._ref_logits):
+                cim = np.asarray(self._cim_fwd(exec_params, batch),
+                                 np.float32)
+                num += float(np.sum((cim - ref) ** 2))
+                den += float(np.sum(ref ** 2))
+        jax.effects_barrier()
+        return float(np.sqrt(num / max(den, 1e-30))), col
+
+    def rel_l2(self, exec_params: Any) -> float:
+        """End-to-end probe logits error of the live datapath vs the
+        frozen float MF reference."""
+        return self.observe(exec_params)[0]
+
+    def live_amax(self, exec_params: Any) -> dict[str, np.ndarray]:
+        """Per-projection live activation amax through the calib tap
+        (one observe replay of the probe corpus on the CIM datapath)."""
+        return self._amax_map(self.observe(exec_params)[1])
+
+    def _amax_map(self, col: StatsCollector) -> dict[str, np.ndarray]:
+        out: dict[str, np.ndarray] = {}
+        for name, (off, shape) in self.registry.entries.items():
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            out[name] = col.amax[off:off + n].reshape(shape or ())
+        return out
+
+    def _max_clip_ratio(self, live: dict[str, np.ndarray]) -> float:
+        """max over projections of live amax / programmed DAC full scale
+        (scale * qmax): > 1 means the programmed artifact now clips."""
+        worst = 0.0
+        for name, sx in self._scales.items():
+            if name not in live:
+                continue
+            full = np.asarray(sx, np.float64) * self._qmax
+            ratio = np.asarray(live[name], np.float64) / np.maximum(full,
+                                                                    1e-30)
+            worst = max(worst, float(np.max(ratio)))
+        return worst
+
+    def max_clip_ratio(self, exec_params: Any) -> float:
+        return self._max_clip_ratio(self.live_amax(exec_params))
+
+    def set_scales(self, scales: dict) -> None:
+        """Point the clip check at freshly re-programmed scales."""
+        self._scales = dict(scales)
+
+    def check(self, exec_params: Any, stream: int) -> DriftStatus:
+        """One full drift probe against the recorded baseline (a single
+        replay of the probe corpus feeds both alarm signals)."""
+        if self.baseline_rel_l2 is None:
+            raise RuntimeError("drift monitor has no baseline — call "
+                               "record_baseline() before check()")
+        rel, col = self.observe(exec_params)
+        clip = self._max_clip_ratio(self._amax_map(col))
+        pol = self.policy
+        reasons = []
+        if (rel > pol.rel_l2_alarm_ratio * self.baseline_rel_l2
+                and rel > pol.rel_l2_alarm_floor):
+            reasons.append(
+                f"probe rel_l2 {rel:.4f} > {pol.rel_l2_alarm_ratio:.2f}x "
+                f"baseline {self.baseline_rel_l2:.4f}")
+        if clip > pol.clip_alarm_ratio:
+            reasons.append(
+                f"live amax is {clip:.2f}x the programmed DAC full scale "
+                f"(> {pol.clip_alarm_ratio:.2f}x)")
+        return DriftStatus(stream=stream, rel_l2=rel,
+                           baseline_rel_l2=self.baseline_rel_l2,
+                           max_clip_ratio=clip, alarm=bool(reasons),
+                           reasons=tuple(reasons))
+
+    def record_baseline(self, exec_params: Any) -> float:
+        """Measure and pin the pre-drift probe error (the recovery gate)."""
+        self.baseline_rel_l2 = self.rel_l2(exec_params)
+        if self.initial_baseline_rel_l2 is None:
+            self.initial_baseline_rel_l2 = self.baseline_rel_l2
+        return self.baseline_rel_l2
+
+    def rebaseline(self, rel_l2: float) -> None:
+        """Reset the alarm baseline after maintenance (recalibration):
+        re-programmed scales trade some quantisation resolution for DAC
+        headroom, so the healed probe error — not the day-zero one — is
+        the reference future drift is measured against (otherwise a
+        successfully recovered engine re-alarms every check)."""
+        self.baseline_rel_l2 = float(rel_l2)

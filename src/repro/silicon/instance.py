@@ -1,0 +1,292 @@
+"""Per-slot silicon instances of a CIM SRAM fleet.
+
+The paper's SA-ADC is *memory-immersed*: its capacitive DAC is the
+bit-line parasitic capacitance of the µArray half it serves, and its
+comparator is that half's sense amplifier. Mismatch, offset, noise and
+drift are therefore properties of the physical TILE SLOT, shared by every
+weight tile ever programmed into it — not of the weights. This module
+samples one ADC instance per fleet slot and gathers them into the
+projection-shaped :class:`~repro.core.cim.ProjectionSilicon` views the
+step-time datapath consumes.
+
+Sampling model (all draws keyed, deterministic, mergeable):
+
+  * cap-DAC weights: per-column C_PL = 1 + eps, eps ~ N(0, cap_sigma^2) —
+    the bit-line parasitic mismatch of :mod:`repro.silicon.variability`;
+  * comparator offset: N(0, comparator_sigma_v^2) volts, bulk-corrected by
+    the 2-bit tail-current DAC (``calibrated_offset``) at time zero;
+  * thermal noise: a static per-slot N(0, thermal_sigma_v^2) draw standing
+    in for the comparator's input-referred noise floor — pessimistic
+    (real thermal noise averages over conversions) and, unlike offset,
+    never touched by recalibration;
+  * drift: per-slot constant-rate aging — slot s drifts at
+    ``drift_sigma * dir_s / 1000`` per stream with dir_s ~ N(0,1), so at
+    age t the fleet's offsets have spread by N(0, (drift_sigma*t/1000)^2)
+    on top of the corrected residue. ``recalibrate_comparators`` re-runs
+    the tail-current calibration against the *drifted* offset, restoring
+    the residue to within half a cal-DAC LSB (range permitting).
+
+Slot assignment convention (shared with the swap rounds of
+``core.programmed.build_swap_schedule``): a projection's µArray tiles are
+enumerated column-major (output channel outer, K-chunk inner) and tile t
+occupies slot ``(base + t) % tile_slots`` — ``base`` is the projection's
+cumulative tile offset for pinned models and 0 for swapped execution,
+whose rounds always fill slots from 0. ``attach_silicon`` applies this
+walk-order convention across a whole parameter tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import CimConfig, ProjectionSilicon
+from repro.core.programmed import (_EXPERT_KEYS, conv_weight_matrix,
+                                   map_projections, strip_keys)
+from repro.silicon.variability import calibrated_offset
+
+
+@dataclasses.dataclass(frozen=True)
+class SiliconConfig:
+    """Distribution + drift parameters of one fleet's silicon lottery.
+
+    ``comparator_sigma_v``/``comparator_cal_bits`` follow the
+    :class:`~repro.silicon.variability.VariabilityConfig` conventions
+    (±3σ is the tail-current cal-DAC range), so ``calibrated_offset``
+    consumes this config directly.
+    """
+
+    cap_sigma: float = 0.02              # per-column C_PL mismatch (fraction)
+    comparator_sigma_v: float = 0.045 / 3.0   # raw offset sigma (V)
+    v_full_scale: float = 0.4            # MAV full scale (= V_PCH)
+    calibrate_comparator: bool = True    # run the 2-bit cal at time zero
+    comparator_cal_bits: int = 2
+    thermal_sigma_v: float = 0.0         # static noise-floor draw (V)
+    drift_sigma_v_per_kstream: float = 0.0    # offset drift RMS per 1k streams
+    drift_cap_sigma_per_kstream: float = 0.0  # fractional cap drift per 1k
+    seed: int = 0
+
+    @property
+    def is_nominal(self) -> bool:
+        """True when every sampled quantity collapses to its nominal value
+        (the σ=0 bitwise-parity regime)."""
+        return (self.cap_sigma == 0.0 and self.comparator_sigma_v == 0.0
+                and self.thermal_sigma_v == 0.0
+                and self.drift_sigma_v_per_kstream == 0.0
+                and self.drift_cap_sigma_per_kstream == 0.0)
+
+
+class FleetSilicon(NamedTuple):
+    """One sampled silicon realisation of a fleet's tile slots.
+
+    All fields are arrays (a valid jax pytree): the struct vmaps over
+    sampling keys for Monte-Carlo yield sweeps and rides ``jax.jit``
+    boundaries unchanged. ``age_streams`` is the fleet's elapsed service
+    age in input streams (decode steps + prefill calls) — the clock the
+    drift process runs on.
+    """
+
+    cap: jax.Array           # (S, m) sampled cap-DAC weights, 1.0 nominal
+    offset_v: jax.Array      # (S,) raw comparator offsets (V), pre-correction
+    correction_v: jax.Array  # (S,) current tail-current DAC correction (V)
+    thermal_v: jax.Array     # (S,) static noise-floor draw (V), uncorrectable
+    drift_dir_v: jax.Array   # (S,) per-slot offset drift direction ~ N(0,1)
+    drift_dir_cap: jax.Array  # (S, m) per-column cap drift direction
+    age_streams: jax.Array   # () float32 service age
+
+    @property
+    def n_slots(self) -> int:
+        return self.cap.shape[0]
+
+    @property
+    def m_columns(self) -> int:
+        return self.cap.shape[1]
+
+
+def sample_fleet(key: jax.Array, n_slots: int, m_columns: int,
+                 cfg: SiliconConfig) -> FleetSilicon:
+    """Sample every slot's ADC instance. Same key ⇒ identical fleet."""
+    if n_slots < 1 or m_columns < 1:
+        raise ValueError(f"degenerate fleet ({n_slots} slots, "
+                         f"{m_columns} columns)")
+    k_cap, k_off, k_th, k_dv, k_dc = jax.random.split(key, 5)
+    cap = 1.0 + cfg.cap_sigma * jax.random.normal(k_cap,
+                                                  (n_slots, m_columns))
+    offset_v = cfg.comparator_sigma_v * jax.random.normal(k_off, (n_slots,))
+    if cfg.calibrate_comparator and cfg.comparator_sigma_v > 0.0:
+        correction_v = offset_v - calibrated_offset(offset_v, cfg)
+    else:
+        correction_v = jnp.zeros((n_slots,))
+    thermal_v = cfg.thermal_sigma_v * jax.random.normal(k_th, (n_slots,))
+    drift_dir_v = jax.random.normal(k_dv, (n_slots,))
+    drift_dir_cap = jax.random.normal(k_dc, (n_slots, m_columns))
+    return FleetSilicon(cap=cap.astype(jnp.float32),
+                        offset_v=offset_v.astype(jnp.float32),
+                        correction_v=correction_v.astype(jnp.float32),
+                        thermal_v=thermal_v.astype(jnp.float32),
+                        drift_dir_v=drift_dir_v.astype(jnp.float32),
+                        drift_dir_cap=drift_dir_cap.astype(jnp.float32),
+                        age_streams=jnp.float32(0.0))
+
+
+def fleet_silicon(fleet, cfg: SiliconConfig,
+                  key: Optional[jax.Array] = None) -> FleetSilicon:
+    """Sample a :class:`~repro.compiler.tiling.Fleet`'s silicon (seeded
+    from ``cfg.seed`` unless an explicit key is given)."""
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    return sample_fleet(key, fleet.tile_slots, fleet.cfg.m_columns, cfg)
+
+
+def merge(a: FleetSilicon, b: FleetSilicon) -> FleetSilicon:
+    """Concatenate two sampled slot ranges into one fleet (observer-style
+    mergeability: hosts sampling disjoint slot blocks combine exactly)."""
+    if a.m_columns != b.m_columns:
+        raise ValueError(f"µArray widths differ: {a.m_columns} vs "
+                         f"{b.m_columns}")
+    return FleetSilicon(
+        cap=jnp.concatenate([a.cap, b.cap]),
+        offset_v=jnp.concatenate([a.offset_v, b.offset_v]),
+        correction_v=jnp.concatenate([a.correction_v, b.correction_v]),
+        thermal_v=jnp.concatenate([a.thermal_v, b.thermal_v]),
+        drift_dir_v=jnp.concatenate([a.drift_dir_v, b.drift_dir_v]),
+        drift_dir_cap=jnp.concatenate([a.drift_dir_cap, b.drift_dir_cap]),
+        age_streams=jnp.maximum(a.age_streams, b.age_streams))
+
+
+def age(sil: FleetSilicon, streams) -> FleetSilicon:
+    """Advance the fleet's service age by ``streams`` input streams."""
+    return sil._replace(age_streams=sil.age_streams
+                        + jnp.float32(streams))
+
+
+def _drifted_offset_v(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
+    """(S,) raw comparator offsets at the fleet's current age (V)."""
+    drift = (cfg.drift_sigma_v_per_kstream * (sil.age_streams / 1000.0)
+             * sil.drift_dir_v)
+    return sil.offset_v + drift
+
+
+def effective_offsets(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
+    """(S,) comparator offsets the ADC sees NOW, as full-scale fractions:
+    drifted raw offset minus the standing correction, plus the
+    uncorrectable noise-floor draw."""
+    off_v = _drifted_offset_v(sil, cfg) - sil.correction_v + sil.thermal_v
+    return off_v / cfg.v_full_scale
+
+
+def effective_caps(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
+    """(S, m) cap-DAC weights at the fleet's current age (1.0 nominal)."""
+    drift = (cfg.drift_cap_sigma_per_kstream * (sil.age_streams / 1000.0)
+             * sil.drift_dir_cap)
+    return jnp.maximum(sil.cap + drift, 1e-3)
+
+
+def recalibrate_comparators(sil: FleetSilicon,
+                            cfg: SiliconConfig) -> FleetSilicon:
+    """Re-run the tail-current offset calibration against the DRIFTED
+    offsets: the new standing correction cancels the drifted offset to
+    within half a cal-DAC LSB wherever it falls inside the ±3σ DAC range
+    (beyond-range drift saturates the DAC — residue grows, faithfully).
+    No-op when the comparator calibration is disabled."""
+    if not cfg.calibrate_comparator or cfg.comparator_sigma_v == 0.0:
+        return sil
+    raw_t = _drifted_offset_v(sil, cfg)
+    correction = raw_t - calibrated_offset(raw_t, cfg)
+    return sil._replace(correction_v=correction.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Projection-shaped gathers (what the step-time datapath consumes).
+# ---------------------------------------------------------------------------
+
+def _gather(eff_cap: jax.Array, eff_off: jax.Array, k: int, n: int,
+            base: int) -> ProjectionSilicon:
+    m = eff_cap.shape[-1]
+    s = eff_cap.shape[0]
+    chunks = -(-k // m)
+    idx = (base + jnp.arange(n * chunks, dtype=jnp.int32)).reshape(
+        n, chunks) % s
+    cap = eff_cap[idx]                       # (N, C, m)
+    off = eff_off[idx]                       # (N, C)
+    # The |x| dummy-row conversion of chunk c is shared across output
+    # channels; it digitises through channel 0's slot for that chunk.
+    return ProjectionSilicon(cap, off, cap[0], off[0])
+
+
+def projection_silicon(sil: FleetSilicon, cfg: SiliconConfig, k: int,
+                       n: int, *, base: int = 0) -> ProjectionSilicon:
+    """The per-tile silicon view of one (k, n) projection whose tiles
+    occupy slots ``(base + t) % n_slots`` in column-major tile order."""
+    return _gather(effective_caps(sil, cfg), effective_offsets(sil, cfg),
+                   k, n, base)
+
+
+def _tiles(k: int, n: int, m: int) -> int:
+    return (-(-k // m)) * n
+
+
+def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
+                   cim: CimConfig, *, pinned: bool = True) -> Any:
+    """Embed per-tile silicon views in every MF projection of a tree.
+
+    Returns a copy of ``params`` where each projection dict gains a
+    ``"sil"`` entry (expert banks: ``sil_up/gate/down``) consumed by
+    ``apply_projection`` / ``conv_apply`` / ``_expert_ffn`` in CIM_SIM
+    mode. Stacked leading axes (scan periods, experts) get stacked views
+    that slice exactly like the programmed state they perturb.
+
+    ``pinned=True`` advances the slot base per projection in walk order —
+    the same order the serve engine compiles (``iter_projections``), so
+    every tile of a pinned model reads a distinct slot until the fleet
+    wraps. ``pinned=False`` matches round-interleaved serving, whose swap
+    rounds always refill slots from 0.
+    """
+    if sil.m_columns != cim.m_columns:
+        raise ValueError(
+            f"fleet silicon is sampled for m_columns={sil.m_columns}, "
+            f"the model runs m_columns={cim.m_columns}")
+    eff_cap = effective_caps(sil, cfg)
+    eff_off = effective_offsets(sil, cfg)
+    m = cim.m_columns
+    next_base = 0
+
+    def take_base(n_tiles: int) -> int:
+        nonlocal next_base
+        b = next_base if pinned else 0
+        if pinned:
+            next_base += n_tiles
+        return b
+
+    def view_nd(w_shape) -> Any:
+        """Stacked gather over leading axes of a (..., K, N) weight."""
+        *lead, k, n = w_shape
+        if not lead:
+            return _gather(eff_cap, eff_off, k, n, take_base(_tiles(k, n,
+                                                                    m)))
+        views = [view_nd(tuple(lead[1:]) + (k, n)) for _ in range(lead[0])]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *views)
+
+    def attach(name, node, kind):
+        out = dict(node)
+        if kind == "experts":
+            for key in _EXPERT_KEYS:
+                out[f"sil_{key}"] = view_nd(tuple(node[key].shape))
+        elif kind == "conv":
+            k2, n2 = conv_weight_matrix(node["w"]).shape
+            out["sil"] = _gather(eff_cap, eff_off, k2, n2,
+                                 take_base(_tiles(k2, n2, m)))
+        else:
+            out["sil"] = view_nd(tuple(node["w"].shape))
+        return out
+
+    return map_projections(params, attach)
+
+
+def strip_silicon(params: Any) -> Any:
+    """Inverse of :func:`attach_silicon` (drop every silicon entry)."""
+    return strip_keys(params, lambda k: isinstance(k, str)
+                      and (k == "sil" or k.startswith("sil_")))

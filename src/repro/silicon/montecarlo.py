@@ -1,0 +1,131 @@
+"""Monte-Carlo yield sweeps over the silicon lottery.
+
+Answers the fleet-procurement questions the paper's Sec. IV
+mismatch/offset characterisation raises: across many sampled silicon
+realisations, how much SQNR does a design point lose at a given mismatch
+σ, what fraction of fleets clears an accuracy floor (*yield*), and how
+much of the comparator-offset loss does the 2-bit tail-current
+calibration win back?
+
+The projection-level sweeps vmap the ENTIRE pipeline — per-slot instance
+sampling, the per-tile silicon einsum route, Eq. 2 recombination — over
+sampling keys, so a 64-seed sweep is one XLA program. SQNR is measured
+against the *nominal* CIM output of the same design point, isolating
+silicon-induced error from quantisation/ADC error (which
+``benchmarks/calib_report.py`` already tracks). Model-level yield (logits
+rel-L2 over seeds, via the calibration lab's evaluators) is composed in
+``benchmarks/silicon_report.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import CimConfig, ProjectionSilicon, cim_mf_matmul
+from repro.silicon.instance import (FleetSilicon, SiliconConfig,
+                                    projection_silicon, sample_fleet)
+
+
+def sample_projection_silicon(key: jax.Array, k: int, n: int,
+                              m_columns: int, cfg: SiliconConfig
+                              ) -> ProjectionSilicon:
+    """Sample a dedicated slot per µArray tile of one (k, n) projection —
+    the fully-independent-instances regime of a fresh fleet."""
+    chunks = -(-k // m_columns)
+    fleet = sample_fleet(key, chunks * n, m_columns, cfg)
+    return projection_silicon(fleet, cfg, k, n)
+
+
+def _sqnr_db(ref: jax.Array, y: jax.Array, cap_db: float = 120.0
+             ) -> jax.Array:
+    num = jnp.sum(ref.astype(jnp.float32) ** 2)
+    err = jnp.sum((y.astype(jnp.float32) - ref.astype(jnp.float32)) ** 2)
+    floor = num * 10.0 ** (-cap_db / 10.0)
+    return 10.0 * jnp.log10(num / jnp.maximum(err, floor))
+
+
+def projection_sqnr_samples(key: jax.Array, x: jax.Array, w: jax.Array,
+                            cim: CimConfig, cfg: SiliconConfig,
+                            n_seeds: int) -> jax.Array:
+    """(n_seeds,) SQNR in dB of the silicon route vs the nominal CIM
+    output, one sampled fleet per seed (vmapped end to end)."""
+    y0 = cim_mf_matmul(x, w, cim)
+    k, n = w.shape
+
+    def one(seed_key: jax.Array) -> jax.Array:
+        sil = sample_projection_silicon(seed_key, k, n, cim.m_columns, cfg)
+        return _sqnr_db(y0, cim_mf_matmul(x, w, cim, silicon=sil))
+
+    return jax.vmap(one)(jax.random.split(key, n_seeds))
+
+
+@dataclasses.dataclass(frozen=True)
+class YieldPoint:
+    """One (design point, mismatch σ) cell of a yield sweep."""
+
+    cap_sigma: float
+    mean_sqnr_db: float
+    p05_sqnr_db: float        # 5th-percentile seed — the near-worst fleet
+    min_sqnr_db: float
+    yield_frac: float         # fraction of seeds >= the SQNR floor
+    n_seeds: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def projection_yield_curve(key: jax.Array, x: jax.Array, w: jax.Array,
+                           cim: CimConfig, base: SiliconConfig,
+                           sigmas: Sequence[float], n_seeds: int,
+                           sqnr_floor_db: float = 20.0
+                           ) -> list[YieldPoint]:
+    """Sweep cap-DAC mismatch σ; every other knob comes from ``base``."""
+    points = []
+    for i, sigma in enumerate(sigmas):
+        cfg = dataclasses.replace(base, cap_sigma=float(sigma))
+        s = projection_sqnr_samples(jax.random.fold_in(key, i), x, w, cim,
+                                    cfg, n_seeds)
+        points.append(YieldPoint(
+            cap_sigma=float(sigma),
+            mean_sqnr_db=float(jnp.mean(s)),
+            p05_sqnr_db=float(jnp.percentile(s, 5.0)),
+            min_sqnr_db=float(jnp.min(s)),
+            yield_frac=float(jnp.mean((s >= sqnr_floor_db)
+                                      .astype(jnp.float32))),
+            n_seeds=n_seeds))
+    return points
+
+
+def offset_correction_delta_db(key: jax.Array, x: jax.Array, w: jax.Array,
+                               cim: CimConfig, cfg: SiliconConfig,
+                               n_seeds: int) -> tuple[float, float, float]:
+    """Mean-SQNR gain of the 2-bit tail-current offset calibration.
+
+    Runs the SAME sampling keys with the comparator calibration on and
+    off (cap mismatch zeroed to isolate the offset channel) and returns
+    ``(delta_db, corrected_db, uncorrected_db)``. The delta is the dB the
+    on-chip calibration wins back — the recovery gate of
+    ``BENCH_silicon.json``.
+    """
+    iso = dataclasses.replace(cfg, cap_sigma=0.0)
+    on = projection_sqnr_samples(
+        key, x, w, cim, dataclasses.replace(iso, calibrate_comparator=True),
+        n_seeds)
+    off = projection_sqnr_samples(
+        key, x, w, cim, dataclasses.replace(iso,
+                                            calibrate_comparator=False),
+        n_seeds)
+    return (float(jnp.mean(on) - jnp.mean(off)), float(jnp.mean(on)),
+            float(jnp.mean(off)))
+
+
+def fleet_samples(key: jax.Array, n_slots: int, m_columns: int,
+                  cfg: SiliconConfig, n_seeds: int) -> FleetSilicon:
+    """(n_seeds,)-stacked :class:`FleetSilicon` draws (vmapped sampling) —
+    the raw material for custom fleet-level Monte-Carlos."""
+    return jax.vmap(lambda k: sample_fleet(k, n_slots, m_columns, cfg))(
+        jax.random.split(key, n_seeds))

@@ -77,6 +77,21 @@ def save(root: str, step: int, tree: Any, metadata: Optional[dict] = None
     return final
 
 
+def read_manifest(root: str, step: int) -> dict:
+    """The manifest of a committed checkpoint (shapes/dtypes/leaf count).
+
+    The single accessor for the on-disk layout — callers probing a
+    checkpoint's structure (e.g. params-tree vs TrainState, see
+    ``repro.calib.report.restore_lm_params``) go through here instead of
+    hardcoding directory naming or the manifest schema.
+    """
+    final = os.path.join(root, f"step_{step:012d}")
+    if not os.path.exists(final + ".COMMITTED"):
+        raise FileNotFoundError(f"checkpoint {final} not committed")
+    with open(os.path.join(final, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
 def latest_step(root: str) -> Optional[int]:
     if not os.path.isdir(root):
         return None

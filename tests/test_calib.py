@@ -475,3 +475,80 @@ class TestBatchedSlotReset:
         done = eng.run(reqs[n:])
         assert len(done) == 5
         assert all(len(r.out) == 2 and not r.timed_out for r in done)
+
+
+class TestTrainedCalibration:
+    """Trained checkpoints flow through calibrate_lm (ISSUE 5 satellite:
+    ROADMAP "trained-model calibration")."""
+
+    def _train_two_steps(self, cfg, tmp_path):
+        from repro.configs.base import ParallelConfig, TrainConfig
+        from repro.data.synthetic import DataConfig, lm_batch
+        from repro.train import checkpoint as ckpt
+        from repro.train import train_loop as TL
+        tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+        state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
+                                          tcfg))
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                        global_batch=4, task="uniform")
+        for i in range(2):
+            batch = {k: jnp.asarray(v) for k, v in lm_batch(dc, i).items()}
+            state, _ = step(state, batch)
+        root = str(tmp_path / "ckpt")
+        ckpt.save(root, 2, state)
+        return root, state, tcfg
+
+    def test_calibrate_lm_restores_trainstate_checkpoint(self, tmp_path):
+        from repro.calib.report import calibrate_lm
+        from repro.data.synthetic import DataConfig, lm_batch
+        from repro.models import transformer as T
+        cfg = _mk_cfg(mf=_cim_mf())
+        root, state, tcfg = self._train_two_steps(cfg, tmp_path)
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                        global_batch=4, task="uniform")
+        cal = [{"tokens": jnp.asarray(lm_batch(dc, 10 + i)["tokens"])}
+               for i in range(2)]
+        template = T.lm_init(jax.random.PRNGKey(7), cfg)
+        art = calibrate_lm(template, cfg, cal, method="amax",
+                           checkpoint=root, train_cfg=tcfg)
+        assert art.meta["checkpoint_step"] == 2
+        # trained statistics differ from the template's random init
+        base = calibrate_lm(template, cfg, cal, method="amax")
+        assert any(not np.array_equal(art.scales[k], base.scales[k])
+                   for k in art.scales)
+        # and match calibrating directly on the trained params
+        direct = calibrate_lm(state.params, cfg, cal, method="amax")
+        for k in art.scales:
+            np.testing.assert_array_equal(art.scales[k],
+                                          direct.scales[k])
+
+    def test_calibrate_lm_restores_bare_params_checkpoint(self, tmp_path):
+        from repro.calib.report import calibrate_lm
+        from repro.data.synthetic import DataConfig, lm_batch
+        from repro.models import transformer as T
+        from repro.train import checkpoint as ckpt
+        cfg = _mk_cfg(mf=_cim_mf())
+        root, state, _ = self._train_two_steps(cfg, tmp_path)
+        root2 = str(tmp_path / "params-only")
+        ckpt.save(root2, 3, state.params)
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                        global_batch=4, task="uniform")
+        cal = [{"tokens": jnp.asarray(lm_batch(dc, 20)["tokens"])}]
+        template = T.lm_init(jax.random.PRNGKey(7), cfg)
+        art = calibrate_lm(template, cfg, cal, method="amax",
+                           checkpoint=root2)
+        assert art.meta["checkpoint_step"] == 3
+
+    def test_missing_checkpoint_raises(self, tmp_path):
+        from repro.calib.report import calibrate_lm
+        from repro.models import transformer as T
+        cfg = _mk_cfg(mf=_cim_mf())
+        template = T.lm_init(jax.random.PRNGKey(7), cfg)
+        with pytest.raises(FileNotFoundError):
+            calibrate_lm(template, cfg, [], checkpoint=str(tmp_path / "x"))
+
+
+def _cim_mf():
+    from repro.configs.base import MFTechniqueConfig
+    return MFTechniqueConfig(mode="cim_sim", cim=CimConfig(8, 8, 5, 31))

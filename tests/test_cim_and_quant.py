@@ -16,7 +16,7 @@ from repro.core import (CimConfig, VariabilityConfig, calibrate_scale,
                         sample_cap_weights, sample_comparator_offset)
 from repro.core import quant
 from repro.core.cim import adc_quantize
-from repro.core.variability import calibrated_offset, screen_columns
+from repro.silicon.variability import calibrated_offset, screen_columns
 
 
 class TestQuant:

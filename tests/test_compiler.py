@@ -14,7 +14,7 @@ from repro.compiler import (Fleet, compile_model, compiled_matmul,
                             schedule_layer, verify_bit_exact)
 from repro.core import (CimConfig, ExecMode, FleetMappingPolicy, LayerStat,
                         cim_mf_matmul, unit_op_energy_j)
-from repro.core.variability import sample_cap_weights, VariabilityConfig
+from repro.silicon.variability import sample_cap_weights, VariabilityConfig
 from repro.models.convnets import cifar_layer_stats, lenet_layer_stats
 
 CFG62 = CimConfig(8, 8, 5, 31)

@@ -1,0 +1,409 @@
+"""Silicon lab: per-slot ADC instances, σ=0 parity, drift recalibration.
+
+The contracts under test (ISSUE 5):
+
+  * sampling is keyed-deterministic and mergeable;
+  * a σ=0 silicon fleet is BITWISE identical to the nominal programmed
+    datapath — monolithic, tiled, pinned-engine and swapped-engine decode;
+  * σ>0 perturbs (the whole point) and injection composes with bit-packed
+    plane state while the collapsed/kernel states raise precisely;
+  * the serving drift loop: alarm fires on an aging fleet, comparator
+    re-trim + scale re-programming recovers, ServeReport charges it.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.cim import CimConfig, cim_mf_matmul
+from repro.core.programmed import (cim_mf_matmul_programmed,
+                                   cim_mf_matmul_swapped, program_macro,
+                                   swap_macro)
+from repro.silicon import (SiliconConfig, attach_silicon, fleet_silicon,
+                           merge, projection_silicon,
+                           recalibrate_comparators, sample_fleet,
+                           strip_silicon)
+from repro.silicon import instance as inst
+
+SIGMA0 = SiliconConfig(cap_sigma=0.0, comparator_sigma_v=0.0)
+NOISY = SiliconConfig(cap_sigma=0.08, comparator_sigma_v=0.012)
+
+
+def _xw(b=3, k=70, n=9):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    return x, w
+
+
+def _proj_sil(scfg, k, n, m=31, slots=24, seed=5, base=0):
+    fleet = sample_fleet(jax.random.PRNGKey(seed), slots, m, scfg)
+    return projection_silicon(fleet, scfg, k, n, base=base)
+
+
+class TestSampling:
+    def test_same_key_same_fleet(self):
+        a = sample_fleet(jax.random.PRNGKey(3), 16, 31, NOISY)
+        b = sample_fleet(jax.random.PRNGKey(3), 16, 31, NOISY)
+        for fa, fb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+    def test_different_keys_differ(self):
+        a = sample_fleet(jax.random.PRNGKey(3), 16, 31, NOISY)
+        b = sample_fleet(jax.random.PRNGKey(4), 16, 31, NOISY)
+        assert not np.array_equal(np.asarray(a.cap), np.asarray(b.cap))
+
+    def test_sigma0_is_exactly_nominal(self):
+        assert SIGMA0.is_nominal and not NOISY.is_nominal
+        s = sample_fleet(jax.random.PRNGKey(0), 8, 31, SIGMA0)
+        np.testing.assert_array_equal(np.asarray(s.cap), 1.0)
+        np.testing.assert_array_equal(
+            np.asarray(inst.effective_offsets(s, SIGMA0)), 0.0)
+
+    def test_merge_concatenates_slots(self):
+        a = sample_fleet(jax.random.PRNGKey(1), 8, 31, NOISY)
+        b = sample_fleet(jax.random.PRNGKey(2), 5, 31, NOISY)
+        m = merge(a, b)
+        assert m.n_slots == 13
+        np.testing.assert_array_equal(np.asarray(m.cap[:8]),
+                                      np.asarray(a.cap))
+        np.testing.assert_array_equal(np.asarray(m.offset_v[8:]),
+                                      np.asarray(b.offset_v))
+
+    def test_comparator_correction_shrinks_offsets(self):
+        scfg = SiliconConfig(cap_sigma=0.0, comparator_sigma_v=0.015)
+        cal = sample_fleet(jax.random.PRNGKey(6), 64, 31, scfg)
+        raw = sample_fleet(
+            jax.random.PRNGKey(6), 64, 31,
+            dataclasses.replace(scfg, calibrate_comparator=False))
+        eff_cal = np.abs(np.asarray(inst.effective_offsets(cal, scfg)))
+        eff_raw = np.abs(np.asarray(inst.effective_offsets(raw, scfg)))
+        assert eff_cal.mean() < eff_raw.mean()
+        # residue <= half a cal-DAC LSB (1.5 sigma at 2 bits)
+        assert eff_cal.max() <= 0.75 * 0.015 / scfg.v_full_scale + 1e-6
+
+    def test_recalibration_cancels_drift(self):
+        scfg = dataclasses.replace(
+            NOISY, drift_sigma_v_per_kstream=0.5)
+        s = sample_fleet(jax.random.PRNGKey(8), 32, 31, scfg)
+        s = inst.age(s, 100)      # drift ~ 50 mV * dir
+        drifted = np.abs(np.asarray(inst.effective_offsets(s, scfg)))
+        healed = np.abs(np.asarray(
+            inst.effective_offsets(recalibrate_comparators(s, scfg),
+                                   scfg)))
+        assert healed.mean() < drifted.mean()
+
+
+class TestSigma0Parity:
+    @pytest.mark.parametrize("m,a", [(31, 5), (15, 4), (31, 6)])
+    def test_monolithic_bitwise(self, m, a):
+        x, w = _xw()
+        cfg = CimConfig(8, 8, a, m)
+        sil = _proj_sil(SIGMA0, 70, 9, m=m)
+        y0 = np.asarray(cim_mf_matmul(x, w, cfg))
+        y1 = np.asarray(cim_mf_matmul(x, w, cfg, silicon=sil))
+        np.testing.assert_array_equal(y0, y1)
+
+    def test_programmed_bitwise(self):
+        x, w = _xw()
+        cfg = CimConfig(8, 8, 5, 31)
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_macro(w, cfg, sx=sx, prefer_lossless=False)
+        sil = _proj_sil(SIGMA0, 70, 9)
+        y0 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg))
+        y1 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg,
+                                                 silicon=sil))
+        np.testing.assert_array_equal(y0, y1)
+
+    def test_swapped_bitwise(self):
+        x, w = _xw(k=93, n=7)
+        cfg = CimConfig(8, 8, 5, 31)
+        sx = quant.calibrate_scale(x, 8)
+        swap = swap_macro(w, cfg, tile_slots=5, sx=sx)
+        assert swap.sched.n_rounds > 1
+        sil = _proj_sil(SIGMA0, 93, 7, slots=5)
+        y0 = np.asarray(cim_mf_matmul_swapped(x, w, swap, cfg))
+        y1 = np.asarray(cim_mf_matmul_swapped(x, w, swap, cfg,
+                                              silicon=sil))
+        np.testing.assert_array_equal(y0, y1)
+
+    def test_tiled_bitwise(self):
+        from repro.compiler.execute import (compiled_matmul_programmed,
+                                            program_layer_tiles)
+        from repro.compiler.tiling import plan_tiling
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=3 * 31 + 7, n=21)
+        plan = plan_tiling(w.shape[0], w.shape[1], cfg, tile_k_chunks=2,
+                           tile_n=8)
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_layer_tiles(w, plan, cfg, sx=sx)
+        sil = _proj_sil(SIGMA0, w.shape[0], w.shape[1], slots=40)
+        y0 = np.asarray(compiled_matmul_programmed(x, prog, plan, cfg))
+        y1 = np.asarray(compiled_matmul_programmed(x, prog, plan, cfg,
+                                                   silicon=sil))
+        np.testing.assert_array_equal(y0, y1)
+
+
+class TestInjection:
+    def test_sigma_perturbs_and_matches_across_paths(self):
+        """σ>0 changes the output, and swapped/tiled/monolithic all agree
+        bit for bit on the SAME sampled silicon."""
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=93, n=7)
+        sx = quant.calibrate_scale(x, 8)
+        sil = _proj_sil(NOISY, 93, 7, slots=5)
+        y0 = np.asarray(cim_mf_matmul(x, w, cfg))
+        y1 = np.asarray(cim_mf_matmul(x, w, cfg, silicon=sil))
+        assert not np.array_equal(y0, y1)
+        swap = swap_macro(w, cfg, tile_slots=5, sx=sx)
+        y2 = np.asarray(cim_mf_matmul_swapped(x, w, swap, cfg,
+                                              silicon=sil))
+        # swapped rounds fill slots 0..S-1 == the base-0 gather
+        prog = program_macro(w, cfg, sx=sx, prefer_lossless=False)
+        y3 = np.asarray(cim_mf_matmul_programmed(x, prog, cfg,
+                                                 silicon=sil))
+        np.testing.assert_array_equal(y2, y3)
+
+    def test_packed_planes_accept_silicon(self):
+        cfg = CimConfig(8, 8, 4, 31)   # non-lossless -> plane state
+        x, w = _xw()
+        prog = program_macro(w, cfg, sx=0.05)
+        assert prog.state is not None
+        cim_mf_matmul_programmed(x, prog, cfg,
+                                 silicon=_proj_sil(NOISY, 70, 9))
+
+    def test_lossless_state_raises_precisely(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw()
+        prog = program_macro(w, cfg, sx=0.05)
+        assert prog.lossless is not None
+        with pytest.raises(ValueError, match="exactly-lossless"):
+            cim_mf_matmul_programmed(x, prog, cfg,
+                                     silicon=_proj_sil(NOISY, 70, 9))
+        with pytest.raises(ValueError, match="prefer_lossless=False"):
+            cim_mf_matmul_programmed(x, prog, cfg,
+                                     cap_weights=jnp.ones((70,)))
+
+    def test_kernel_state_raises_precisely(self):
+        cfg = CimConfig(8, 8, 5, 31, use_kernel=True)
+        x, w = _xw()
+        prog = program_macro(w, cfg, sx=0.05)
+        assert prog.kernel is not None
+        with pytest.raises(ValueError, match="Pallas kernel"):
+            cim_mf_matmul_programmed(x, prog, cfg,
+                                     silicon=_proj_sil(NOISY, 70, 9))
+
+    def test_silicon_exclusive_with_legacy_knobs(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw()
+        with pytest.raises(ValueError, match="not both"):
+            cim_mf_matmul(x, w, cfg, cap_weights=jnp.ones((70,)),
+                          silicon=_proj_sil(NOISY, 70, 9))
+
+    def test_shape_mismatch_raises(self):
+        cfg = CimConfig(8, 8, 5, 31)
+        x, w = _xw()
+        with pytest.raises(ValueError, match="does not match"):
+            cim_mf_matmul(x, w, cfg, silicon=_proj_sil(NOISY, 70, 5))
+
+    def test_misaligned_slice_raises(self):
+        sil = _proj_sil(NOISY, 93, 7, slots=5)
+        with pytest.raises(ValueError, match="aligned"):
+            sil.slice(0, 2, 7, 62, 31)
+
+
+class TestAttach:
+    def test_attach_and_strip_round_trip(self):
+        from repro.core.mf import mf_dense_init
+        from repro.core.programmed import iter_projections
+        params = {"a": mf_dense_init(jax.random.PRNGKey(0), 40, 6),
+                  "b": {"c": mf_dense_init(jax.random.PRNGKey(1), 33, 4)}}
+        fleet = sample_fleet(jax.random.PRNGKey(2), 16, 31, NOISY)
+        cim = CimConfig(8, 8, 5, 31)
+        tagged = attach_silicon(params, fleet, NOISY, cim)
+        names = [n for n, _, _ in iter_projections(tagged)]
+        assert all("sil" in node for _, node, _ in
+                   iter_projections(tagged)), names
+        stripped = strip_silicon(tagged)
+        assert all("sil" not in node for _, node, _ in
+                   iter_projections(stripped))
+
+    def test_strip_preserves_programmed_namedtuples(self):
+        """strip_silicon on a PROGRAMMED tree must leave the
+        ProgrammedMacro pytree nodes intact (NamedTuples are leaves of
+        the walk, not plain tuples to rebuild) — and strip_programmed
+        must not corrupt ProjectionSilicon entries either."""
+        from repro.core.mf import mf_dense_init
+        from repro.core.programmed import (ProgrammedMacro, program_weights,
+                                           strip_programmed)
+        cim = CimConfig(8, 8, 5, 31)
+        params = {"a": mf_dense_init(jax.random.PRNGKey(0), 40, 6)}
+        fleet = sample_fleet(jax.random.PRNGKey(2), 16, 31, NOISY)
+        progd = program_weights(params, cim, prefer_lossless=False)
+        full = attach_silicon(progd, fleet, NOISY, cim)
+        no_sil = strip_silicon(full)
+        assert isinstance(no_sil["a"]["prog"], ProgrammedMacro)
+        no_prog = strip_programmed(full)
+        assert type(no_prog["a"]["sil"]).__name__ == "ProjectionSilicon"
+        assert "prog" not in no_prog["a"]
+
+    def test_pinned_bases_advance_in_walk_order(self):
+        from repro.core.mf import mf_dense_init
+        params = {"a": mf_dense_init(jax.random.PRNGKey(0), 31, 2),
+                  "b": mf_dense_init(jax.random.PRNGKey(1), 31, 2)}
+        fleet = sample_fleet(jax.random.PRNGKey(2), 16, 31, NOISY)
+        cim = CimConfig(8, 8, 5, 31)
+        tagged = attach_silicon(params, fleet, NOISY, cim, pinned=True)
+        # layer a: tiles 0..1 -> slots 0..1; layer b -> slots 2..3
+        eff = np.asarray(inst.effective_offsets(fleet, NOISY))
+        np.testing.assert_array_equal(
+            np.asarray(tagged["a"]["sil"].offset).ravel(), eff[0:2])
+        np.testing.assert_array_equal(
+            np.asarray(tagged["b"]["sil"].offset).ravel(), eff[2:4])
+        swapped = attach_silicon(params, fleet, NOISY, cim, pinned=False)
+        np.testing.assert_array_equal(
+            np.asarray(swapped["b"]["sil"].offset).ravel(), eff[0:2])
+
+    def test_geometry_mismatch_raises(self):
+        from repro.core.mf import mf_dense_init
+        params = {"a": mf_dense_init(jax.random.PRNGKey(0), 31, 2)}
+        fleet = sample_fleet(jax.random.PRNGKey(2), 16, 15, NOISY)
+        with pytest.raises(ValueError, match="m_columns"):
+            attach_silicon(params, fleet, NOISY, CimConfig(8, 8, 5, 31))
+
+
+class TestMonteCarlo:
+    def test_sqnr_samples_deterministic_and_ordered(self):
+        from repro.silicon.montecarlo import projection_sqnr_samples
+        cim = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=62, n=16)
+        lo = projection_sqnr_samples(
+            jax.random.PRNGKey(0), x, w, cim,
+            SiliconConfig(cap_sigma=0.03, comparator_sigma_v=0.0), 8)
+        hi = projection_sqnr_samples(
+            jax.random.PRNGKey(0), x, w, cim,
+            SiliconConfig(cap_sigma=0.15, comparator_sigma_v=0.0), 8)
+        again = projection_sqnr_samples(
+            jax.random.PRNGKey(0), x, w, cim,
+            SiliconConfig(cap_sigma=0.03, comparator_sigma_v=0.0), 8)
+        np.testing.assert_array_equal(np.asarray(lo), np.asarray(again))
+        assert float(jnp.mean(lo)) > float(jnp.mean(hi))
+
+    def test_offset_correction_recovers(self):
+        from repro.silicon.montecarlo import offset_correction_delta_db
+        cim = CimConfig(8, 8, 5, 31)
+        x, w = _xw(k=62, n=16)
+        delta, on_db, off_db = offset_correction_delta_db(
+            jax.random.PRNGKey(1), x, w, cim,
+            SiliconConfig(comparator_sigma_v=0.008), 8)
+        assert delta > 0 and on_db > off_db
+
+
+class TestLegacyShim:
+    def test_core_variability_reexports(self):
+        from repro.core import variability as legacy
+        from repro.silicon import variability as lab
+        assert legacy.VariabilityConfig is lab.VariabilityConfig
+        assert legacy.sample_cap_weights is lab.sample_cap_weights
+        from repro.core import VariabilityConfig  # package-level path
+        assert VariabilityConfig is lab.VariabilityConfig
+
+
+def _engine_cfg():
+    from repro.configs.base import MFTechniqueConfig
+    from repro.configs.qwen3_0_6b import SMOKE
+    cim = CimConfig(w_bits=8, x_bits=8, adc_bits=5, m_columns=31)
+    return dataclasses.replace(
+        SMOKE, dtype=jnp.float32,
+        mf=MFTechniqueConfig(mode="cim_sim", cim=cim)), cim
+
+
+class TestEngineGuards:
+    def test_silicon_requires_fleet_and_no_kernel(self):
+        from repro.models import transformer as T
+        from repro.serve.engine import ServeEngine
+        cfg, cim = _engine_cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="fleet"):
+            ServeEngine(params, cfg, slots=2, max_len=16, silicon=SIGMA0)
+
+    def test_drift_requires_calibration(self):
+        from repro.compiler.tiling import Fleet
+        from repro.models import transformer as T
+        from repro.serve.engine import ServeEngine
+        from repro.silicon.drift import DriftPolicy
+        cfg, cim = _engine_cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="calibration"):
+            ServeEngine(params, cfg, slots=2, max_len=16,
+                        fleet=Fleet(n_macros=4096, cfg=cim),
+                        silicon=SIGMA0,
+                        drift=DriftPolicy(probe_batches=[]))
+
+
+@pytest.mark.slow
+class TestEngineSilicon:
+    """Engine-level σ=0 parity and the drift loop (compile-heavy; covered
+    by the silicon-report bench gates in CI — run explicitly with
+    ``-m slow`` or plain ``pytest``)."""
+
+    def _cfg(self):
+        return _engine_cfg()
+
+    def test_engine_sigma0_and_drift_loop(self):
+        from repro.calib.report import calibrate_lm
+        from repro.compiler.tiling import Fleet
+        from repro.data.synthetic import DataConfig, lm_batch
+        from repro.models import transformer as T
+        from repro.serve.engine import Request, ServeEngine
+        from repro.silicon.drift import DriftPolicy
+        cfg, cim = self._cfg()
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        fleet = Fleet(n_macros=4096, cfg=cim)
+
+        def toks(e, n=3):
+            done = e.run([Request(prompt=[1, 2], max_new_tokens=n)
+                          for _ in range(2)])
+            return [r.out for r in done]
+
+        ref = ServeEngine(params, cfg, slots=2, max_len=48, fleet=fleet,
+                          batched_prefill=False)
+        t_ref = toks(ref)
+        sil0 = ServeEngine(params, cfg, slots=2, max_len=48, fleet=fleet,
+                           batched_prefill=False, silicon=SIGMA0)
+        assert toks(sil0) == t_ref
+
+        # drift loop: alarm -> recalibrate -> recover -> charged
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=4, task="uniform")
+        cal = [{"tokens": jnp.asarray(lm_batch(dc, i)["tokens"])}
+               for i in range(2)]
+        art = calibrate_lm(params, cfg, cal, method="amax")
+        scfg = SiliconConfig(cap_sigma=0.02, comparator_sigma_v=0.008,
+                             drift_sigma_v_per_kstream=0.3)
+        pol = DriftPolicy(probe_batches=cal, check_interval=12,
+                          silicon_update_interval=6,
+                          rel_l2_alarm_ratio=1.3,
+                          rel_l2_alarm_floor=0.02)
+        eng = ServeEngine(params, cfg, slots=2, max_len=48, fleet=fleet,
+                          batched_prefill=False, calibration=art,
+                          silicon=scfg, drift=pol)
+        base = eng._monitor.baseline_rel_l2
+        eng.run([Request(prompt=[1, 2, 3], max_new_tokens=14)
+                 for _ in range(2)])
+        rep = eng.last_report
+        assert rep.drift_checks >= 1
+        assert rep.drift_alarms >= 1, eng.drift_log
+        assert rep.recalibrations >= 1
+        assert rep.recal_reload_bits > 0 and rep.recal_energy_j > 0
+        first = next(s for s in eng.drift_log if s.recalibrated)
+        assert first.rel_l2 > pol.rel_l2_alarm_ratio * base
+        assert first.post_rel_l2 < first.rel_l2
+        assert first.post_rel_l2 <= 1.8 * base
+        # maintenance re-baselines the alarm at the healed noise floor
+        assert eng._monitor.baseline_rel_l2 == pytest.approx(
+            first.post_rel_l2)
+        assert eng._monitor.initial_baseline_rel_l2 == pytest.approx(base)
