@@ -20,6 +20,7 @@ SUITES = (
     "compiler_report",
     "kernel_bench",
     "serve_bench",
+    "traffic_report",
     "calib_report",
     "silicon_report",
     "roofline_report",

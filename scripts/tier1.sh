@@ -7,6 +7,9 @@
 # TIER1_SILICON_BENCH=1 additionally runs the silicon variation smoke
 # (sigma=0 parity, yield sweeps, offset-correction recovery, drift
 # auto-recalibration) and leaves BENCH_silicon.json.
+# TIER1_TRAFFIC_BENCH=1 additionally runs the traffic serving smoke
+# (offered-load sweep, SLO knee, mesh parity, multi-device scaling) and
+# leaves BENCH_traffic.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -21,4 +24,7 @@ if [[ "${TIER1_CALIB_BENCH:-0}" == "1" ]]; then
 fi
 if [[ "${TIER1_SILICON_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.silicon_report --smoke
+fi
+if [[ "${TIER1_TRAFFIC_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.traffic_report --smoke
 fi

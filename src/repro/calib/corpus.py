@@ -161,10 +161,32 @@ class ErrorCollector:
         return 10.0 * np.log10(ref / np.maximum(err, floor))
 
 
+def _split_batch(batch: Any, n: int) -> list[tuple[int, Any]]:
+    """Split a batch pytree into up to ``n`` contiguous blocks along the
+    leading axis (``np.array_split`` sizing). Returns ``(device_index,
+    shard)`` pairs; zero-length blocks are skipped, so a batch smaller
+    than the device list just uses fewer devices."""
+    leaves = jax.tree.leaves(batch)
+    if not leaves:
+        return [(0, batch)]
+    dim = int(leaves[0].shape[0])
+    shards: list[tuple[int, Any]] = []
+    start = 0
+    for i in range(n):
+        size = dim // n + (1 if i < dim % n else 0)
+        if size == 0:
+            continue
+        sl = slice(start, start + size)
+        shards.append((i, jax.tree.map(lambda x: x[sl], batch)))
+        start += size
+    return shards
+
+
 def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
                   batches: Iterable[Any],
                   registry: ObserverRegistry,
-                  obs_cfg: obs.ObserverConfig = obs.ObserverConfig()
+                  obs_cfg: obs.ObserverConfig = obs.ObserverConfig(),
+                  devices: Any = None
                   ) -> StatsCollector:
     """Replay ``batches`` through ``forward_fn(tagged_params, batch)`` in
     observe mode, returning the filled collector.
@@ -180,15 +202,39 @@ def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
     calibration runs would record into the wrong collector, or into
     none). An all-empty collection raises instead of silently producing
     fallback scales.
+
+    ``devices``: an optional list of jax devices to shard the observe
+    forward over. Each batch is split along its leading axis into one
+    contiguous block per device; the tagged params are replicated once
+    and the per-shard forwards are dispatched asynchronously (devices
+    run concurrently, blocked per batch). The observation callbacks are
+    UNORDERED and the accumulators are order-invariant (sum / max /
+    histogram add), so the sharded collection merges to exactly the
+    single-device result. Shards shorter than the device list skip the
+    surplus devices.
     """
     collector = StatsCollector(registry.n_ids, obs_cfg)
     with tap.observing(collector):
         # Fresh jit per collector: traces (and stages the callbacks) on
         # the first batch of each shape, replays compiled thereafter.
         jitted = jax.jit(lambda p, b: forward_fn(p, b))
-        for batch in batches:
-            out = jitted(tagged_params, batch)
-            jax.block_until_ready(out)
+        if devices is None:
+            for batch in batches:
+                out = jitted(tagged_params, batch)
+                jax.block_until_ready(out)
+        else:
+            devices = list(devices)
+            if not devices:
+                raise ValueError("devices must be a non-empty list "
+                                 "(or None for the default device)")
+            rep_params = [jax.device_put(tagged_params, d)
+                          for d in devices]
+            for batch in batches:
+                outs = [jitted(rep_params[di],
+                               jax.device_put(shard, devices[di]))
+                        for di, shard in _split_batch(batch, len(devices))]
+                for out in outs:
+                    jax.block_until_ready(out)
     jax.effects_barrier()
     if registry.n_ids and not np.any(collector.count > 0):
         raise RuntimeError(

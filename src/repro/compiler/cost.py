@@ -156,3 +156,63 @@ def serve_reload_cost(msched: ModelSchedule, streams: int) -> ServeReloadCost:
         reload_bits=bits,
         reload_energy_j=bits * fleet.reload_j_per_bit,
         reload_s=bits / fleet.reload_bits_per_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveCost:
+    """Eq. 4 roll-up of one serving WINDOW (an admission wave's lifetime,
+    or any scheduler-chosen span of input streams).
+
+    The compute side prices every stream at the schedule's per-stream
+    unit-op roll-up (Eq. 4b: total unit ops × unit energy); the reload
+    side replays the per-stream reprogram charge of a non-pinned schedule
+    (:func:`serve_reload_cost`). ``energy_per_token_j`` is the figure the
+    traffic lab reports per offered-load point: total wave energy over
+    generated tokens — admission waves that fill more slots per stream
+    amortise the same stream energy over more tokens, which is exactly
+    the continuous-batching win the Eq. 4 model should surface.
+    """
+
+    decode_steps: int
+    prefill_calls: int
+    decode_tokens: int
+    compute_energy_j: float
+    reload: ServeReloadCost
+    latency_s: float            # modelled fleet time for the window
+
+    @property
+    def streams(self) -> int:
+        return self.decode_steps + self.prefill_calls
+
+    @property
+    def energy_j(self) -> float:
+        return self.compute_energy_j + self.reload.reload_energy_j
+
+    @property
+    def energy_per_token_j(self) -> float:
+        return self.energy_j / self.decode_tokens if self.decode_tokens \
+            else 0.0
+
+
+def serve_wave_cost(msched: ModelSchedule, decode_steps: int,
+                    prefill_calls: int = 0, decode_tokens: int = 0,
+                    macro: MacroParams = DEFAULT_MACRO) -> WaveCost:
+    """Price one serving window of ``decode_steps`` + ``prefill_calls``
+    input streams on ``msched``'s fleet (Eq. 4 per-wave roll-up)."""
+    if decode_steps < 0 or prefill_calls < 0:
+        raise ValueError(
+            f"negative window: decode_steps={decode_steps}, "
+            f"prefill_calls={prefill_calls}")
+    streams = decode_steps + prefill_calls
+    _, fc = model_cost(msched, macro)
+    reload = serve_reload_cost(msched, streams)
+    return WaveCost(
+        decode_steps=decode_steps, prefill_calls=prefill_calls,
+        decode_tokens=decode_tokens,
+        # The identity of :func:`rollup` extends stream-wise: N streams'
+        # unit ops × unit energy == N × the per-stream product.
+        compute_energy_j=fc.compute_energy_j * streams,
+        reload=reload,
+        # Compute cycles only — the reload term is charged once here, not
+        # per layer (FleetCost.latency_s already folds schedule reloads).
+        latency_s=fc.cycles / macro.clock_hz * streams + reload.reload_s)

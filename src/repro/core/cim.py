@@ -36,6 +36,7 @@ gradient, enabling hardware-in-the-loop QAT.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional
@@ -45,6 +46,42 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.mf import mf_matmul
+
+
+# ---------------------------------------------------------------------------
+# Conversion clock (per-stream thermal dither)
+# ---------------------------------------------------------------------------
+#
+# Thermal noise is a PER-CONVERSION phenomenon: every SA-ADC evaluation sees
+# a fresh input-referred sample, unlike the static per-slot mismatch/offset
+# lottery. The dither draw is keyed by (projection noise key, stream step,
+# role salt), so the serving engine threads its input-stream counter into
+# the jitted decode through this clock — a tap-style trace-time holder, the
+# same idiom as ``repro.calib.tap``. Outside any clock the step is 0
+# (single-shot forwards stay deterministic and reproducible).
+
+_CONV_STEP: list = [None]
+
+
+@contextlib.contextmanager
+def conversion_clock(step):
+    """Install ``step`` (int or traced scalar) as the current stream index
+    for per-conversion thermal dither. Wrap the TRACE of a jitted forward
+    (the engine wraps ``lm_decode_step`` / ``lm_prefill_cache``); the
+    traced value is baked into the noise-key fold of every silicon ADC
+    evaluation inside."""
+    prev = _CONV_STEP[0]
+    _CONV_STEP[0] = step
+    try:
+        yield
+    finally:
+        _CONV_STEP[0] = prev
+
+
+def conversion_step():
+    """Current conversion-clock value (0 when no clock is installed)."""
+    s = _CONV_STEP[0]
+    return 0 if s is None else s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,12 +207,26 @@ class ProjectionSilicon(NamedTuple):
     exactly ``m``, and plane/code recombinations sum the same integers in
     a different order — exact in float32 (the σ=0 collapse gate of
     ``benchmarks/silicon_report.py``).
+
+    ``thermal_fs``/``noise_key`` (both optional, absent by default) add the
+    comparator's input-referred noise floor as PER-CONVERSION dither: every
+    ADC evaluation draws a fresh N(0, thermal_fs²) sample keyed by
+    (``noise_key``, the :func:`conversion_clock` stream step, a role salt),
+    instead of the old static per-slot draw. Same key + same step ⇒ the
+    same dither (replayable); consecutive stream steps decorrelate. Dither
+    is drawn per *executed* conversion batch: layouts that batch
+    conversions differently (round-interleaved swapped segments vs one
+    pinned pass) draw independent — statistically equivalent — samples, so
+    the bit-exactness invariants are guaranteed in the thermal_fs=None
+    regime only (where every exactness gate runs).
     """
 
     cap: jax.Array        # (N, C, m) per-tile cap-DAC weights, 1.0 nominal
     offset: jax.Array     # (N, C) per-tile comparator offset (FS fraction)
     rx_cap: jax.Array     # (C, m) dummy-row conversion instance
     rx_offset: jax.Array  # (C,) dummy-row comparator offset
+    thermal_fs: Optional[jax.Array] = None   # () noise RMS (FS fraction)
+    noise_key: Optional[jax.Array] = None    # PRNG key of the dither stream
 
     def slice(self, n0: int, n1: int, k0: int, k1: int,
               m_columns: int) -> "ProjectionSilicon":
@@ -183,16 +234,32 @@ class ProjectionSilicon(NamedTuple):
 
         ``k0`` must be M-chunk aligned (the tiled/swapped bit-exactness
         condition), so segment chunk boundaries coincide with the
-        projection's global chunking.
+        projection's global chunking. The dither stream is re-keyed by the
+        segment origin so distinct segments draw independent samples.
         """
         if k0 % m_columns:
             raise ValueError(
                 f"segment k0={k0} is not aligned to m_columns={m_columns}: "
                 f"the sliced silicon chunks would not match the tiles")
         c0, c1 = k0 // m_columns, -(-k1 // m_columns)
+        nkey = self.noise_key
+        if nkey is not None and (n0 or c0):
+            nkey = jax.random.fold_in(jax.random.fold_in(nkey, n0), c0)
         return ProjectionSilicon(self.cap[n0:n1, c0:c1],
                                  self.offset[n0:n1, c0:c1],
-                                 self.rx_cap[c0:c1], self.rx_offset[c0:c1])
+                                 self.rx_cap[c0:c1], self.rx_offset[c0:c1],
+                                 self.thermal_fs, nkey)
+
+    def dither(self, shape, salt: int) -> Optional[jax.Array]:
+        """Per-conversion thermal dither for one ADC tensor (``None`` when
+        the noise floor is off). ``salt`` separates the S1/S2/Rx roles of
+        one stream step."""
+        if self.thermal_fs is None:
+            return None
+        step = conversion_step()
+        key = jax.random.fold_in(jax.random.fold_in(self.noise_key, step),
+                                 salt)
+        return self.thermal_fs * jax.random.normal(key, shape)
 
 
 class CimWeightState(NamedTuple):
@@ -347,11 +414,19 @@ def _silicon_partials(gx: jax.Array, xp: jax.Array, ws: CimWeightState,
                        (2, 3, 0, 1))                             # (N, Pw, C, m)
     gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
     num1 = jnp.einsum("bcm,npcm,ncm->bnpc", gx, wp, cap)
+    off1 = off[:, None, :]
+    d1 = sil.dither(num1.shape, 1)
+    if d1 is not None:
+        off1 = off1 + d1
     codes1 = adc_codes(num1 / cap_sum[:, None, :], cfg.adc_bits,
-                       off[:, None, :])                          # (B, N, Pw, C)
+                       off1)                                     # (B, N, Pw, C)
     s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
     num2 = jnp.einsum("qbcm,ncm,ncm->qbnc", xp, gw, cap)
-    codes2 = adc_codes(num2 / cap_sum, cfg.adc_bits, off)        # (Px, B, N, C)
+    off2 = off
+    d2 = sil.dither(num2.shape, 2)
+    if d2 is not None:
+        off2 = off2 + d2
+    codes2 = adc_codes(num2 / cap_sum, cfg.adc_bits, off2)       # (Px, B, N, C)
     s2c = jnp.einsum("qbnc,q->bn", codes2, px)
     rxc = _silicon_rx(xp, cfg, sil)                              # (B, 1)
     return CimPartials(s1c, s2c, rxc, ws.r_w)
@@ -364,8 +439,12 @@ def _silicon_rx(xp: jax.Array, cfg: CimConfig, sil: ProjectionSilicon
     rx_cap = sil.rx_cap.astype(jnp.float32)                      # (C, m)
     rx_sum = jnp.sum(rx_cap, axis=-1)                            # (C,)
     num_rx = jnp.einsum("qbcm,cm->qbc", xp, rx_cap)
+    off_rx = sil.rx_offset.astype(jnp.float32)
+    d_rx = sil.dither(num_rx.shape, 3)
+    if d_rx is not None:
+        off_rx = off_rx + d_rx
     codes_rx = adc_codes(num_rx / rx_sum, cfg.adc_bits,
-                         sil.rx_offset.astype(jnp.float32))      # (Px, B, C)
+                         off_rx)                                 # (Px, B, C)
     return jnp.einsum("qbc,q->b", codes_rx, px)[:, None]         # (B, 1)
 
 

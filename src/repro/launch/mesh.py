@@ -37,3 +37,32 @@ def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
     data_axis = max(1, min(data_axis, n // model_axis))
     return jax.make_mesh((data_axis, model_axis), ("data", "model"),
                          **auto_axis_types(2))
+
+
+def make_serve_mesh(data: int = 0, fleet: int = 1, devices=None):
+    """Serving mesh, axes ``("data", "fleet")``.
+
+    ``data`` spans the engine's decode-batch (cache slot) dimension —
+    classic data parallelism over concurrent streams. ``fleet`` places a
+    projection's output-channel tiles across devices (macro placement:
+    each device holds a contiguous slice of every programmed µArray
+    bank). ``data=0`` takes every device not consumed by ``fleet``.
+    ``devices`` restricts the mesh to an explicit device list (e.g. the
+    single-device parity mesh) — built through ``jax.sharding.Mesh``
+    directly because ``jax.make_mesh`` on this jax picks from the global
+    device set only.
+    """
+    if devices is None:
+        n = len(jax.devices())
+        if data <= 0:
+            data = max(1, n // fleet)
+        return jax.make_mesh((data, fleet), ("data", "fleet"),
+                             **auto_axis_types(2))
+    import numpy as np
+    devs = np.asarray(devices, dtype=object)
+    if data <= 0:
+        data = max(1, devs.size // fleet)
+    if devs.size != data * fleet:
+        raise ValueError(
+            f"{devs.size} devices do not fill a ({data}, {fleet}) mesh")
+    return jax.sharding.Mesh(devs.reshape(data, fleet), ("data", "fleet"))

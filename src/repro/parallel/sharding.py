@@ -237,3 +237,98 @@ def sanitize_pspecs(pspecs, structs, axis_sizes: dict):
 
     return jax.tree.map(fix, pspecs, structs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving-mesh shardings (repro.traffic.shard)
+# ---------------------------------------------------------------------------
+
+def serve_cache_pspecs(cfg, cache, axis_sizes: dict,
+                       data_axis: str = "data"):
+    """Decode-cache specs for the serving mesh: the slot (batch) dim over
+    ``data_axis``, everything else replicated.
+
+    Reuses the authoritative per-family cache builders
+    (``T.lm_cache_pspecs``), then strips every axis the serving mesh does
+    not have (the builders propose training axes like ``model`` for
+    flash-decode SP) and every axis that does not divide its dim — so the
+    result is always placeable on a ``("data", "fleet")`` mesh.
+    """
+    from repro.models import transformer as T
+    from repro.configs.base import ParallelConfig as PC
+    pcfg = PC(dp_axes=(data_axis,))
+    specs = T.lm_cache_pspecs(cfg, cache, pcfg, axis_sizes)
+
+    def size_of(axes) -> int:
+        n = 1
+        for a in axes:
+            n *= axis_sizes.get(a, 1)
+        return n
+
+    def fix(spec, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        out = []
+        for i, ax in enumerate(dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            ok = (all(a in axis_sizes for a in axes)
+                  and size_of(axes) > 1
+                  and leaf.shape[i] % size_of(axes) == 0)
+            out.append(ax if ok else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, cache,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def exec_param_pspecs(params, axis_sizes: dict, fleet_axis: str = "fleet"):
+    """Sharding specs for a ``ServeEngine`` exec tree.
+
+    Programmed macro state is the serving working set: each
+    :class:`~repro.core.programmed.ProgrammedMacro`'s weight-plane /
+    lossless state and digital residue shard their output-channel (N)
+    dim — the macro-placement axis: device d of the ``fleet`` axis holds
+    a contiguous slice of every projection's µArray banks, mirroring how
+    a multi-die fleet splits a projection's tiles by output channel.
+    Scales, swapped macros (scales only), silicon views and every float
+    parameter stay replicated — divisibility-guarded like everything
+    else, so a fleet axis that doesn't divide some projection's N simply
+    leaves that projection replicated.
+    """
+    from repro.core.programmed import (CimLosslessState, CimPackedPlanes,
+                                       ProgrammedMacro, _is_prog_key)
+
+    def rep(sub):
+        return jax.tree.map(lambda _: P(), sub)
+
+    def last_dim(leaf) -> P:
+        if getattr(leaf, "ndim", 0) < 1:
+            return P()
+        ax = _guard(leaf.shape[-1], fleet_axis, axis_sizes)
+        return P(*([None] * (leaf.ndim - 1) + [ax]))
+
+    def prog_spec(pm: ProgrammedMacro) -> ProgrammedMacro:
+        return ProgrammedMacro(
+            sw=rep(pm.sw), sx=rep(pm.sx), r_w=last_dim(pm.r_w),
+            state=None if pm.state is None else CimPackedPlanes(
+                packed=last_dim(pm.state.packed),
+                r_w=last_dim(pm.state.r_w)),
+            # Kernel state keeps mixed layouts ((N, Kp) gates vs
+            # (Pw, Kp, N) planes) — replicated; the Pallas path is not a
+            # traffic-lab target.
+            kernel=None if pm.kernel is None else rep(pm.kernel),
+            lossless=None if pm.lossless is None else CimLosslessState(
+                packed=last_dim(pm.lossless.packed)))
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: prog_spec(v)
+                    if _is_prog_key(k) and isinstance(v, ProgrammedMacro)
+                    else walk(v) for k, v in node.items()}
+        if type(node) in (list, tuple):
+            return type(node)(walk(v) for v in node)
+        return rep(node)
+
+    return walk(params)

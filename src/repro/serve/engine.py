@@ -57,12 +57,20 @@ from repro.models import transformer as T
 
 def make_serve_step(cfg: ModelConfig, pctx=None,
                     temperature: float = 0.0) -> Callable:
-    """(params, cache, tokens, rng) -> (next_tokens, logits, new_cache)."""
-    pctx = pctx or T.ParallelContext()
+    """(params, cache, tokens, rng, step) -> (next_tokens, logits, cache).
 
-    def serve_step(params, cache, tokens, rng):
-        logits, new_cache = T.lm_decode_step(params, cache, tokens, cfg,
-                                             pctx)
+    ``step`` is the engine's input-stream counter (decode steps + prefill
+    calls), threaded through :func:`repro.core.cim.conversion_clock` so
+    per-conversion thermal dither decorrelates across stream steps. It is
+    unused (and free) when the exec tree carries no thermal silicon.
+    """
+    pctx = pctx or T.ParallelContext()
+    from repro.core import cim
+
+    def serve_step(params, cache, tokens, rng, step=0):
+        with cim.conversion_clock(step):
+            logits, new_cache = T.lm_decode_step(params, cache, tokens,
+                                                 cfg, pctx)
         if temperature > 0.0:
             nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
         else:
@@ -82,6 +90,9 @@ class Request:
     # request finished (or before it was ever scheduled): the request is
     # returned with whatever it produced instead of being dropped.
     timed_out: bool = False
+    # Set by ServeEngine.evict (deadline-aware schedulers reclaiming the
+    # slot): the request keeps its partial output but never finished.
+    evicted: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,8 +270,21 @@ class ServeEngine:
                 f"pattern with a full-length KV cache")
         self.batched_prefill = supported if batched_prefill is None \
             else bool(batched_prefill)
-        self._prefill_fn = jax.jit(
-            lambda p, c, tok, val: T.lm_prefill_cache(p, c, tok, val, cfg))
+        from repro.core import cim as _cim
+
+        def _prefill(p, c, tok, val, step=0):
+            with _cim.conversion_clock(step):
+                return T.lm_prefill_cache(p, c, tok, val, cfg)
+
+        self._prefill_fn = jax.jit(_prefill)
+        # Wave-admission observers: each hook receives the admitted
+        # [(slot, request), ...] wave — schedulers (repro.traffic) track
+        # slot occupancy through this instead of polling.
+        self.admission_hooks: list[Callable] = []
+        # Exec-tree refresh observers: called after _refresh_silicon
+        # rebuilds self._exec_params (drift refresh, recalibration) —
+        # mesh sharding (repro.traffic.shard) re-places the new tree.
+        self.exec_refresh_hooks: list[Callable] = []
         # Stream counters feeding the per-run ServeReport.
         self._decode_steps = 0
         self._decode_tokens = 0
@@ -295,12 +319,17 @@ class ServeEngine:
         CURRENT state (age/corrections) into the exec tree."""
         if self.silicon is None:
             self._exec_params = self._programmed_params
-            return
-        from repro.silicon.instance import attach_silicon
-        pinned = self.schedule.pinned if self.schedule is not None else True
-        self._exec_params = attach_silicon(
-            self._programmed_params, self.silicon, self.silicon_cfg,
-            self.cfg.mf.cim, pinned=pinned)
+        else:
+            from repro.silicon.instance import attach_silicon
+            pinned = self.schedule.pinned if self.schedule is not None \
+                else True
+            self._exec_params = attach_silicon(
+                self._programmed_params, self.silicon, self.silicon_cfg,
+                self.cfg.mf.cim, pinned=pinned)
+        # getattr: _refresh_silicon first runs from __init__ before the
+        # hook list exists.
+        for hook in getattr(self, "exec_refresh_hooks", ()):
+            hook(self)
 
     def _compile_fleet_schedule(self):
         """Compile the model's projections onto the fleet; returns the
@@ -341,6 +370,31 @@ class ServeEngine:
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.requests) if r is None]
 
+    @property
+    def occupied_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is not None]
+
+    @property
+    def stream_index(self) -> int:
+        """The engine's input-stream counter (decode steps + prefill
+        calls) — the conversion clock threaded into the jitted forwards
+        and the age clock of the silicon lab."""
+        return self._decode_steps + self._prefill_calls
+
+    def evict(self, slot: int) -> Request:
+        """Reclaim an occupied slot before its request finishes (deadline-
+        aware schedulers shedding a stream that can no longer meet its
+        SLO). The request is marked ``evicted`` and returned with its
+        partial output; the slot is free for the next admission wave —
+        whose `_reset_slots` scatter zeroes the cache positions, so no
+        state leaks to the next occupant."""
+        req = self.requests[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not occupied")
+        req.evicted = True
+        self.requests[slot] = None
+        return req
+
     def submit_many(self, reqs: list[Request]) -> int:
         """Admit up to ``len(free_slots)`` requests in ONE jitted scatter.
 
@@ -368,6 +422,8 @@ class ServeEngine:
         pad = np.full((self.slots,), sel[0], np.int32)
         pad[:len(sel)] = sel
         self.cache = _reset_slots(self.cache, jnp.asarray(pad))
+        for hook in self.admission_hooks:
+            hook(list(zip(sel, take)))
         if self.batched_prefill:
             self._prefill_wave([(s, r) for s, r in zip(sel, take)
                                 if len(r.prompt) > 1])
@@ -394,7 +450,8 @@ class ServeEngine:
             self._prompt_left[s] = 0
         self.cache = self._prefill_fn(self._exec_params, self.cache,
                                       jnp.asarray(tokens),
-                                      jnp.asarray(valid))
+                                      jnp.asarray(valid),
+                                      jnp.int32(self.stream_index))
         self._prefill_calls += 1
         self._prefill_tokens += int(valid.sum())
         self._after_stream()
@@ -422,7 +479,8 @@ class ServeEngine:
         self._rng, sub = jax.random.split(self._rng)
         tokens = jnp.asarray(self._feed)
         nxt, _, self.cache = self.step_fn(self._exec_params, self.cache,
-                                          tokens, sub)
+                                          tokens, sub,
+                                          jnp.int32(self.stream_index))
         self._decode_steps += 1
         nxt = np.asarray(nxt)
         for s, req in enumerate(self.requests):
@@ -519,6 +577,36 @@ class ServeEngine:
         self._monitor.rebaseline(post)
         return post
 
+    def counters(self) -> dict:
+        """Snapshot of the engine's cumulative stream counters. Take one
+        before a serving window and hand it to :meth:`report_since` after
+        — how external schedulers (``repro.traffic``) get per-window
+        :class:`ServeReport`s without going through :meth:`run`."""
+        return dict(decode_steps=self._decode_steps,
+                    decode_tokens=self._decode_tokens,
+                    prefill_calls=self._prefill_calls,
+                    prefill_tokens=self._prefill_tokens,
+                    drift_checks=self._drift_checks,
+                    drift_alarms=self._drift_alarms,
+                    recals=self._recals, recal_bits=self._recal_bits)
+
+    def report_since(self, before: dict, elapsed_s: float) -> ServeReport:
+        """Eq. 4-charged :class:`ServeReport` of the window between a
+        :meth:`counters` snapshot and now (also stored at
+        ``last_report``)."""
+        now = self.counters()
+        self.last_report = self._build_report(
+            decode_steps=now["decode_steps"] - before["decode_steps"],
+            decode_tokens=now["decode_tokens"] - before["decode_tokens"],
+            prefill_calls=now["prefill_calls"] - before["prefill_calls"],
+            prefill_tokens=now["prefill_tokens"] - before["prefill_tokens"],
+            elapsed_s=elapsed_s,
+            drift_checks=now["drift_checks"] - before["drift_checks"],
+            drift_alarms=now["drift_alarms"] - before["drift_alarms"],
+            recalibrations=now["recals"] - before["recals"],
+            recal_reload_bits=now["recal_bits"] - before["recal_bits"])
+        return self.last_report
+
     def run(self, reqs: list[Request], max_ticks: int = 10_000
             ) -> list[Request]:
         """Serve ``reqs`` to completion (or until ``max_ticks``).
@@ -537,10 +625,7 @@ class ServeEngine:
         """
         self._validate(reqs)
         t0 = time.perf_counter()
-        steps0, tokens0 = self._decode_steps, self._decode_tokens
-        pcalls0, ptokens0 = self._prefill_calls, self._prefill_tokens
-        checks0, alarms0 = self._drift_checks, self._drift_alarms
-        recals0, rbits0 = self._recals, self._recal_bits
+        counters0 = self.counters()
         pending = list(reqs)
         done: list[Request] = []
         ticks = 0
@@ -563,17 +648,7 @@ class ServeEngine:
         for r in pending:
             r.timed_out = True
             done.append(r)
-        elapsed = time.perf_counter() - t0
-        self.last_report = self._build_report(
-            decode_steps=self._decode_steps - steps0,
-            decode_tokens=self._decode_tokens - tokens0,
-            prefill_calls=self._prefill_calls - pcalls0,
-            prefill_tokens=self._prefill_tokens - ptokens0,
-            elapsed_s=elapsed,
-            drift_checks=self._drift_checks - checks0,
-            drift_alarms=self._drift_alarms - alarms0,
-            recalibrations=self._recals - recals0,
-            recal_reload_bits=self._recal_bits - rbits0)
+        self.report_since(counters0, time.perf_counter() - t0)
         # Submission order first; extras (in-flight from direct submit
         # calls before this run) keep completion order after.
         submitted = {id(r) for r in reqs}

@@ -15,10 +15,14 @@ Sampling model (all draws keyed, deterministic, mergeable):
     the bit-line parasitic mismatch of :mod:`repro.silicon.variability`;
   * comparator offset: N(0, comparator_sigma_v^2) volts, bulk-corrected by
     the 2-bit tail-current DAC (``calibrated_offset``) at time zero;
-  * thermal noise: a static per-slot N(0, thermal_sigma_v^2) draw standing
-    in for the comparator's input-referred noise floor — pessimistic
-    (real thermal noise averages over conversions) and, unlike offset,
-    never touched by recalibration;
+  * thermal noise: the comparator's input-referred noise floor, drawn PER
+    CONVERSION — every ADC evaluation sees a fresh keyed
+    N(0, thermal_sigma_v^2) dither sample (``ProjectionSilicon.dither``),
+    keyed by (projection instance, stream step, role) through the
+    :func:`repro.core.cim.conversion_clock` the serving engine threads its
+    input-stream counter into. Unlike offset it is never touched by
+    recalibration, and unlike the old static per-slot draw it averages
+    over conversions the way real thermal noise does;
   * drift: per-slot constant-rate aging — slot s drifts at
     ``drift_sigma * dir_s / 1000`` per stream with dir_s ~ N(0,1), so at
     age t the fleet's offsets have spread by N(0, (drift_sigma*t/1000)^2)
@@ -64,7 +68,7 @@ class SiliconConfig:
     v_full_scale: float = 0.4            # MAV full scale (= V_PCH)
     calibrate_comparator: bool = True    # run the 2-bit cal at time zero
     comparator_cal_bits: int = 2
-    thermal_sigma_v: float = 0.0         # static noise-floor draw (V)
+    thermal_sigma_v: float = 0.0         # per-conversion noise floor RMS (V)
     drift_sigma_v_per_kstream: float = 0.0    # offset drift RMS per 1k streams
     drift_cap_sigma_per_kstream: float = 0.0  # fractional cap drift per 1k
     seed: int = 0
@@ -92,7 +96,6 @@ class FleetSilicon(NamedTuple):
     cap: jax.Array           # (S, m) sampled cap-DAC weights, 1.0 nominal
     offset_v: jax.Array      # (S,) raw comparator offsets (V), pre-correction
     correction_v: jax.Array  # (S,) current tail-current DAC correction (V)
-    thermal_v: jax.Array     # (S,) static noise-floor draw (V), uncorrectable
     drift_dir_v: jax.Array   # (S,) per-slot offset drift direction ~ N(0,1)
     drift_dir_cap: jax.Array  # (S, m) per-column cap drift direction
     age_streams: jax.Array   # () float32 service age
@@ -112,7 +115,9 @@ def sample_fleet(key: jax.Array, n_slots: int, m_columns: int,
     if n_slots < 1 or m_columns < 1:
         raise ValueError(f"degenerate fleet ({n_slots} slots, "
                          f"{m_columns} columns)")
-    k_cap, k_off, k_th, k_dv, k_dc = jax.random.split(key, 5)
+    # 5-way split kept (one branch retired with the static thermal draw)
+    # so same-seed fleets sample the same mismatch/drift lottery as before.
+    k_cap, k_off, _, k_dv, k_dc = jax.random.split(key, 5)
     cap = 1.0 + cfg.cap_sigma * jax.random.normal(k_cap,
                                                   (n_slots, m_columns))
     offset_v = cfg.comparator_sigma_v * jax.random.normal(k_off, (n_slots,))
@@ -120,13 +125,11 @@ def sample_fleet(key: jax.Array, n_slots: int, m_columns: int,
         correction_v = offset_v - calibrated_offset(offset_v, cfg)
     else:
         correction_v = jnp.zeros((n_slots,))
-    thermal_v = cfg.thermal_sigma_v * jax.random.normal(k_th, (n_slots,))
     drift_dir_v = jax.random.normal(k_dv, (n_slots,))
     drift_dir_cap = jax.random.normal(k_dc, (n_slots, m_columns))
     return FleetSilicon(cap=cap.astype(jnp.float32),
                         offset_v=offset_v.astype(jnp.float32),
                         correction_v=correction_v.astype(jnp.float32),
-                        thermal_v=thermal_v.astype(jnp.float32),
                         drift_dir_v=drift_dir_v.astype(jnp.float32),
                         drift_dir_cap=drift_dir_cap.astype(jnp.float32),
                         age_streams=jnp.float32(0.0))
@@ -151,7 +154,6 @@ def merge(a: FleetSilicon, b: FleetSilicon) -> FleetSilicon:
         cap=jnp.concatenate([a.cap, b.cap]),
         offset_v=jnp.concatenate([a.offset_v, b.offset_v]),
         correction_v=jnp.concatenate([a.correction_v, b.correction_v]),
-        thermal_v=jnp.concatenate([a.thermal_v, b.thermal_v]),
         drift_dir_v=jnp.concatenate([a.drift_dir_v, b.drift_dir_v]),
         drift_dir_cap=jnp.concatenate([a.drift_dir_cap, b.drift_dir_cap]),
         age_streams=jnp.maximum(a.age_streams, b.age_streams))
@@ -172,9 +174,11 @@ def _drifted_offset_v(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
 
 def effective_offsets(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
     """(S,) comparator offsets the ADC sees NOW, as full-scale fractions:
-    drifted raw offset minus the standing correction, plus the
-    uncorrectable noise-floor draw."""
-    off_v = _drifted_offset_v(sil, cfg) - sil.correction_v + sil.thermal_v
+    drifted raw offset minus the standing correction. The (uncorrectable)
+    thermal noise floor is NOT folded in here — it is per-conversion
+    dither, drawn at every ADC evaluation by
+    :meth:`~repro.core.cim.ProjectionSilicon.dither`."""
+    off_v = _drifted_offset_v(sil, cfg) - sil.correction_v
     return off_v / cfg.v_full_scale
 
 
@@ -204,7 +208,8 @@ def recalibrate_comparators(sil: FleetSilicon,
 # ---------------------------------------------------------------------------
 
 def _gather(eff_cap: jax.Array, eff_off: jax.Array, k: int, n: int,
-            base: int) -> ProjectionSilicon:
+            base: int, thermal_fs: Optional[jax.Array] = None,
+            noise_key: Optional[jax.Array] = None) -> ProjectionSilicon:
     m = eff_cap.shape[-1]
     s = eff_cap.shape[0]
     chunks = -(-k // m)
@@ -214,15 +219,34 @@ def _gather(eff_cap: jax.Array, eff_off: jax.Array, k: int, n: int,
     off = eff_off[idx]                       # (N, C)
     # The |x| dummy-row conversion of chunk c is shared across output
     # channels; it digitises through channel 0's slot for that chunk.
-    return ProjectionSilicon(cap, off, cap[0], off[0])
+    return ProjectionSilicon(cap, off, cap[0], off[0], thermal_fs,
+                             noise_key)
+
+
+def _thermal_pair(cfg: SiliconConfig,
+                  noise_key: Optional[jax.Array] = None):
+    """(thermal_fs, noise_key) leaves of the per-conversion dither stream
+    — (None, None) when the noise floor is off, keeping the σ_th=0 path
+    structurally identical to pre-thermal trees."""
+    if cfg.thermal_sigma_v == 0.0:
+        return None, None
+    fs = jnp.float32(cfg.thermal_sigma_v / cfg.v_full_scale)
+    if noise_key is None:
+        noise_key = jax.random.PRNGKey(cfg.seed)
+    return fs, noise_key
 
 
 def projection_silicon(sil: FleetSilicon, cfg: SiliconConfig, k: int,
-                       n: int, *, base: int = 0) -> ProjectionSilicon:
+                       n: int, *, base: int = 0,
+                       noise_key: Optional[jax.Array] = None
+                       ) -> ProjectionSilicon:
     """The per-tile silicon view of one (k, n) projection whose tiles
-    occupy slots ``(base + t) % n_slots`` in column-major tile order."""
+    occupy slots ``(base + t) % n_slots`` in column-major tile order.
+    ``noise_key`` seeds the per-conversion thermal dither stream when
+    ``cfg.thermal_sigma_v > 0`` (default: keyed from ``cfg.seed``)."""
+    fs, nkey = _thermal_pair(cfg, noise_key)
     return _gather(effective_caps(sil, cfg), effective_offsets(sil, cfg),
-                   k, n, base)
+                   k, n, base, fs, nkey)
 
 
 def _tiles(k: int, n: int, m: int) -> int:
@@ -251,8 +275,10 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
             f"the model runs m_columns={cim.m_columns}")
     eff_cap = effective_caps(sil, cfg)
     eff_off = effective_offsets(sil, cfg)
+    thermal_fs, noise_root = _thermal_pair(cfg)
     m = cim.m_columns
     next_base = 0
+    next_inst = 0
 
     def take_base(n_tiles: int) -> int:
         nonlocal next_base
@@ -261,12 +287,25 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
             next_base += n_tiles
         return b
 
+    def take_key() -> Optional[jax.Array]:
+        """Each projection INSTANCE (walk order, incl. every stacked scan
+        period / expert) gets its own dither stream — the walk order is
+        deterministic, so re-attachment (drift refresh, recalibration)
+        reproduces the same streams."""
+        nonlocal next_inst
+        if noise_root is None:
+            return None
+        k = jax.random.fold_in(noise_root, next_inst)
+        next_inst += 1
+        return k
+
     def view_nd(w_shape) -> Any:
         """Stacked gather over leading axes of a (..., K, N) weight."""
         *lead, k, n = w_shape
         if not lead:
-            return _gather(eff_cap, eff_off, k, n, take_base(_tiles(k, n,
-                                                                    m)))
+            return _gather(eff_cap, eff_off, k, n,
+                           take_base(_tiles(k, n, m)), thermal_fs,
+                           take_key())
         views = [view_nd(tuple(lead[1:]) + (k, n)) for _ in range(lead[0])]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *views)
 
@@ -278,7 +317,8 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
         elif kind == "conv":
             k2, n2 = conv_weight_matrix(node["w"]).shape
             out["sil"] = _gather(eff_cap, eff_off, k2, n2,
-                                 take_base(_tiles(k2, n2, m)))
+                                 take_base(_tiles(k2, n2, m)), thermal_fs,
+                                 take_key())
         else:
             out["sil"] = view_nd(tuple(node["w"].shape))
         return out

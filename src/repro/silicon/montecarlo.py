@@ -37,7 +37,10 @@ def sample_projection_silicon(key: jax.Array, k: int, n: int,
     the fully-independent-instances regime of a fresh fleet."""
     chunks = -(-k // m_columns)
     fleet = sample_fleet(key, chunks * n, m_columns, cfg)
-    return projection_silicon(fleet, cfg, k, n)
+    # The dither stream rides the sampling key so vmapped MC instances
+    # draw independent per-conversion thermal noise.
+    return projection_silicon(fleet, cfg, k, n,
+                              noise_key=jax.random.fold_in(key, 7))
 
 
 def _sqnr_db(ref: jax.Array, y: jax.Array, cap_db: float = 120.0

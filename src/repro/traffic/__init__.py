@@ -1,0 +1,37 @@
+"""Traffic lab: arrival-process load generation, continuous batching with
+SLO-aware admission control, and mesh-sharded fleet serving.
+
+The serving stack below (``repro.serve.ServeEngine``) answers "how fast
+does one engine decode a batch it was handed"; this package answers the
+question the in-SRAM inference literature actually reports — throughput
+per decision under *sustained, stochastic* load:
+
+  * :mod:`~repro.traffic.workload` — keyed-deterministic arrival
+    processes (Poisson, Markov-modulated bursty, trace replay) emitting
+    timestamped requests with prompt/decode-length distributions and
+    per-request SLO deadlines;
+  * :mod:`~repro.traffic.batching` — a continuous-batching scheduler in
+    front of the engine: admission control, wave-filling into free cache
+    slots, prefill/decode interleaving, deadline-aware eviction;
+  * :mod:`~repro.traffic.shard` — places the engine's decode batch and
+    programmed fleet state on a jax device mesh (data-parallel slot
+    axis, fleet axis for macro placement); a single-device mesh is
+    bitwise identical to the unsharded path;
+  * :mod:`~repro.traffic.report` — :class:`TrafficReport` layered on the
+    engine's ``ServeReport``: p50/p99/p999 latency, TTFT, tok/s, SLO
+    attainment, queue depth, utilization per offered-load point.
+"""
+
+from repro.traffic.batching import (AdmissionConfig, ContinuousBatcher,
+                                    TrafficRunLog, VirtualClock, WallClock)
+from repro.traffic.report import TrafficReport, percentile
+from repro.traffic.shard import shard_engine
+from repro.traffic.workload import (TrafficRequest, WorkloadConfig,
+                                    generate, replay_trace)
+
+__all__ = [
+    "AdmissionConfig", "ContinuousBatcher", "TrafficReport",
+    "TrafficRequest", "TrafficRunLog", "VirtualClock", "WallClock",
+    "WorkloadConfig", "generate", "percentile", "replay_trace",
+    "shard_engine",
+]

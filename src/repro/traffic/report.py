@@ -1,0 +1,138 @@
+"""TrafficReport: per-offered-load-point serving quality accounting.
+
+Layered on the engine's :class:`~repro.serve.engine.ServeReport` (stream
+counters, Eq. 4 reload/recalibration charges) with the quantities only a
+clocked scheduler can observe: latency percentiles, time-to-first-token,
+SLO attainment, queue depth, slot occupancy — plus the per-wave Eq. 4
+roll-up (:func:`repro.compiler.cost.serve_wave_cost`) pricing the
+window's energy per generated token when the engine carries a fleet
+schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.traffic.batching import TrafficRunLog
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Deterministic linear-interpolation percentile (q in [0, 100]) —
+    no numpy dtype surprises in JSON-bound report fields."""
+    if not xs:
+        return float("nan")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
+    s = sorted(float(x) for x in xs)
+    if len(s) == 1:
+        return s[0]
+    pos = (len(s) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    """One offered-load point's serving quality + cost roll-up."""
+
+    # -- offered load --------------------------------------------------
+    offered_rps: float            # requests/s offered (measured on trace)
+    n_requests: int
+    # -- outcomes ------------------------------------------------------
+    completed: int
+    rejected: int                 # shed at admission or past-TTFT in queue
+    evicted: int                  # reclaimed in flight past deadline
+    slo_attainment: float         # fraction of OFFERED requests slo_met
+    # -- throughput ----------------------------------------------------
+    tok_s: float                  # generated tokens / clock elapsed
+    decode_tokens: int
+    elapsed_s: float              # clock time of the run window
+    wall_s: float                 # host wall time (≠ elapsed under sim)
+    # -- latency (clock seconds; NaN when no request completed) --------
+    ttft_p50_s: float
+    ttft_p99_s: float
+    latency_p50_s: float
+    latency_p99_s: float
+    latency_p999_s: float
+    # -- pressure ------------------------------------------------------
+    queue_depth_mean: float
+    queue_depth_max: int
+    slot_utilization: float       # mean occupied / engine slots
+    out_of_ticks: bool
+    # -- engine + Eq. 4 roll-ups ---------------------------------------
+    serve: object                 # ServeReport of the window
+    wave: Optional[object] = None  # WaveCost when a fleet schedule exists
+
+    @property
+    def energy_per_token_j(self) -> float:
+        return self.wave.energy_per_token_j if self.wave is not None \
+            else 0.0
+
+    def to_json(self) -> dict:
+        """Flat JSON-safe payload (benchmarks/CI artifacts)."""
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)
+               if f.name not in ("serve", "wave")}
+        sr = self.serve
+        out["serve"] = {
+            "decode_steps": sr.decode_steps,
+            "prefill_calls": sr.prefill_calls,
+            "prefill_tokens": sr.prefill_tokens,
+            "reprogram_events": sr.reprogram_events,
+            "reload_energy_j": sr.reload_energy_j,
+            "utilization": sr.utilization,
+            "recalibrations": sr.recalibrations,
+        }
+        if self.wave is not None:
+            out["wave"] = {
+                "streams": self.wave.streams,
+                "compute_energy_j": self.wave.compute_energy_j,
+                "reload_energy_j": self.wave.reload.reload_energy_j,
+                "energy_per_token_j": self.wave.energy_per_token_j,
+                "latency_s": self.wave.latency_s,
+            }
+        return out
+
+
+def from_run(log: TrafficRunLog, engine) -> TrafficReport:
+    """Roll one batcher run up into a :class:`TrafficReport`."""
+    reqs = log.requests
+    n = len(reqs)
+    completed = [r for r in reqs if r.state == "completed"]
+    rejected = sum(r.state == "rejected" for r in reqs)
+    evicted = sum(r.state == "evicted" for r in reqs)
+    ttfts = [r.ttft_s for r in completed if r.ttft_s is not None]
+    lats = [r.latency_s for r in completed]
+    span = (max(r.t_arrival_s for r in reqs)
+            - min(r.t_arrival_s for r in reqs)) if n > 1 else 0.0
+    sr = log.serve_report
+    wave = None
+    if engine.schedule is not None:
+        from repro.compiler.cost import serve_wave_cost
+        wave = serve_wave_cost(engine.schedule, sr.decode_steps,
+                               sr.prefill_calls, sr.decode_tokens)
+    return TrafficReport(
+        offered_rps=(n - 1) / span if span > 0 else float("inf"),
+        n_requests=n,
+        completed=len(completed), rejected=int(rejected),
+        evicted=int(evicted),
+        slo_attainment=sum(r.slo_met for r in reqs) / n if n else 0.0,
+        tok_s=sr.decode_tokens / log.elapsed_s if log.elapsed_s > 0
+        else 0.0,
+        decode_tokens=sr.decode_tokens,
+        elapsed_s=log.elapsed_s, wall_s=log.wall_s,
+        ttft_p50_s=percentile(ttfts, 50), ttft_p99_s=percentile(ttfts, 99),
+        latency_p50_s=percentile(lats, 50),
+        latency_p99_s=percentile(lats, 99),
+        latency_p999_s=percentile(lats, 99.9),
+        queue_depth_mean=(sum(log.queue_depth) / len(log.queue_depth)
+                          if log.queue_depth else 0.0),
+        queue_depth_max=max(log.queue_depth, default=0),
+        slot_utilization=(sum(log.occupied)
+                          / (len(log.occupied) * engine.slots)
+                          if log.occupied else 0.0),
+        out_of_ticks=log.out_of_ticks,
+        serve=sr, wave=wave)

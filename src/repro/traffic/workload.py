@@ -1,0 +1,222 @@
+"""Keyed-deterministic arrival processes for the traffic lab.
+
+Every draw runs through one counter-based ``numpy`` Philox generator
+keyed by ``WorkloadConfig.seed``: the same config produces the same
+trace bit for bit on any host — the arrival-determinism contract the
+tests pin (same key ⇒ same trace), and what makes an offered-load sweep
+comparable across schedulers (every point replays identical traffic).
+
+Processes:
+
+  * ``poisson`` — memoryless arrivals at ``rate_rps`` (exponential
+    inter-arrival times), the open-loop baseline of serving papers;
+  * ``mmpp`` — a 2-state Markov-modulated Poisson process: a slow state
+    and a burst state at ``burst_rate_mult`` × the slow rate, sojourn
+    times exponential with mean cycle ``1/switch_rate_hz``, normalised
+    so the long-run mean rate is still ``rate_rps``. Burstiness is what
+    separates continuous batching from naive admission — the queue-depth
+    tail under MMPP is the figure to watch;
+  * trace replay (:func:`replay_trace`) — explicit arrival timestamps
+    (e.g. production logs) wrapped in the same request schema.
+
+Each request carries its SLO budget as ABSOLUTE deadlines: first token
+by ``t_arrival_s + ttft_slo_s``, full completion by that plus
+``tpot_slo_s`` per requested token — the quantities the batcher's
+admission control and deadline eviction act on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrafficRequest:
+    """One timestamped request flowing through the traffic lab.
+
+    The generator fills identity/SLO fields; the scheduler
+    (:class:`~repro.traffic.batching.ContinuousBatcher`) fills the
+    ``t_*`` observation fields and drives ``state`` through
+    ``pending -> queued -> running -> completed`` (or ``rejected`` /
+    ``evicted``). ``serve`` is the engine-level
+    :class:`~repro.serve.engine.Request` once admitted.
+    """
+
+    rid: int
+    t_arrival_s: float
+    prompt: list[int]
+    max_new_tokens: int
+    ttft_deadline_s: float      # absolute: first token due by this time
+    deadline_s: float           # absolute: completion due by this time
+    priority: int = 0           # lower = more urgent
+    # -- scheduler-filled observations --------------------------------
+    t_admit_s: Optional[float] = None
+    t_first_token_s: Optional[float] = None
+    t_done_s: Optional[float] = None
+    state: str = "pending"
+    serve: Optional[object] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done_s is None:
+            return None
+        return self.t_done_s - self.t_arrival_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token_s is None:
+            return None
+        return self.t_first_token_s - self.t_arrival_s
+
+    @property
+    def slo_met(self) -> bool:
+        """Completed with both the TTFT and the completion deadline met
+        — rejected/evicted/late requests all count as SLO misses."""
+        return (self.state == "completed"
+                and self.t_first_token_s is not None
+                and self.t_first_token_s <= self.ttft_deadline_s
+                and self.t_done_s is not None
+                and self.t_done_s <= self.deadline_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """One offered-load point's traffic recipe (fully keyed)."""
+
+    rate_rps: float = 4.0        # long-run mean arrival rate
+    n_requests: int = 64
+    process: str = "poisson"     # "poisson" | "mmpp"
+    # -- mmpp (2-state bursty) ----------------------------------------
+    burst_rate_mult: float = 4.0   # burst-state rate / slow-state rate
+    burst_fraction: float = 0.25   # long-run fraction of time in burst
+    switch_rate_hz: float = 0.5    # 1 / mean(slow + burst sojourn)
+    # -- per-request shape (uniform ints, inclusive bounds) -----------
+    prompt_len_min: int = 4
+    prompt_len_max: int = 16
+    decode_len_min: int = 4
+    decode_len_max: int = 16
+    vocab_size: int = 128
+    # -- SLO budgets --------------------------------------------------
+    ttft_slo_s: float = 0.5      # first token within this of arrival
+    tpot_slo_s: float = 0.1      # per-token budget after first token
+    priority_levels: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.rate_rps <= 0 or self.n_requests < 1:
+            raise ValueError(
+                f"degenerate workload (rate_rps={self.rate_rps}, "
+                f"n_requests={self.n_requests})")
+        if self.process not in ("poisson", "mmpp"):
+            raise ValueError(
+                f"unknown arrival process {self.process!r} — use "
+                f"'poisson', 'mmpp', or replay_trace() for logs")
+        if not 0.0 < self.burst_fraction < 1.0:
+            raise ValueError(
+                f"burst_fraction must be in (0, 1), got "
+                f"{self.burst_fraction}")
+        if self.prompt_len_min < 1 or self.decode_len_min < 1:
+            raise ValueError("prompts and decode budgets need >= 1 token")
+
+
+def _rng(seed: int) -> np.random.Generator:
+    """Counter-based generator: keyed, platform-stable."""
+    return np.random.Generator(np.random.Philox(key=seed))
+
+
+def _poisson_arrivals(rng: np.random.Generator, n: int,
+                      rate: float) -> np.ndarray:
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _mmpp_arrivals(rng: np.random.Generator, n: int,
+                   cfg: WorkloadConfig) -> np.ndarray:
+    """2-state MMPP, arrival by arrival with exponential state sojourns.
+
+    The slow rate is chosen so the stationary mean equals ``rate_rps``:
+    mean = (1 - f) * r_slow + f * mult * r_slow.
+    """
+    f = cfg.burst_fraction
+    r_slow = cfg.rate_rps / ((1.0 - f) + f * cfg.burst_rate_mult)
+    rates = (r_slow, r_slow * cfg.burst_rate_mult)
+    # Sojourn means per state sum to one mean cycle (1 / switch_rate).
+    sojourn = ((1.0 - f) / cfg.switch_rate_hz, f / cfg.switch_rate_hz)
+    out = np.empty(n)
+    t = 0.0
+    state = 0
+    t_switch = rng.exponential(sojourn[state])
+    i = 0
+    while i < n:
+        dt = rng.exponential(1.0 / rates[state])
+        if t + dt >= t_switch:
+            # The candidate arrival straddles a state change: advance to
+            # the switch and redraw at the new rate (memorylessness makes
+            # the discard exact, the classic thinning-free simulation).
+            t = t_switch
+            state = 1 - state
+            t_switch = t + rng.exponential(sojourn[state])
+            continue
+        t += dt
+        out[i] = t
+        i += 1
+    return out
+
+
+def generate(cfg: WorkloadConfig) -> list[TrafficRequest]:
+    """Materialise one keyed workload trace (same cfg ⇒ same trace)."""
+    rng = _rng(cfg.seed)
+    if cfg.process == "poisson":
+        arrivals = _poisson_arrivals(rng, cfg.n_requests, cfg.rate_rps)
+    else:
+        arrivals = _mmpp_arrivals(rng, cfg.n_requests, cfg)
+    prompt_lens = rng.integers(cfg.prompt_len_min, cfg.prompt_len_max + 1,
+                               size=cfg.n_requests)
+    decode_lens = rng.integers(cfg.decode_len_min, cfg.decode_len_max + 1,
+                               size=cfg.n_requests)
+    priorities = (rng.integers(0, cfg.priority_levels,
+                               size=cfg.n_requests)
+                  if cfg.priority_levels > 1
+                  else np.zeros(cfg.n_requests, np.int64))
+    reqs = []
+    for i in range(cfg.n_requests):
+        # Token 0 is reserved for padding in the batched prefill slabs.
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=int(prompt_lens[i])).tolist()
+        t_arr = float(arrivals[i])
+        n_new = int(decode_lens[i])
+        reqs.append(TrafficRequest(
+            rid=i, t_arrival_s=t_arr, prompt=prompt, max_new_tokens=n_new,
+            ttft_deadline_s=t_arr + cfg.ttft_slo_s,
+            deadline_s=t_arr + cfg.ttft_slo_s + cfg.tpot_slo_s * n_new,
+            priority=int(priorities[i])))
+    return reqs
+
+
+def replay_trace(arrivals_s: Sequence[float],
+                 prompts: Sequence[Sequence[int]],
+                 max_new_tokens: Sequence[int],
+                 *, ttft_slo_s: float = 0.5, tpot_slo_s: float = 0.1,
+                 priorities: Optional[Sequence[int]] = None
+                 ) -> list[TrafficRequest]:
+    """Wrap an explicit arrival log in the traffic-lab request schema
+    (the trace-replay process: timestamps come from outside, SLO budgets
+    are applied uniformly)."""
+    if not (len(arrivals_s) == len(prompts) == len(max_new_tokens)):
+        raise ValueError(
+            f"trace columns disagree: {len(arrivals_s)} arrivals, "
+            f"{len(prompts)} prompts, {len(max_new_tokens)} budgets")
+    if sorted(arrivals_s) != list(arrivals_s):
+        raise ValueError("trace arrivals must be sorted ascending")
+    reqs = []
+    for i, (t, p, n) in enumerate(zip(arrivals_s, prompts,
+                                      max_new_tokens)):
+        reqs.append(TrafficRequest(
+            rid=i, t_arrival_s=float(t), prompt=list(p),
+            max_new_tokens=int(n),
+            ttft_deadline_s=float(t) + ttft_slo_s,
+            deadline_s=float(t) + ttft_slo_s + tpot_slo_s * int(n),
+            priority=int(priorities[i]) if priorities is not None else 0))
+    return reqs
