@@ -69,6 +69,17 @@ DESIGNS = ((31, 5), (15, 4), (31, 6))
 # itself a finding worth keeping on the record.
 UNGATED_DESIGNS = ((31, 4),)
 METHODS = ("static", "amax", "percentile", "mse")
+# Per-channel variants: the scalar policy's scale shaped over each
+# projection's per-feature amax profile (input-DAC gain trims; see
+# repro.calib.corpus.scales_from_stats(per_channel=True)). Reported as
+# an SQNR delta against the matching scalar cell, not gated, because the
+# sign flips with the design point: at the exactly-lossless pairings
+# (31x5, 15x4) the gain-weighted charge averages break the code==count
+# identity — every S2/R_x conversion picks up real ADC rounding and the
+# delta is tens of dB NEGATIVE — while at rounding-limited ADCs (31x6,
+# 31x4) the finer per-channel input grids win a few dB. Per-channel
+# calibration is an under-provisioned-ADC tool, not a free win.
+PC_METHODS = ("amax", "mse")
 
 
 @dataclasses.dataclass
@@ -156,6 +167,7 @@ def run(quick: bool = True):
         "quick": quick,
         "act_amax_static": DEFAULT_ACT_AMAX,
         "methods": list(METHODS),
+        "per_channel_methods": [f"{m}_pc" for m in PC_METHODS],
         "designs": [f"{m}x{a}" for m, a in DESIGNS],
         "ungated_designs": [f"{m}x{a}" for m, a in UNGATED_DESIGNS],
         "configs": {},
@@ -176,9 +188,15 @@ def run(quick: bool = True):
             cim = CimConfig(w_bits=8, x_bits=8, adc_bits=a, m_columns=m)
             cim_fwd = setup.cim_forward_builder(cim)
             cells = {}
-            for method in METHODS:
-                scales = None if method == "static" else scales_from_stats(
-                    collector, registry, cim.x_bits, method)
+            for method in (METHODS
+                           + tuple(f"{m}_pc" for m in PC_METHODS)):
+                if method == "static":
+                    scales = None
+                else:
+                    base = method.removesuffix("_pc")
+                    scales = scales_from_stats(
+                        collector, registry, cim.x_bits, base,
+                        per_channel=method.endswith("_pc"))
                 progd = program_weights(tagged, cim, scales=scales)
                 t0 = time.time()
                 rep = accuracy_report(
@@ -209,11 +227,20 @@ def run(quick: bool = True):
             parity = bool(np.array_equal(
                 np.asarray(setup.cim_forward_builder(cim)(prog_a, batch0)),
                 np.asarray(setup.cim_forward_builder(cim)(prog_b, batch0))))
+            pc_delta = {
+                meth: (cells[f"{meth}_pc"]["mean_sqnr_db"]
+                       - cells[meth]["mean_sqnr_db"])
+                for meth in PC_METHODS}
+            rows.append((
+                f"calib_{setup.name}_{m}x{a}_pc_delta", 0.0,
+                " ".join(f"{meth}={d:+.2f}dB"
+                         for meth, d in pc_delta.items())))
             per_design[f"{m}x{a}"] = {
                 "cells": cells,
                 "adc_exactly_lossless": adc_exactly_lossless(cim),
                 "gated": gated,
                 "calibrated_beats_static": improved,
+                "per_channel_sqnr_delta_db": pc_delta,
                 "static_scales_parity": parity,
             }
             if not parity:

@@ -48,8 +48,8 @@ from repro.configs.qwen3_0_6b import SMOKE
 from repro.core.cim import CimConfig
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeEngine
-from repro.traffic import (ContinuousBatcher, VirtualClock, WorkloadConfig,
-                           generate, shard_engine)
+from repro.traffic import (ContinuousBatcher, VirtualClock, WallClock,
+                           WorkloadConfig, generate, shard_engine)
 from repro.traffic.report import from_run
 from repro.launch.mesh import make_serve_mesh
 
@@ -133,6 +133,32 @@ def _run_sweep(engine, quick, tick_s, prefill_s):
         assert not rep.out_of_ticks
         points.append((frac, rep))
     return capacity_rps, points
+
+
+def _wallclock_smoke(engine, tick_s, prefill_s, quick) -> dict:
+    """One LIVE run next to the virtual-clock sweeps: same workload
+    machinery on a :class:`WallClock` (arrivals in real perf_counter
+    time, idle gaps actually slept). Wall timing is machine-dependent,
+    so the gate is completion-shaped — every offered request reaches a
+    terminal state and tokens flowed — while latency/SLO numbers are
+    recorded for the trajectory, not asserted."""
+    capacity_rps = engine.slots / (6.0 * tick_s)
+    n_requests = 8 if quick else 16
+    wcfg = WorkloadConfig(
+        rate_rps=0.5 * capacity_rps, n_requests=n_requests,
+        process="poisson", prompt_len_min=2, prompt_len_max=6,
+        decode_len_min=4, decode_len_max=8,
+        vocab_size=engine.cfg.vocab_size,
+        ttft_slo_s=prefill_s + 50.0 * tick_s, tpot_slo_s=3.0 * tick_s,
+        seed=13)
+    reqs = generate(wcfg)
+    bat = ContinuousBatcher(engine, clock=WallClock())
+    log = bat.run(reqs, max_ticks=50_000)
+    rep = from_run(log, engine)
+    assert not log.out_of_ticks
+    assert rep.completed + rep.rejected + rep.evicted == n_requests
+    assert rep.completed > 0 and rep.decode_tokens > 0
+    return dict(offered_frac=0.5, clock="wall", **rep.to_json())
 
 
 def _mesh_parity(params, cfg, fleet):
@@ -255,6 +281,8 @@ def run(quick: bool = True):
     assert all(a >= KNEE_SLO for _, a in below_knee), (
         f"SLO attainment dipped below {KNEE_SLO} below the knee: {attain}")
 
+    wall = _wallclock_smoke(engine, tick_s, prefill_s, quick)
+
     parity, shard_info = _mesh_parity(params, cfg, fleet)
     assert parity, "single-device mesh decode diverged from unsharded"
 
@@ -273,6 +301,7 @@ def run(quick: bool = True):
         "gate_slo_below_knee": KNEE_SLO,
         "sweep": [dict(offered_frac=frac, **rep.to_json())
                   for frac, rep in points],
+        "wallclock_smoke": wall,
         "mesh_parity": {"single_device_bitwise": parity,
                         **(shard_info or {})},
         "multidevice": multidev,
@@ -292,6 +321,11 @@ def run(quick: bool = True):
                  f"knee={knee_frac:g}x_capacity "
                  f"({knee_frac * capacity_rps:.2f}rps) "
                  f"gate_slo>={KNEE_SLO} json={OUT_PATH}"))
+    rows.append(("traffic_wallclock_smoke", 0.0,
+                 f"tok_s={wall['tok_s']:.1f} "
+                 f"completed={wall['completed']}/{wall['n_requests']} "
+                 f"slo={wall['slo_attainment']:.3f} "
+                 f"wall_s={wall['wall_s']:.2f}"))
     rows.append(("traffic_mesh_parity", 0.0,
                  f"single_device_bitwise={parity} "
                  f"cache_leaves={shard_info['cache_sharded_leaves']}"))

@@ -10,6 +10,11 @@
 # TIER1_TRAFFIC_BENCH=1 additionally runs the traffic serving smoke
 # (offered-load sweep, SLO knee, mesh parity, multi-device scaling) and
 # leaves BENCH_traffic.json.
+# TIER1_KERNEL_BENCH=1 additionally runs ONLY the fused Pallas kernel
+# section of the silicon report (nominal vs silicon fused decode tok/s
+# gate, sigma=0 bitwise collapse, sigma>0 exact-code parity) and leaves
+# BENCH_silicon_kernel.json — a fast alternative to the full
+# TIER1_SILICON_BENCH report, which includes the same section.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,4 +32,7 @@ if [[ "${TIER1_SILICON_BENCH:-0}" == "1" ]]; then
 fi
 if [[ "${TIER1_TRAFFIC_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.traffic_report --smoke
+fi
+if [[ "${TIER1_KERNEL_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.silicon_report --smoke --only-kernel
 fi

@@ -24,7 +24,7 @@ energy (SQNR) while a programmed CIM forward runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,8 @@ from jax.experimental import io_callback
 
 from repro.calib import observers as obs
 from repro.calib import tap
-from repro.core.programmed import _EXPERT_KEYS, map_projections
+from repro.core.programmed import (_EXPERT_KEYS, DAC_GAIN_FLOOR,
+                                   map_projections)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,26 +109,37 @@ class StatsCollector:
         self.count = np.zeros((n_ids,), np.float64)
         self.amax = np.zeros((n_ids,), np.float64)
         self.hist = np.zeros((n_ids, obs_cfg.n_bins), np.float64)
+        # Per-channel |x| maxima, keyed by id: projections contract over
+        # different K, so these stay a ragged dict rather than one array.
+        self.camax: dict[int, np.ndarray] = {}
 
     # -- traced side --------------------------------------------------------
     def emit_activation(self, obs_id, x) -> None:
         st = obs.summarize(x, self.obs_cfg)
         io_callback(self._accumulate, None,
                     jnp.asarray(obs_id, jnp.int32), st.count, st.amax,
-                    st.hist, ordered=False)
+                    st.hist, obs.channel_amax(x), ordered=False)
 
     # -- host side ----------------------------------------------------------
-    def _accumulate(self, obs_id, count, amax, hist) -> None:
+    def _accumulate(self, obs_id, count, amax, hist, camax) -> None:
         i = int(obs_id)
         self.count[i] += float(count)
         self.amax[i] = max(self.amax[i], float(amax))
         self.hist[i] += np.asarray(hist, np.float64)
+        cm = np.asarray(camax, np.float64)
+        prev = self.camax.get(i)
+        self.camax[i] = cm.copy() if prev is None else np.maximum(prev, cm)
 
     def state(self, i: int) -> obs.ObserverState:
         """The merged state of instance ``i`` (numpy-backed)."""
         return obs.ObserverState(np.float32(self.count[i]),
                                  np.float32(self.amax[i]),
                                  self.hist[i].astype(np.float32))
+
+    def channel_state(self, i: int) -> Optional[np.ndarray]:
+        """Per-channel amax of instance ``i``, or None if it never fired
+        (an expert no input routed to, a scan period the corpus skipped)."""
+        return self.camax.get(i)
 
 
 class ErrorCollector:
@@ -248,18 +260,40 @@ def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
 
 def scales_from_stats(collector: StatsCollector, registry: ObserverRegistry,
                       x_bits: int, method: str, *, pct: float = 99.9,
-                      fallback_amax: float = 4.0
+                      fallback_amax: float = 4.0, per_channel: bool = False,
+                      channel_floor: float = DAC_GAIN_FLOOR
                       ) -> dict[str, np.ndarray]:
     """Lower accumulated stats into the ``program_weights`` scales map:
     one float32 array per projection name, shaped like its stacked
-    leading axes (scan periods, experts)."""
+    leading axes (scan periods, experts).
+
+    ``per_channel=True`` appends a trailing per-feature axis: each
+    instance's method-selected scalar scale is shaped over its recorded
+    per-channel amax profile (:func:`~repro.calib.observers
+    .shape_scale_channels`, attenuation-only, floored at
+    ``channel_floor``), producing ``(lead..., K)`` vectors that
+    ``program_weights`` realises as input-DAC gain trims. Instances that
+    never fired (unrouted experts, skipped scan periods) fall back to a
+    uniform vector at the scalar fallback scale; a projection with NO
+    fired instance stays scalar-shaped (nothing to profile)."""
     scales: dict[str, np.ndarray] = {}
     for name, (off, shape) in registry.entries.items():
         n = int(np.prod(shape, dtype=np.int64)) if shape else 1
-        vals = np.asarray(
-            [obs.select_scale(collector.state(off + j), x_bits, method,
-                              cfg=collector.obs_cfg, pct=pct,
-                              fallback_amax=fallback_amax)
-             for j in range(n)], np.float32)
-        scales[name] = vals.reshape(shape)
+        flat = [obs.select_scale(collector.state(off + j), x_bits, method,
+                                 cfg=collector.obs_cfg, pct=pct,
+                                 fallback_amax=fallback_amax)
+                for j in range(n)]
+        if not per_channel:
+            scales[name] = np.asarray(flat, np.float32).reshape(shape)
+            continue
+        profiles = [collector.channel_state(off + j) for j in range(n)]
+        k = next((p.shape[0] for p in profiles if p is not None), None)
+        if k is None:
+            scales[name] = np.asarray(flat, np.float32).reshape(shape)
+            continue
+        vecs = [obs.shape_scale_channels(
+                    s, p if p is not None else np.zeros((k,)),
+                    floor=channel_floor)
+                for s, p in zip(flat, profiles)]
+        scales[name] = np.stack(vecs).reshape(shape + (k,))
     return scales

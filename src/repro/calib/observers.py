@@ -90,6 +90,20 @@ def summarize(x: jax.Array,
     return observer_update(observer_init(cfg), x, cfg)
 
 
+def channel_amax(x: jax.Array) -> jax.Array:
+    """Per-feature max |x| over every axis but the last — the (K,) vector
+    the per-channel calibration path shapes DAC gain trims from. The last
+    axis of the recorded tensor is the projection's contraction axis
+    (linear: K = d_model; conv: the Cin-major im2col patch axis), so this
+    merges across batch/sequence/spatial positions with the same exact
+    max monoid as the scalar amax. A zero-row tensor (empty batch) yields
+    zeros — the identity under max-merge."""
+    v = jnp.abs(x.astype(jnp.float32)).reshape(-1, x.shape[-1])
+    if v.shape[0] == 0:     # static shape — resolved at trace time
+        return jnp.zeros((v.shape[1],), jnp.float32)
+    return jnp.max(v, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Host-side scale selection (numpy; runs once per calibration, not jitted).
 # ---------------------------------------------------------------------------
@@ -171,6 +185,30 @@ def scale_mse(state: ObserverState, x_bits: int, *,
     err = (centers[None, :] - q * scales[:, None]) ** 2     # (C, B)
     mse = err @ hist
     return float(scales[int(np.argmin(mse))])
+
+
+def shape_scale_channels(scale: float, camax: np.ndarray, *,
+                         floor: float = 2.0 ** -8) -> np.ndarray:
+    """Shape a method-selected scalar scale into a per-channel (K,) vector.
+
+    The macro's input DAC keeps ONE full-scale reference, so per-channel
+    calibration is attenuation-only: every channel's scale is the scalar
+    policy scale times ``clip(camax_k / max(camax), floor, 1)`` — a quiet
+    channel gets a proportionally finer grid, a loud channel keeps the
+    full-range grid the scalar policy chose, and no channel's gain drops
+    below ``floor`` (the hardware trim range,
+    ``core.programmed.DAC_GAIN_FLOOR``). The histogram-driven clip policy
+    (percentile / MSE) stays scalar — it sets the shared reference; the
+    per-channel shaping only redistributes resolution below it. A
+    silent-everywhere vector (all-zero camax) degenerates to the uniform
+    scalar scale.
+    """
+    camax = np.asarray(camax, np.float64)
+    top = float(camax.max()) if camax.size else 0.0
+    if top <= 0.0:
+        return np.full(camax.shape, scale, np.float32)
+    g = np.clip(camax / top, floor, 1.0)
+    return (scale * g).astype(np.float32)
 
 
 def select_scale(state: ObserverState, x_bits: int, method: str, *,

@@ -51,6 +51,7 @@ def calibrate(forward_fn: Callable[[Any, Any], Any], params: Any,
               batches: Sequence[Any], x_bits: int, *, method: str = "mse",
               obs_cfg: ObserverConfig = ObserverConfig(), pct: float = 99.9,
               fallback_amax: float = DEFAULT_ACT_AMAX,
+              per_channel: bool = False,
               meta: Optional[dict] = None) -> CalibrationArtifact:
     """One corpus pass -> a calibration artifact, for ANY model forward.
 
@@ -58,14 +59,21 @@ def calibrate(forward_fn: Callable[[Any, Any], Any], params: Any,
     through ``apply_projection`` / ``conv_apply`` (everything in the model
     zoo does); scan-stacked layers and MoE experts record one observer per
     layer instance / expert.
+
+    ``per_channel=True`` records per-feature amax profiles alongside the
+    scalar statistics and emits ``(lead..., K)`` scale vectors that
+    ``program_weights`` realises as input-DAC gain trims (per-channel
+    calibration; see ``corpus.scales_from_stats``).
     """
     tagged, registry = attach_observer_ids(params)
     collector = collect_stats(forward_fn, tagged, batches, registry,
                               obs_cfg)
     scales = scales_from_stats(collector, registry, x_bits, method,
-                               pct=pct, fallback_amax=fallback_amax)
+                               pct=pct, fallback_amax=fallback_amax,
+                               per_channel=per_channel)
     info = {"n_batches": len(batches), "n_projections": registry.n_ids,
-            "obs_bins": obs_cfg.n_bins, "obs_range_max": obs_cfg.range_max}
+            "obs_bins": obs_cfg.n_bins, "obs_range_max": obs_cfg.range_max,
+            "per_channel": per_channel}
     info.update(meta or {})
     return CalibrationArtifact(method=method, x_bits=x_bits, scales=scales,
                                meta=info)
@@ -161,6 +169,7 @@ def calibrate_lm(params: Any, cfg, batches: Sequence[dict], *,
                  obs_cfg: ObserverConfig = ObserverConfig(),
                  pct: float = 99.9,
                  fallback_amax: float = DEFAULT_ACT_AMAX,
+                 per_channel: bool = False,
                  checkpoint: Optional[str] = None,
                  checkpoint_step: Optional[int] = None,
                  train_cfg: Optional[Any] = None
@@ -184,7 +193,8 @@ def calibrate_lm(params: Any, cfg, batches: Sequence[dict], *,
     fwd = _lm_forward(lm_ref_config(cfg))
     return calibrate(fwd, params, batches, cfg.mf.cim.x_bits,
                      method=method, obs_cfg=obs_cfg, pct=pct,
-                     fallback_amax=fallback_amax, meta=meta)
+                     fallback_amax=fallback_amax, per_channel=per_channel,
+                     meta=meta)
 
 
 def evaluate_lm(params: Any, cfg, batches: Sequence[dict], *,

@@ -132,6 +132,31 @@ def adc_quantize(mav: jax.Array, adc_bits: int,
     return adc_codes(mav, adc_bits, comparator_offset) / (2 ** adc_bits - 1)
 
 
+# Fractional bits of the cap-DAC fixed-point grid. The tail-current trim
+# DACs that set each unit cap's effective weight have finite resolution;
+# modelling them on a 2^-14 grid (~6e-5 of a unit cap, far below the
+# sigma~0.02 mismatch being modelled) buys an exactness property the
+# float-valued model cannot have: every pre-ADC numerator is a sum of
+# {0,1}-gated cap products, i.e. an integer multiple of 2^-14 bounded far
+# below 2^24 quanta — EXACT in float32 under any summation order. The
+# fused Pallas kernel's per-chunk dot and XLA's einsum contraction then
+# produce bit-identical numerators, hence identical integer ADC codes
+# (the sigma>0 kernel-vs-reference parity gate of BENCH_silicon.json).
+CAP_FIXED_BITS = 14
+
+
+def cap_fixed(cap: jax.Array) -> jax.Array:
+    """Quantise cap-DAC weights to the 2^-CAP_FIXED_BITS fixed-point grid.
+
+    Applied identically by the reference einsum routes and the program-
+    time kernel fold (:func:`cim_program_silicon`). At sigma=0 every cap
+    is exactly 1.0 — a grid point — so the quantisation is the identity
+    and all nominal-collapse invariants are untouched.
+    """
+    s = jnp.float32(2.0 ** CAP_FIXED_BITS)
+    return jnp.round(cap.astype(jnp.float32) * s) / s
+
+
 def _weight_operands(w: jax.Array, cfg: CimConfig, sw: jax.Array):
     """Quantise the weight operand and decompose into sign gates + planes.
 
@@ -302,7 +327,8 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
                        sx: jax.Array,
                        cap_weights: Optional[jax.Array] = None,
                        comparator_offset: Optional[jax.Array] = None,
-                       silicon: Optional[ProjectionSilicon] = None
+                       silicon: Optional[ProjectionSilicon] = None,
+                       dac_gains: Optional[jax.Array] = None
                        ) -> CimPartials:
     """Step-time pass: stream x2:(B, Kt) through a programmed µArray.
 
@@ -321,17 +347,42 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
         mismatch draw across the projection (the legacy Fig. 8 model);
       * ``silicon`` — a :class:`ProjectionSilicon` giving every µArray
         TILE its own cap-DAC weights and comparator offset (the fleet-
-        faithful per-slot model of ``repro.silicon``).
+        faithful per-slot model of ``repro.silicon``). With
+        ``cfg.use_kernel`` the silicon state is folded into kernel
+        operands and the fused Pallas route runs instead of the
+        reference einsums (bit-identical codes by the fixed-point cap
+        argument of :func:`cap_fixed`).
+
+    ``dac_gains`` (K,) carries per-feature input-DAC gain trims <= 1 (the
+    per-channel ``sx`` calibration of ``core.programmed``): the |x| bit
+    stream is attenuated per column BEFORE the charge average, touching
+    only the S2/R_x conversions (the sign-gate S1 stream is unscaled).
     """
     if silicon is not None and (cap_weights is not None
                                 or comparator_offset is not None):
         raise ValueError(
             "pass either per-tile `silicon` or the legacy shared "
             "cap_weights/comparator_offset injection, not both")
+    if dac_gains is not None and (silicon is not None
+                                  or cap_weights is not None
+                                  or comparator_offset is not None):
+        raise ValueError(
+            "per-channel DAC gain trims (per-channel sx calibration) do "
+            "not compose with variability injection: the gain-cap "
+            "products leave the fixed-point grid that guarantees "
+            "cross-layout exactness. Program per-tensor scales for "
+            "silicon-injected serving.")
     K = x2.shape[-1]
-    step_x, _, x_planes = _input_operands(x2, cfg, sx)
-
     m = cfg.m_columns
+
+    if silicon is not None and cfg.use_kernel:
+        # Fused Pallas fast path: fold the per-slot silicon state into
+        # kernel operands and evaluate the SA-ADC instances in-kernel.
+        ks = cim_kernel_state_from_weight_state(ws, cfg)
+        silk = cim_program_silicon(ks, silicon, cfg, n_chunks=-(-K // m))
+        return cim_kernel_silicon_partials(x2, ks, silk, cfg, sx, silicon)
+
+    step_x, _, x_planes = _input_operands(x2, cfg, sx)
 
     def adc(mav: jax.Array) -> jax.Array:
         return adc_codes(mav, cfg.adc_bits, comparator_offset)
@@ -340,6 +391,10 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     px = 2.0 ** jnp.arange(cfg.x_planes)
     gx = _chunk(step_x, m, K)                                    # (B, C, m)
     xp = _chunk(x_planes, m, K)                                  # (Px, B, C, m)
+    if dac_gains is not None:
+        # Per-column attenuation of the streamed |x| bits (exact: gains
+        # live on the cap_fixed grid, bits are {0,1}).
+        xp = xp * _chunk(dac_gains.astype(jnp.float32)[None, :], m, K)[0]
 
     if silicon is not None:
         return _silicon_partials(gx, xp, ws, cfg, silicon, pw, px)
@@ -373,7 +428,8 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     if cap_weights is None:
         cap = jnp.ones((nchunks, m), jnp.float32)
     else:
-        cap = _chunk(cap_weights.astype(jnp.float32)[None, :], m, K)[0]
+        cap = cap_fixed(_chunk(cap_weights.astype(jnp.float32)[None, :],
+                               m, K)[0])
     cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
     wp = jnp.transpose(ws.wt.astype(jnp.float32),
                        (2, 3, 0, 1))                             # (N, Pw, C, m)
@@ -407,7 +463,7 @@ def _silicon_partials(gx: jax.Array, xp: jax.Array, ws: CimWeightState,
         raise ValueError(
             f"silicon cap shape {sil.cap.shape} does not match this "
             f"projection's ({n_out}, {nchunks}, {cfg.m_columns}) tiles")
-    cap = sil.cap.astype(jnp.float32)                            # (N, C, m)
+    cap = cap_fixed(sil.cap)                                     # (N, C, m)
     cap_sum = jnp.sum(cap, axis=-1)                              # (N, C)
     off = sil.offset.astype(jnp.float32)                         # (N, C)
     wp = jnp.transpose(ws.wt.astype(jnp.float32),
@@ -436,7 +492,7 @@ def _silicon_rx(xp: jax.Array, cfg: CimConfig, sil: ProjectionSilicon
                 ) -> jax.Array:
     """|x| dummy-row code sum digitised by the per-chunk rx instances."""
     px = 2.0 ** jnp.arange(cfg.x_planes)
-    rx_cap = sil.rx_cap.astype(jnp.float32)                      # (C, m)
+    rx_cap = cap_fixed(sil.rx_cap)                               # (C, m)
     rx_sum = jnp.sum(rx_cap, axis=-1)                            # (C,)
     num_rx = jnp.einsum("qbcm,cm->qbc", xp, rx_cap)
     off_rx = sil.rx_offset.astype(jnp.float32)
@@ -525,56 +581,201 @@ class CimKernelState(NamedTuple):
 
     The packed arrays come straight from :func:`repro.kernels.ops
     .pack_chunks` at program time, so the fused kernel never re-packs the
-    stationary weight operand per step.
+    stationary weight operand per step. ``rx_gates`` is the chunk-packed
+    all-ones dummy-row gate operand — static for a given (K, m_columns),
+    so it is hoisted here too and step time packs only the input planes.
     """
 
     gw_packed: jax.Array   # (N, Kp) chunk-packed step(w) gates (step_w.T)
     wp_packed: jax.Array   # (Pw, Kp, N) chunk-packed |w| magnitude planes
     r_w: jax.Array         # (1, N) exact digital sum_k |w_q|_kn
+    rx_gates: Optional[jax.Array] = None   # (1, Kp) packed dummy-row gates
 
 
 def cim_program_kernel_state(w: jax.Array, cfg: CimConfig,
                              sw: jax.Array) -> CimKernelState:
     """Program-time pass for the fused Pallas path (pre-packed layout)."""
     from repro.kernels import ops as kops
+    K = w.shape[0]
     step_w, abs_w, w_planes = _weight_operands(w, cfg, sw)
     gw_packed = kops.pack_chunks(step_w.T, cfg.m_columns)
     wp_packed = kops.pack_planes(w_planes, cfg.m_columns)
     r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
-    return CimKernelState(gw_packed, wp_packed, r_w)
+    rx_gates = kops.pack_chunks(jnp.ones((1, K), jnp.float32), cfg.m_columns)
+    return CimKernelState(gw_packed, wp_packed, r_w, rx_gates)
+
+
+def cim_kernel_state_from_weight_state(ws: CimWeightState,
+                                       cfg: CimConfig) -> CimKernelState:
+    """Re-layout programmed plane state into the kernel's packed layout.
+
+    Lets paths that hold :class:`CimWeightState` (tiled compiler segments,
+    swapped streams, on-the-fly matmuls) enter the fused silicon route
+    without reprogramming from ``w``. Pure {0,1} relayout — bit-identical
+    to packing the raw operands with :func:`cim_program_kernel_state`.
+    """
+    from repro.kernels import ops as kops
+    m = cfg.m_columns
+    wp = jnp.transpose(ws.wt.astype(jnp.float32), (3, 2, 0, 1))  # (Pw,N,C,m)
+    wp_packed = jnp.moveaxis(kops.pack_chunked(wp, m), 1, -1)    # (Pw,Kp,N)
+    gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
+    gw_packed = kops.pack_chunked(gw, m)                         # (N, Kp)
+    return CimKernelState(gw_packed, wp_packed, ws.r_w)
 
 
 def cim_kernel_forward(x2: jax.Array, ks: CimKernelState, cfg: CimConfig,
                        sw: jax.Array, sx: jax.Array,
-                       silicon: Optional[ProjectionSilicon] = None
-                       ) -> jax.Array:
+                       dac_gains: Optional[jax.Array] = None) -> jax.Array:
     """Step-time fused Pallas pass against programmed kernel state.
 
     Per-chunk MAV + ADC + plane recombination without materialising the
     MAV tensor; only the streaming input side is packed per call (the
-    x-plane packing is shared between the S2 and R_x passes).
+    weight gates/planes AND the all-ones dummy-row gates were packed at
+    program time). Recombines through :func:`cim_mf_recombine`, so the
+    output is bitwise identical to the einsum fast path. Silicon-injected
+    projections do not come through here — they take the fused
+    :func:`cim_kernel_silicon_partials` route via ``cim_input_partials``.
     """
-    if silicon is not None:
-        raise NotImplementedError(
-            "per-slot silicon injection is not available on the fused "
-            "Pallas path: cim_mav_packed digitises with the nominal ADC "
-            "transfer inside the kernel. Program the projection with "
-            "use_kernel=False (plane-level state) to model silicon "
-            "variation.")
+    from repro.kernels import ops as kops
+    K = x2.shape[-1]
+    m = cfg.m_columns
+    sx_q = sx if dac_gains is None else sx * dac_gains
+    step_x, _, x_planes = _input_operands(x2, cfg, sx_q)
+    if dac_gains is not None:
+        x_planes = x_planes * dac_gains.astype(jnp.float32)
+    gx = kops.pack_chunks(step_x, m)                             # (B, Kp)
+    xp = kops.pack_planes(jnp.moveaxis(x_planes, 1, -1), m)      # (Px, Kp, B)
+    rx_gates = ks.rx_gates
+    if rx_gates is None:
+        rx_gates = kops.pack_chunks(jnp.ones((1, K), jnp.float32), m)
+    s1c = kops.cim_mav_packed(gx, ks.wp_packed, m_columns=m,
+                              adc_bits=cfg.adc_bits)             # (B, N)
+    s2c = kops.cim_mav_packed(ks.gw_packed, xp, m_columns=m,
+                              adc_bits=cfg.adc_bits).T           # (B, N)
+    rxc = kops.cim_mav_packed(rx_gates, xp, m_columns=m,
+                              adc_bits=cfg.adc_bits).T           # (B, 1)
+    return cim_mf_recombine(CimPartials(s1c, s2c, rxc, ks.r_w), sw, sx, cfg)
+
+
+class CimKernelSilicon(NamedTuple):
+    """Program-time fold of per-slot silicon state into kernel operands.
+
+    Built once by :func:`cim_program_silicon`: the stationary {0,1} packs
+    are weighted by their tile's fixed-point cap-DAC caps (see
+    :func:`cap_fixed`), and the per-(chunk, channel) SA-ADC instances —
+    cap-sum denominator, comparator offset — are laid out as
+    (Kp/CHUNK_PAD, N) tiles the kernel indexes by grid position. Padded
+    chunks carry den=1/off=0 so their all-zero planes digitise to code 0.
+    Leading stacked axes (fleet instance stacking) are preserved.
+    """
+
+    wpc: jax.Array      # (..., Pw, Kp, N) cap-folded |w| magnitude planes
+    gwc: jax.Array      # (..., Kp, N) cap-folded step(w) gates
+    den: jax.Array      # (..., Ct, N) per-tile cap-sum denominator
+    off: jax.Array      # (..., Ct, N) per-tile comparator offset
+    rxp: jax.Array      # (..., Kp) packed dummy-row rx caps
+    rx_den: jax.Array   # (..., Ct) dummy-row cap-sum denominator
+    rx_off: jax.Array   # (..., Ct) dummy-row comparator offset
+
+
+def _pad_axis(v: jax.Array, axis: int, pad: int, fill: float) -> jax.Array:
+    if pad == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(v, widths, constant_values=fill)
+
+
+def cim_program_silicon(ks: CimKernelState, sil: ProjectionSilicon,
+                        cfg: CimConfig,
+                        n_chunks: Optional[int] = None) -> CimKernelSilicon:
+    """Fold a :class:`ProjectionSilicon` into fused-kernel operands.
+
+    The cap weighting moves entirely to the weight-stationary side
+    (plane_bit * cap and gate * cap products are exact: caps live on the
+    2^-CAP_FIXED_BITS grid, bits are {0,1}), so the streamed operand stays
+    a plain {0,1} pack and the in-kernel dot reproduces the reference
+    einsum numerators bit for bit.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.cim_mav import CHUNK_PAD
+    m = cfg.m_columns
+    n_out, c = sil.cap.shape[-3], sil.cap.shape[-2]
+    if sil.cap.shape[-1] != m or n_out != ks.wp_packed.shape[-1]:
+        raise ValueError(
+            f"silicon cap shape {sil.cap.shape} does not match the "
+            f"programmed kernel state (N={ks.wp_packed.shape[-1]}, "
+            f"m={m}) tiles")
+    if n_chunks is not None and c != n_chunks:
+        raise ValueError(
+            f"silicon cap shape {sil.cap.shape} holds {c} chunks, "
+            f"projection needs {n_chunks}")
+    kp = ks.wp_packed.shape[-2]
+    c_tiles = kp // CHUNK_PAD
+    if _round_up_chunks(c) != c_tiles:
+        raise ValueError(
+            f"silicon chunk count {c} does not pack to the kernel state's "
+            f"K_pad={kp} ({c_tiles} chunk tiles)")
+    cpad = c_tiles - c
+    capq = cap_fixed(sil.cap)                                    # (...,N,C,m)
+    capk = jnp.swapaxes(kops.pack_chunked(capq, m), -1, -2)      # (...,Kp,N)
+    wpc = ks.wp_packed.astype(jnp.float32) * capk[..., None, :, :]
+    gwc = jnp.swapaxes(ks.gw_packed.astype(jnp.float32), -1, -2) * capk
+    den = _pad_axis(jnp.swapaxes(jnp.sum(capq, -1), -1, -2), -2, cpad, 1.0)
+    off = _pad_axis(jnp.swapaxes(sil.offset.astype(jnp.float32), -1, -2),
+                    -2, cpad, 0.0)
+    rxq = cap_fixed(sil.rx_cap)                                  # (..., C, m)
+    rxp = kops.pack_chunked(rxq, m)                              # (..., Kp)
+    rx_den = _pad_axis(jnp.sum(rxq, -1), -1, cpad, 1.0)
+    rx_off = _pad_axis(sil.rx_offset.astype(jnp.float32), -1, cpad, 0.0)
+    return CimKernelSilicon(wpc, gwc, den, off, rxp, rx_den, rx_off)
+
+
+def _round_up_chunks(c: int) -> int:
+    from repro.kernels.cim_mav import CHUNKS_PER_TILE
+    return -(-c // CHUNKS_PER_TILE) * CHUNKS_PER_TILE
+
+
+def cim_kernel_silicon_partials(x2: jax.Array, ks: CimKernelState,
+                                silk: CimKernelSilicon, cfg: CimConfig,
+                                sx: jax.Array, sil: ProjectionSilicon
+                                ) -> CimPartials:
+    """Fused silicon step-time pass: the SA-ADC instances run IN-KERNEL.
+
+    Thermal dither is drawn OUTSIDE the kernel with the exact tensor
+    shapes/salts of the reference route (``_silicon_partials`` /
+    ``_silicon_rx``) and rides in as a kernel operand, so the fused codes
+    match the einsum codes bit for bit at thermal_fs>0 too — same
+    ``noise_key``/:func:`conversion_step`/salt fold, same samples, same
+    ``mav + (off + dither)`` associativity.
+    """
     from repro.kernels import ops as kops
     K = x2.shape[-1]
     m = cfg.m_columns
     step_x, _, x_planes = _input_operands(x2, cfg, sx)
-    gx = kops.pack_chunks(step_x, m)                             # (B, Kp)
-    xp = kops.pack_planes(jnp.moveaxis(x_planes, 1, -1), m)      # (Px, Kp, B)
-    ones = kops.pack_chunks(jnp.ones((1, K), jnp.float32), m)
-    s1 = kops.cim_mav_packed(gx, ks.wp_packed, m_columns=m,
-                             adc_bits=cfg.adc_bits)              # (B, N)
-    s2 = kops.cim_mav_packed(ks.gw_packed, xp, m_columns=m,
-                             adc_bits=cfg.adc_bits).T            # (B, N)
-    r_x = kops.cim_mav_packed(ones, xp, m_columns=m,
-                              adc_bits=cfg.adc_bits).T           # (B, 1)
-    return sw * (2.0 * s1 - ks.r_w) + sx * (2.0 * s2 - r_x)
+    B = x2.shape[0]
+    N = ks.r_w.shape[-1]
+    C = -(-K // m)
+    gx = kops.pack_chunks(step_x, m)[None]                       # (1, B, Kp)
+    xp = kops.pack_chunks(x_planes, m)                           # (Px, B, Kp)
+    d1k = d2k = drk = None
+    if sil.thermal_fs is not None:
+        c_tiles = silk.den.shape[-2]
+        cpad = c_tiles - C
+        d1 = sil.dither((B, N, cfg.w_planes, C), 1)
+        d2 = sil.dither((cfg.x_planes, B, N, C), 2)
+        dr = sil.dither((cfg.x_planes, B, C), 3)
+        d1k = _pad_axis(jnp.transpose(d1, (2, 3, 0, 1)), 1, cpad, 0.0)
+        d2k = _pad_axis(jnp.transpose(d2, (0, 3, 1, 2)), 1, cpad, 0.0)
+        drk = _pad_axis(jnp.transpose(dr, (0, 2, 1)), 1, cpad, 0.0)[..., None]
+    s1c = kops.cim_mav_silicon(gx, silk.wpc, silk.den, silk.off, d1k,
+                               adc_bits=cfg.adc_bits)            # (B, N)
+    s2c = kops.cim_mav_silicon(xp, silk.gwc[None], silk.den, silk.off, d2k,
+                               adc_bits=cfg.adc_bits)            # (B, N)
+    rxc = kops.cim_mav_silicon(xp, silk.rxp[None, :, None],
+                               silk.rx_den[:, None], silk.rx_off[:, None],
+                               drk, adc_bits=cfg.adc_bits)       # (B, 1)
+    return CimPartials(s1c, s2c, rxc, ks.r_w)
 
 
 def cim_mf_matmul(x: jax.Array, w: jax.Array, cfg: CimConfig,

@@ -263,7 +263,9 @@ def apply_projection(params: dict, x: jax.Array, mode: ExecMode | str,
                 # execution re-programs tiles per input stream.
                 y = cim_mf_matmul_swapped(x, w, prog, cim_cfg, silicon=sil)
             else:
-                y = cim_mf_matmul_programmed(x, prog, cim_cfg, silicon=sil)
+                y = cim_mf_matmul_programmed(x, prog, cim_cfg, silicon=sil,
+                                             silicon_kernel=params.get(
+                                                 "silk"))
         else:
             y = cim.cim_mf_matmul_ste(x, w, cim_cfg)
         if _calib_tap.error_active():

@@ -46,11 +46,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.cim import (CimConfig, CimKernelState, CimPartials,
-                            CimWeightState, ProjectionSilicon,
-                            _input_operands, _weight_operands,
+from repro.core.cim import (CimConfig, CimKernelSilicon, CimKernelState,
+                            CimPartials, CimWeightState, ProjectionSilicon,
+                            _input_operands, _weight_operands, cap_fixed,
                             cim_input_partials, cim_kernel_forward,
-                            cim_mf_recombine, cim_program_kernel_state,
+                            cim_kernel_silicon_partials, cim_mf_recombine,
+                            cim_program_kernel_state, cim_program_silicon,
                             cim_program_weight_state, cim_rx_partials)
 
 # Full-scale assumption for the default static activation calibration:
@@ -142,7 +143,16 @@ class CimLosslessState(NamedTuple):
 
 
 class ProgrammedMacro(NamedTuple):
-    """Frozen weight state of one macro-mapped (K, N) projection."""
+    """Frozen weight state of one macro-mapped (K, N) projection.
+
+    ``dac_gains`` (present iff the macro was programmed with a per-feature
+    activation scale VECTOR) holds the attenuation-only input-DAC column
+    gains g_k = clip(sx_k / max(sx), 2^-8, 1) on the :func:`cap_fixed`
+    grid; ``sx`` is then the shared scalar max(sx). Inputs quantise
+    against sx * g_k and the |x|-side bit streams are attenuated by g_k
+    before the charge average — the hardware realisation of per-channel
+    calibration on a DAC that has one reference per macro.
+    """
 
     sw: jax.Array                          # calibrated weight scale
     sx: jax.Array                          # STATIC activation scale
@@ -150,10 +160,33 @@ class ProgrammedMacro(NamedTuple):
     state: Optional[CimPackedPlanes]       # einsum-path bit-packed state
     kernel: Optional[CimKernelState]       # Pallas-path pre-packed state
     lossless: Optional[CimLosslessState]   # collapsed exact-ADC state
+    dac_gains: Optional[jax.Array] = None  # (K,) per-feature DAC gains
 
     @property
     def n_out(self) -> int:
         return self.r_w.shape[-1]
+
+
+# Attenuation floor of the per-feature input-DAC gain trim: a feature
+# whose calibrated scale is >256x below the macro max saturates at
+# 2^-8 of full scale rather than driving the shared reference down.
+DAC_GAIN_FLOOR = 2.0 ** -8
+
+
+def _split_channel_sx(sx: jax.Array):
+    """Split a per-feature (K,) static scale into (scalar max, DAC gains).
+
+    The macro's input DAC has ONE full-scale reference; per-feature scales
+    are realised as attenuation-only column gain trims on the
+    :func:`cap_fixed` fixed-point grid (so gain-weighted bit streams keep
+    the float32-exact summation property that makes tiled/swapped
+    execution bitwise reproducible). Scalar scales pass through unchanged.
+    """
+    if sx.ndim == 0:
+        return sx, None
+    sbar = jnp.max(sx)
+    gains = cap_fixed(jnp.clip(sx / sbar, DAC_GAIN_FLOOR, 1.0))
+    return sbar, gains
 
 
 def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
@@ -161,11 +194,14 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
     """Program one (K, N) projection's weights into macro state.
 
     ``sx`` is the static activation scale the macro will quantise inputs
-    against for its whole service life; ``sw`` defaults to the max-abs
-    calibration the on-the-fly path uses. The expensive weight-side work
-    (quantise, sign/magnitude split, bitplanes, chunk/kernel packing)
-    happens exactly once, here. Plane-level and lossless states store one
-    byte per cell (magnitude bits + sign gate, :class:`CimPackedPlanes` /
+    against for its whole service life — a scalar, or a per-feature (K,)
+    vector (per-channel calibration), which splits into a scalar
+    full-scale reference plus fixed-point DAC gain trims (see
+    :func:`_split_channel_sx`). ``sw`` defaults to the max-abs calibration
+    the on-the-fly path uses. The expensive weight-side work (quantise,
+    sign/magnitude split, bitplanes, chunk/kernel packing) happens exactly
+    once, here. Plane-level and lossless states store one byte per cell
+    (magnitude bits + sign gate, :class:`CimPackedPlanes` /
     :class:`CimLosslessState`); the kernel layout stays int8 — Mosaic
     wants the cells pre-expanded.
 
@@ -173,16 +209,24 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
     :class:`CimLosslessState` is programmed instead of the plane-level
     state (``prefer_lossless=False`` forces planes — needed for per-step
     variability injection and the compiler's tiled partial accumulation).
+    DAC gain trims also force plane/kernel state: a gain-weighted MAV
+    count is no longer integer, so the lossless collapse (code == count)
+    does not hold.
     """
     if sw is None:
         sw = quant.calibrate_scale(w, cfg.w_bits)
     sw = jnp.asarray(sw, jnp.float32)
     sx = jnp.asarray(sx, jnp.float32)
+    sx, dac_gains = _split_channel_sx(sx)
+    if dac_gains is not None and dac_gains.shape[-1] != w.shape[0]:
+        raise ValueError(
+            f"per-feature sx vector has {dac_gains.shape[-1]} entries, "
+            f"projection contracts over K={w.shape[0]}")
     if cfg.use_kernel:
         ks = cim_program_kernel_state(w, cfg, sw)
-        return ProgrammedMacro(sw, sx, ks.r_w, None, ks, None)
+        return ProgrammedMacro(sw, sx, ks.r_w, None, ks, None, dac_gains)
     _check_packable(cfg)
-    if prefer_lossless and adc_exactly_lossless(cfg):
+    if prefer_lossless and adc_exactly_lossless(cfg) and dac_gains is None:
         step_w, abs_w, _ = _weight_operands(w, cfg, sw)
         r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
         packed = (abs_w.astype(jnp.int32)
@@ -191,7 +235,7 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
         return ProgrammedMacro(sw, sx, r_w, None, None, ls)
     ws = cim_program_weight_state(w, cfg, sw)
     return ProgrammedMacro(sw, sx, ws.r_w, pack_weight_state(ws, cfg),
-                           None, None)
+                           None, None, dac_gains)
 
 
 def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
@@ -215,48 +259,75 @@ def cim_mf_matmul_programmed(x: jax.Array, prog: ProgrammedMacro,
                              cfg: CimConfig,
                              cap_weights: Optional[jax.Array] = None,
                              comparator_offset: Optional[jax.Array] = None,
-                             silicon: Optional[ProjectionSilicon] = None
-                             ) -> jax.Array:
+                             silicon: Optional[ProjectionSilicon] = None,
+                             silicon_kernel: Optional[CimKernelSilicon]
+                             = None) -> jax.Array:
     """Step-time MF correlation x:(...,K) against a programmed macro.
 
     Bit-identical to ``cim_mf_matmul(x, w, cfg)`` whenever ``prog`` was
     programmed with the same ``cfg`` and the dynamic activation scale of
     ``x`` (the parity tested by tests/test_programmed.py).
 
-    Variability injection — the legacy shared draw (``cap_weights`` /
-    ``comparator_offset``) or per-tile ``silicon`` instances — runs on the
-    bit-packed plane-level state (:class:`CimPackedPlanes`): the packed
-    bytes expand to the exact {0,1} cells, so injection composes with bit
-    packing. The collapsed lossless state and the Pallas kernel layout
-    have no per-chunk ADC evaluations to perturb and raise instead.
+    Variability injection: the legacy shared draw (``cap_weights`` /
+    ``comparator_offset``) runs on the bit-packed plane-level state
+    (:class:`CimPackedPlanes`) — the packed bytes expand to the exact
+    {0,1} cells, so injection composes with bit packing. Per-tile
+    ``silicon`` instances run on plane-level state OR on the Pallas
+    kernel layout — there the SA-ADC instances evaluate inside the fused
+    kernel (:func:`~repro.core.cim.cim_kernel_silicon_partials`), with
+    ``silicon_kernel`` optionally supplying the program-time cap fold
+    (:func:`~repro.core.cim.cim_program_silicon`) so the hot loop skips
+    the per-step fold. The collapsed lossless state has no per-chunk ADC
+    evaluations to perturb and raises for every injection flavour.
     """
     K = x.shape[-1]
     batch_shape = x.shape[:-1]
     x2 = x.reshape(-1, K)
     inject = (cap_weights is not None or comparator_offset is not None
               or silicon is not None)
+    sx_q = prog.sx if prog.dac_gains is None else prog.sx * prog.dac_gains
     if prog.state is not None:
         ws = unpack_weight_state(prog.state, cfg)
-        parts = cim_input_partials(x2, ws, cfg, prog.sx,
-                                   cap_weights, comparator_offset, silicon)
+        parts = cim_input_partials(x2, ws, cfg, sx_q,
+                                   cap_weights, comparator_offset, silicon,
+                                   dac_gains=prog.dac_gains)
         y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
+    elif prog.kernel is not None:
+        if cap_weights is not None or comparator_offset is not None:
+            raise ValueError(
+                "the legacy shared cap_weights/comparator_offset injection "
+                "is not available on the Pallas kernel layout — only "
+                "per-tile `silicon` instances fold into the fused kernel. "
+                "Re-program with use_kernel=False and "
+                "prefer_lossless=False for the legacy knobs.")
+        if silicon is not None:
+            if prog.dac_gains is not None:
+                raise ValueError(
+                    "per-feature DAC gain trims (per-channel sx "
+                    "calibration) do not compose with silicon injection; "
+                    "program per-tensor scales for silicon fleets")
+            silk = silicon_kernel
+            if silk is None:
+                silk = cim_program_silicon(prog.kernel, silicon, cfg,
+                                           n_chunks=-(-K // cfg.m_columns))
+            parts = cim_kernel_silicon_partials(x2, prog.kernel, silk, cfg,
+                                                prog.sx, silicon)
+            y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
+        else:
+            y = cim_kernel_forward(x2, prog.kernel, cfg, prog.sw, prog.sx,
+                                   prog.dac_gains)
     elif inject:
-        held = ("the collapsed exactly-lossless state"
-                if prog.lossless is not None
-                else "the Pallas kernel layout")
         raise ValueError(
-            f"variability injection needs the (bit-packed) plane-level "
-            f"programmed state, but this macro holds {held}: its step "
-            f"collapses the per-chunk ADC evaluations that mismatch and "
-            f"comparator offset perturb. Re-program the projection with "
-            f"use_kernel=False and prefer_lossless=False "
-            f"(program_weights(..., prefer_lossless=False)).")
-    elif prog.lossless is not None:
+            "variability injection needs per-chunk ADC evaluations, but "
+            "this macro holds the collapsed exactly-lossless state — its "
+            "step collapses the conversions that mismatch and comparator "
+            "offset perturb. Re-program the projection with "
+            "prefer_lossless=False (program_weights(..., "
+            "prefer_lossless=False)).")
+    else:
         parts = _lossless_partials(x2, prog.lossless, cfg, prog.sx,
                                    prog.r_w)
         y = cim_mf_recombine(parts, prog.sw, prog.sx, cfg)
-    else:
-        y = cim_kernel_forward(x2, prog.kernel, cfg, prog.sw, prog.sx)
     return y.reshape(batch_shape + (prog.n_out,)).astype(x.dtype)
 
 
@@ -400,7 +471,14 @@ def swap_macro(w: jax.Array, cfg: CimConfig, tile_slots: int, *,
         sw = jax.vmap(lambda wi: quant.calibrate_scale(wi, cfg.w_bits))(w2)
         sw = sw.reshape(w.shape[:-2])
     sw = jnp.asarray(sw, jnp.float32)
-    sx = jnp.broadcast_to(jnp.asarray(sx, jnp.float32), w.shape[:-2])
+    sx = jnp.asarray(sx, jnp.float32)
+    if sx.ndim > w.ndim - 2:
+        raise NotImplementedError(
+            "per-feature (per-channel) static activation scales are not "
+            "supported on swap-scheduled projections: the DAC gain trims "
+            "belong to resident macro state, and a swapped projection "
+            "re-programs its tiles every stream. Use a scalar sx here.")
+    sx = jnp.broadcast_to(sx, w.shape[:-2])
     return SwappedMacro(sw, sx, sched)
 
 
@@ -569,10 +647,13 @@ def program_weights(params: Any, cfg: CimConfig, *,
 
     ``scales`` maps projection names (the :func:`map_projections` dotted
     paths; expert banks use ``<name>.up/gate/down``) to static activation
-    scales — a scalar, or an array over the stacked leading axes (scan
-    periods, experts) for per-instance calibration. Unnamed projections
-    fall back to the full-scale ``act_amax`` assumption. Calibration
-    artifacts from ``repro.calib`` produce exactly this mapping.
+    scales — a scalar, an array over the stacked leading axes (scan
+    periods, experts) for per-instance calibration, or a per-feature
+    (..., K) vector (conv projections: per-Cin, expanded over the im2col
+    patch) for per-CHANNEL calibration, realised as input-DAC gain trims
+    (:func:`_split_channel_sx`). Unnamed projections fall back to the
+    full-scale ``act_amax`` assumption. Calibration artifacts from
+    ``repro.calib`` produce exactly this mapping.
 
     ``swap`` maps projection names to a fleet's resident ``tile_slots``:
     those projections are NOT pinned — they get a :class:`SwappedMacro`
@@ -598,8 +679,14 @@ def program_weights(params: Any, cfg: CimConfig, *,
                 f"kernel layout cannot hold this µArray geometry")
 
     def sx_for(name: str, w: jax.Array) -> jax.Array:
-        sx = scales.get(name, default_sx)
-        return jnp.broadcast_to(jnp.asarray(sx, jnp.float32), w.shape[:-2])
+        sx = jnp.asarray(scales.get(name, default_sx), jnp.float32)
+        lead = w.shape[:-2]
+        if sx.shape == lead:
+            return sx
+        if sx.ndim >= 1 and sx.shape[-1] == w.shape[-2]:
+            # Per-feature (K,) scale vector -> per-channel calibration.
+            return jnp.broadcast_to(sx, lead + (w.shape[-2],))
+        return jnp.broadcast_to(sx, lead)
 
     def prog(name, node, kind):
         out = dict(node)
@@ -618,11 +705,16 @@ def program_weights(params: Any, cfg: CimConfig, *,
                 out[f"prog_{key}"] = _program_nd(
                     w, cfg, sx_for(f"{name}.{key}", w), prefer_lossless)
         elif kind == "conv":
+            kh, kw, cin, _ = node["w"].shape
             w2 = conv_weight_matrix(node["w"])
-            out["prog"] = program_macro(
-                w2, cfg, sx=jnp.asarray(scales.get(name, default_sx),
-                                        jnp.float32),
-                prefer_lossless=prefer_lossless)
+            sxc = jnp.asarray(scales.get(name, default_sx), jnp.float32)
+            if sxc.ndim >= 1 and sxc.shape[-1] == cin:
+                # Per-Cin calibration: the im2col operand is Cin-major
+                # (conv_weight_matrix), so each channel's gain covers its
+                # kh*kw patch columns.
+                sxc = jnp.repeat(sxc, kh * kw, axis=-1)
+            out["prog"] = program_macro(w2, cfg, sx=sxc,
+                                        prefer_lossless=prefer_lossless)
         else:
             out["prog"] = _program_nd(node["w"], cfg,
                                       sx_for(name, node["w"]),
@@ -706,7 +798,8 @@ def programmed_bytes_unpacked(params: Any, cfg: CimConfig) -> int:
 
         def one(pm):
             nonlocal total
-            for leaf in jax.tree.leaves((pm.sw, pm.sx, pm.r_w)):
+            for leaf in jax.tree.leaves((pm.sw, pm.sx, pm.r_w,
+                                         pm.dac_gains)):
                 total += leaf.size * leaf.dtype.itemsize
             if pm.state is not None:
                 total += pm.state.packed.size * (cfg.w_planes + 1)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.cim_mav import CHUNK_PAD, CHUNKS_PER_TILE, cim_mav_pallas
+from repro.kernels.cim_mav import (CHUNK_PAD, CHUNKS_PER_TILE,
+                                   cim_mav_pallas, cim_mav_sil_pallas)
 from repro.kernels.mf_matmul import mf_matmul_pallas
 
 
@@ -78,10 +79,24 @@ def pack_chunks(v: jax.Array, m_columns: int) -> jax.Array:
     c = -(-k // m_columns)
     kp = c * m_columns
     v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, kp - k)])
-    v = v.reshape(v.shape[:-1] + (c, m_columns))
+    return pack_chunked(v.reshape(v.shape[:-1] + (c, m_columns)), m_columns)
+
+
+def pack_chunked(v: jax.Array, m_columns: int) -> jax.Array:
+    """Lane/tile-pad an ALREADY-chunked (..., C, m) layout -> (..., Kp).
+
+    The tail of :func:`pack_chunks` factored out so operands that are
+    natively chunk-shaped — per-tile cap-DAC weights (N, C, m), the
+    program-time (C, m, N) weight state — pack into the kernel's K layout
+    with bit-identical padding."""
+    if not 1 <= m_columns <= CHUNK_PAD or v.shape[-1] != m_columns:
+        raise ValueError(
+            f"chunked operand {v.shape} does not match m_columns="
+            f"{m_columns} (lane axis must hold exactly the µArray half, "
+            f"1 <= m <= CHUNK_PAD={CHUNK_PAD})")
     v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, CHUNK_PAD - m_columns)],
                 )  # pad lanes within chunk
-    cpad = _round_up(c, CHUNKS_PER_TILE) - c
+    cpad = _round_up(v.shape[-2], CHUNKS_PER_TILE) - v.shape[-2]
     v = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, cpad), (0, 0)])
     return v.reshape(v.shape[:-2] + (v.shape[-2] * CHUNK_PAD,))
 
@@ -124,3 +139,31 @@ def cim_mav(gates: jax.Array, planes: jax.Array, *, m_columns: int,
     p = pack_planes(planes, m_columns)
     return cim_mav_packed(g, p, m_columns=m_columns, adc_bits=adc_bits,
                           bb=bb, bn=bn)
+
+
+def cim_mav_silicon(gates: jax.Array, planes: jax.Array, den: jax.Array,
+                    off: jax.Array, dither: jax.Array = None, *,
+                    adc_bits: int, bb: int = 8, bn: int = 128) -> jax.Array:
+    """Fused silicon code sum over PRE-FOLDED operands -> (B, N).
+
+    gates: (Pg, B, Kp) streamed {0,1} packs; planes: (Pp, Kp, N) cap-
+    folded stationary operand with den/off: (Kp/CHUNK_PAD, N) per-(chunk,
+    channel) SA-ADC instances and optional dither (P, Kp/CHUNK_PAD, B, N)
+    — all built at program time by ``core.cim.cim_program_silicon``. Only
+    B/N padding happens per call (padded channels get den=1/off=0 so they
+    stay inert; padded batch rows are sliced away).
+    """
+    b = gates.shape[1]
+    n = planes.shape[-1]
+    bb = _pick_block(b, bb, 8)
+    bn = _pick_block(n, bn, 128)
+    bp, npad = _round_up(b, bb), _round_up(n, bn)
+    g = jnp.pad(gates, ((0, 0), (0, bp - b), (0, 0)))
+    p = jnp.pad(planes, ((0, 0), (0, 0), (0, npad - n)))
+    d = jnp.pad(den, ((0, 0), (0, npad - n)), constant_values=1.0)
+    o = jnp.pad(off, ((0, 0), (0, npad - n)))
+    dt = None if dither is None else jnp.pad(
+        dither, ((0, 0), (0, 0), (0, bp - b), (0, npad - n)))
+    y = cim_mav_sil_pallas(g, p, d, o, dt, adc_bits=adc_bits, bb=bb, bn=bn,
+                           interpret=_on_cpu())
+    return y[:b, :n]

@@ -20,7 +20,7 @@ def mf_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
 
 def cim_mav_ref(gates: jax.Array, planes: jax.Array, *, m_columns: int,
                 adc_bits: int, chunk_pad: int = 32) -> jax.Array:
-    """Oracle for kernels.cim_mav.
+    """Oracle for kernels.cim_mav (plane-weighted integer ADC code sums).
 
     gates: (B, K_pad) {0,1}; planes: (Pw, K_pad, N) {0,1} with the K axis
     laid out as C chunks of ``chunk_pad`` lanes (first ``m_columns`` real).
@@ -33,6 +33,32 @@ def cim_mav_ref(gates: jax.Array, planes: jax.Array, *, m_columns: int,
     counts = jnp.einsum("bcm,pcmn->bpcn", g, p)
     levels = 2 ** adc_bits - 1
     code = jnp.clip(jnp.round(counts / m_columns * levels), 0, levels)
-    mavq = code / levels * m_columns
     scales = 2.0 ** jnp.arange(n_planes)
-    return jnp.einsum("bpcn,p->bn", mavq, scales).astype(jnp.float32)
+    return jnp.einsum("bpcn,p->bn", code, scales).astype(jnp.float32)
+
+
+def cim_mav_sil_ref(gates: jax.Array, planes: jax.Array, den: jax.Array,
+                    off: jax.Array, dither: jax.Array = None, *,
+                    adc_bits: int, chunk_pad: int = 32) -> jax.Array:
+    """Oracle for kernels.cim_mav_sil_pallas.
+
+    gates: (Pg, B, Kp); planes: (Pp, Kp, N) cap-folded; den/off:
+    (Kp/chunk_pad, N); dither: optional (P, Kp/chunk_pad, B, N). Computes
+    the per-(chunk, plane) silicon SA-ADC codes with the same op order as
+    the kernel (MAV = num/den, v = MAV + (off + dither)).
+    """
+    gp, b, k_pad = gates.shape
+    pp, _, n = planes.shape
+    c = k_pad // chunk_pad
+    g = gates.reshape(gp, b, c, chunk_pad)
+    p = planes.reshape(pp, c, chunk_pad, n)
+    num = jnp.einsum("gbcm,pcmn->gpbcn", g, p)       # (Pg, Pp, B, C, N)
+    num = num.reshape((gp * pp, b, c, n))            # one of Pg/Pp is 1
+    mav = num / den[None, None]                      # (P, B, C, N)
+    offc = off[None, None]
+    if dither is not None:
+        offc = offc + jnp.transpose(dither, (0, 2, 1, 3))
+    levels = 2 ** adc_bits - 1
+    code = jnp.clip(jnp.round((mav + offc) * levels), 0, levels)
+    scales = 2.0 ** jnp.arange(code.shape[0])
+    return jnp.einsum("pbcn,p->bn", code, scales).astype(jnp.float32)

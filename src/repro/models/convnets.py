@@ -94,7 +94,8 @@ def conv_apply(p: dict, x: jax.Array, mode: ExecMode | str, *,
             from repro.core.programmed import cim_mf_matmul_programmed
             y = cim_mf_matmul_programmed(flat, prog,
                                          cim_cfg or CimConfig(),
-                                         silicon=p.get("sil"))
+                                         silicon=p.get("sil"),
+                                         silicon_kernel=p.get("silk"))
         else:
             y = cim_mod.cim_mf_matmul_ste(flat, w2, cim_cfg or CimConfig())
         if _calib_tap.error_active():

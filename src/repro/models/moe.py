@@ -111,6 +111,8 @@ def _expert_ffn(experts: dict, idx_or_slice, h: jax.Array,
             # Per-slot silicon instances (repro.silicon) slice by expert
             # exactly like the programmed state they perturb.
             d["sil"] = _sel(experts[f"sil_{role}"], idx_or_slice)
+        if f"silk_{role}" in experts:
+            d["silk"] = _sel(experts[f"silk_{role}"], idx_or_slice)
     z = (jax.nn.silu(blocks.proj_apply(gate, h, mode, **kw))
          * blocks.proj_apply(up, h, mode, **kw))
     return blocks.proj_apply(down, z, mode, **kw)

@@ -206,10 +206,6 @@ class ServeEngine:
                     "silicon variation is per fleet tile slot: it needs a "
                     "programmed CIM engine built with a fleet (the slots "
                     "the sampled ADC instances live in)")
-            if cfg.mf.cim.use_kernel:
-                raise ValueError(
-                    "per-slot silicon injection is not available on the "
-                    "fused Pallas kernel path (use use_kernel=False)")
         if drift is not None and calibration is None:
             raise ValueError(
                 "drift monitoring compares live probes against the "
@@ -307,7 +303,10 @@ class ServeEngine:
         """(Re-)program every macro from the base tree, then overlay the
         current silicon state. Plane-level (bit-packed) state is forced
         whenever silicon is attached — the lossless collapse has no ADC
-        evaluations to perturb."""
+        evaluations to perturb. With ``use_kernel`` configs the macros
+        keep their Pallas kernel layout instead: silicon folds into the
+        fused kernel operands (``attach_silicon``'s ``silk`` entries), so
+        sigma>0 fleets decode on the fused fast path."""
         from repro.core.programmed import program_weights
         self._programmed_params = program_weights(
             self._base_params, self.cfg.mf.cim, scales=scales,

@@ -47,9 +47,11 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.cim import CimConfig, ProjectionSilicon
-from repro.core.programmed import (_EXPERT_KEYS, conv_weight_matrix,
-                                   map_projections, strip_keys)
+from repro.core.cim import (CimConfig, ProjectionSilicon,
+                            cim_program_silicon)
+from repro.core.programmed import (_EXPERT_KEYS, ProgrammedMacro,
+                                   conv_weight_matrix, map_projections,
+                                   strip_keys)
 from repro.silicon.variability import calibrated_offset
 
 
@@ -263,6 +265,14 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
     mode. Stacked leading axes (scan periods, experts) get stacked views
     that slice exactly like the programmed state they perturb.
 
+    Projections already programmed into the Pallas kernel layout
+    additionally gain a ``"silk"`` entry (``silk_up/gate/down`` for
+    experts): the program-time cap fold
+    (:func:`~repro.core.cim.cim_program_silicon`) of their silicon view,
+    so the fused step-time kernel consumes pre-folded operands instead of
+    re-folding caps every decode step. Re-attachment after drift /
+    recalibration rebuilds the fold against the refreshed instances.
+
     ``pinned=True`` advances the slot base per projection in walk order —
     the same order the serve engine compiles (``iter_projections``), so
     every tile of a pinned model reads a distinct slot until the fleet
@@ -309,24 +319,42 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
         views = [view_nd(tuple(lead[1:]) + (k, n)) for _ in range(lead[0])]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *views)
 
+    def maybe_silk(prog, silv):
+        """Program-time cap fold for kernel-layout programmed macros."""
+        if not isinstance(prog, ProgrammedMacro) or prog.kernel is None:
+            return None
+        return cim_program_silicon(prog.kernel, silv, cim)
+
     def attach(name, node, kind):
         out = dict(node)
         if kind == "experts":
             for key in _EXPERT_KEYS:
                 out[f"sil_{key}"] = view_nd(tuple(node[key].shape))
+                silk = maybe_silk(node.get(f"prog_{key}"),
+                                  out[f"sil_{key}"])
+                if silk is not None:
+                    out[f"silk_{key}"] = silk
         elif kind == "conv":
             k2, n2 = conv_weight_matrix(node["w"]).shape
             out["sil"] = _gather(eff_cap, eff_off, k2, n2,
                                  take_base(_tiles(k2, n2, m)), thermal_fs,
                                  take_key())
+            silk = maybe_silk(node.get("prog"), out["sil"])
+            if silk is not None:
+                out["silk"] = silk
         else:
             out["sil"] = view_nd(tuple(node["w"].shape))
+            silk = maybe_silk(node.get("prog"), out["sil"])
+            if silk is not None:
+                out["silk"] = silk
         return out
 
     return map_projections(params, attach)
 
 
 def strip_silicon(params: Any) -> Any:
-    """Inverse of :func:`attach_silicon` (drop every silicon entry)."""
+    """Inverse of :func:`attach_silicon` (drop every silicon entry,
+    including the kernel-layout ``silk`` cap folds)."""
     return strip_keys(params, lambda k: isinstance(k, str)
-                      and (k == "sil" or k.startswith("sil_")))
+                      and (k in ("sil", "silk") or k.startswith("sil_")
+                           or k.startswith("silk_")))

@@ -27,10 +27,11 @@ from repro.calib.artifact import CalibrationArtifact
 from repro.calib.corpus import (ErrorCollector, StatsCollector,
                                 attach_observer_ids, collect_stats,
                                 scales_from_stats, strip_observer_ids)
-from repro.calib.observers import (ObserverConfig, observer_init,
-                                   observer_merge, observer_update,
-                                   scale_amax, scale_mse, scale_percentile,
-                                   select_scale, summarize)
+from repro.calib.observers import (ObserverConfig, channel_amax,
+                                   observer_init, observer_merge,
+                                   observer_update, scale_amax, scale_mse,
+                                   scale_percentile, select_scale,
+                                   shape_scale_channels, summarize)
 from repro.core import quant
 from repro.core.cim import CimConfig
 from repro.core.programmed import (default_static_sx, iter_projections,
@@ -352,6 +353,152 @@ class TestScaleProgramming:
         assert "prog" in pp
         y_prog = np.asarray(C.conv_apply(pp, x, "cim_sim", cim_cfg=cim))
         np.testing.assert_array_equal(y_ref, y_prog)
+
+
+class TestPerChannelCalibration:
+    """Per-feature amax profiles -> (lead..., K) scale vectors -> DAC
+    gain trims (the per-channel `sx` satellite of ISSUE 7)."""
+
+    def test_channel_amax_matches_numpy(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 10))
+        got = np.asarray(channel_amax(x))
+        want = np.abs(np.asarray(x)).reshape(-1, 10).max(axis=0)
+        np.testing.assert_array_equal(got, want.astype(np.float32))
+        assert np.asarray(channel_amax(jnp.zeros((0, 5)))).shape == (5,)
+
+    def test_collector_merges_channel_profiles(self):
+        col = StatsCollector(1, OBS)
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (8, 6)) * (i + 1)
+              for i in range(3)]
+        for x in xs:
+            col.emit_activation(jnp.int32(0), x)
+        jax.effects_barrier()
+        want = np.max([np.abs(np.asarray(x)).max(axis=0) for x in xs],
+                      axis=0)
+        np.testing.assert_allclose(col.channel_state(0), want, rtol=1e-6)
+        assert col.channel_state(0).max() == pytest.approx(col.amax[0])
+
+    def test_shape_scale_channels(self):
+        camax = np.asarray([4.0, 2.0, 0.001, 0.0], np.float64)
+        v = shape_scale_channels(0.05, camax, floor=2.0 ** -8)
+        assert v.dtype == np.float32
+        assert v[0] == pytest.approx(0.05)           # loudest keeps scale
+        assert v[1] == pytest.approx(0.025)          # proportional trim
+        floor = np.float32(0.05 * 2.0 ** -8)
+        assert v[2] == floor and v[3] == floor       # floored, not zeroed
+        # silence degenerates to the uniform scalar scale
+        np.testing.assert_array_equal(
+            shape_scale_channels(0.05, np.zeros((3,))),
+            np.full((3,), 0.05, np.float32))
+
+    def test_scales_from_stats_per_channel_shapes(self):
+        cfg = _mk_cfg()
+        tokens = jnp.ones((2, 8), jnp.int32)
+        params, registry, collector = _observe_lm(cfg, tokens)
+        scalar = scales_from_stats(collector, registry, 8, "amax")
+        pc = scales_from_stats(collector, registry, 8, "amax",
+                               per_channel=True)
+        ks = {name: node["w"].shape[-2]
+              for name, node, kind in iter_projections(params)
+              if kind == "linear"}
+        for name, (_, shape) in registry.entries.items():
+            assert pc[name].shape == shape + (ks[name],), name
+            # max gain is exactly 1 -> the loudest channel keeps the
+            # scalar policy scale per instance
+            np.testing.assert_allclose(pc[name].max(axis=-1),
+                                       scalar[name], rtol=1e-6)
+
+    def test_unfired_projection_stays_scalar(self):
+        from repro.calib.corpus import ObserverRegistry
+        registry = ObserverRegistry({"p": (0, ())}, 1)
+        empty = StatsCollector(1, OBS)
+        pc = scales_from_stats(empty, registry, 8, "amax",
+                               per_channel=True)
+        assert pc["p"].shape == ()      # nothing to profile -> per-tensor
+
+    def test_per_channel_programs_and_serves(self):
+        from repro.models import transformer as T
+        from repro.configs.base import MFTechniqueConfig
+        cfg = dataclasses.replace(
+            _mk_cfg(), mf=MFTechniqueConfig(mode="cim_sim",
+                                            cim=CimConfig(8, 8, 5, 31)))
+        params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        tagged, registry = attach_observer_ids(params)
+        collector = collect_stats(
+            lambda p, b: T.lm_forward(
+                p, b, dataclasses.replace(
+                    cfg, mf=dataclasses.replace(cfg.mf, mode="mf")))[0],
+            tagged, [{"tokens": jnp.ones((2, 8), jnp.int32)}], registry,
+            OBS)
+        pc = scales_from_stats(collector, registry, 8, "mse",
+                               per_channel=True)
+        progd = program_weights(tagged, cfg.mf.cim, scales=pc)
+        node = progd
+        first = sorted(registry.entries)[0]
+        for seg in first.split("."):
+            node = node[int(seg)] if seg.isdigit() else node[seg]
+        assert node["prog"].dac_gains is not None
+        assert node["prog"].sx.shape == registry.entries[first][1]
+        cache = T.lm_init_cache(cfg, 2, 8)
+        logits, _ = jax.jit(
+            lambda p, c, t: T.lm_decode_step(p, c, t, cfg))(
+                progd, cache, jnp.array([1, 2]))
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_per_channel_sqnr_sign_flips_with_adc_provisioning(self):
+        # The documented finding (BENCH_calib per_channel_sqnr_delta_db):
+        # DAC gain trims refine the input grid but attenuate each
+        # channel's charge contribution, so they HURT at an exactly
+        # lossless pairing (gain-weighted averages break the code==count
+        # identity — every S2/R_x conversion picks up real ADC rounding)
+        # and HELP when the ADC is the bottleneck anyway (31x4). Assert
+        # both directions on a half-quiet projection.
+        from repro.core.mf import mf_correlate_ref
+        from repro.core.programmed import (cim_mf_matmul_programmed,
+                                           program_macro)
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 70))
+        x = x * jnp.where(jnp.arange(70) < 35, 1.0, 0.01)[None, :]
+        w = jax.random.normal(jax.random.PRNGKey(1), (70, 9))
+        ref = np.asarray(mf_correlate_ref(x, w, hw=True))
+        st = summarize(x, OBS)
+        camax = np.asarray(channel_amax(x))
+
+        def sqnr(cim, sx):
+            y = np.asarray(cim_mf_matmul_programmed(
+                x, program_macro(w, cim, sx=jnp.asarray(sx)), cim))
+            return 10 * np.log10((ref ** 2).sum() / ((y - ref) ** 2).sum())
+
+        def delta(cim):
+            s = scale_amax(st, cim.x_bits)
+            return (sqnr(cim, shape_scale_channels(s, camax))
+                    - sqnr(cim, np.float32(s)))
+
+        assert delta(CimConfig(8, 8, 5, 31)) < -10.0   # lossless: hurts
+        assert delta(CimConfig(8, 8, 4, 31)) > 0.5     # starved ADC: helps
+
+    def test_swap_rejects_per_channel(self):
+        from repro.core.programmed import swap_macro
+        cim = CimConfig(8, 8, 5, 31)
+        w = jax.random.normal(jax.random.PRNGKey(0), (62, 4))
+        with pytest.raises(NotImplementedError, match="swap-scheduled"):
+            swap_macro(w, cim, tile_slots=3,
+                       sx=jnp.full((62,), 0.03, jnp.float32))
+
+    def test_injection_rejects_dac_gains(self):
+        from repro.core.programmed import (cim_mf_matmul_programmed,
+                                           program_macro)
+        from repro.silicon import (SiliconConfig, projection_silicon,
+                                   sample_fleet)
+        cim = CimConfig(8, 8, 5, 31)
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 70))
+        w = jax.random.normal(jax.random.PRNGKey(1), (70, 9))
+        prog = program_macro(w, cim, sx=jnp.full((70,), 0.03, jnp.float32))
+        assert prog.dac_gains is not None
+        scfg = SiliconConfig(cap_sigma=0.08, comparator_sigma_v=0.01)
+        fleet = sample_fleet(jax.random.PRNGKey(2), 24, 31, scfg)
+        sil = projection_silicon(fleet, scfg, 70, 9)
+        with pytest.raises(ValueError, match="per-channel"):
+            cim_mf_matmul_programmed(x, prog, cim, silicon=sil)
 
 
 class TestErrorCollector:

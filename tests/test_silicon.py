@@ -6,7 +6,9 @@ The contracts under test (ISSUE 5):
   * a σ=0 silicon fleet is BITWISE identical to the nominal programmed
     datapath — monolithic, tiled, pinned-engine and swapped-engine decode;
   * σ>0 perturbs (the whole point) and injection composes with bit-packed
-    plane state while the collapsed/kernel states raise precisely;
+    plane state AND the fused Pallas kernel layout (in-kernel SA-ADC,
+    bit-equal to the reference einsums) while the collapsed lossless
+    state and the legacy knobs-on-kernel combination raise precisely;
   * the serving drift loop: alarm fires on an aging fleet, comparator
     re-trim + scale re-programming recovers, ServeReport charges it.
 """
@@ -187,14 +189,28 @@ class TestInjection:
             cim_mf_matmul_programmed(x, prog, cfg,
                                      cap_weights=jnp.ones((70,)))
 
-    def test_kernel_state_raises_precisely(self):
+    def test_kernel_state_runs_silicon_fused(self):
+        # Silicon on the kernel layout is the fused fast path now: the
+        # SA-ADC instances evaluate inside the Pallas kernel, bit-equal
+        # to the plane-state reference einsums.
+        cfg_k = CimConfig(8, 8, 5, 31, use_kernel=True)
+        cfg_p = CimConfig(8, 8, 5, 31)
+        x, w = _xw()
+        sil = _proj_sil(NOISY, 70, 9)
+        prog_k = program_macro(w, cfg_k, sx=0.05)
+        assert prog_k.kernel is not None
+        prog_p = program_macro(w, cfg_p, sx=0.05, prefer_lossless=False)
+        y_k = cim_mf_matmul_programmed(x, prog_k, cfg_k, silicon=sil)
+        y_p = cim_mf_matmul_programmed(x, prog_p, cfg_p, silicon=sil)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_p))
+
+    def test_kernel_state_rejects_legacy_knobs(self):
         cfg = CimConfig(8, 8, 5, 31, use_kernel=True)
         x, w = _xw()
         prog = program_macro(w, cfg, sx=0.05)
-        assert prog.kernel is not None
         with pytest.raises(ValueError, match="Pallas kernel"):
             cim_mf_matmul_programmed(x, prog, cfg,
-                                     silicon=_proj_sil(NOISY, 70, 9))
+                                     cap_weights=jnp.ones((70,)))
 
     def test_silicon_exclusive_with_legacy_knobs(self):
         cfg = CimConfig(8, 8, 5, 31)

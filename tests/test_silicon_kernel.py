@@ -1,0 +1,193 @@
+"""Fused Pallas silicon kernel: the step-time fast path for σ>0 fleets.
+
+The contracts under test (ISSUE 7):
+
+  * the in-kernel SA-ADC (``cim_mav_sil_pallas`` via ``ops
+    .cim_mav_silicon``) matches its pure-jnp oracle bit for bit — the
+    fixed-point cap fold (``core.cim.cap_fixed``) makes every pre-ADC
+    numerator exact in float32 under any contraction order;
+  * σ>0 parity matrix: the fused kernel route produces EXACTLY the
+    integer ADC code sums of the reference einsum route on the pinned,
+    tiled (compiler) and swapped (round-interleaved) layouts, at both
+    paper design points, with and without thermal dither;
+  * σ=0 silicon through the fused kernel is bitwise the nominal kernel
+    fast path (which is itself bitwise the plane-state einsum route);
+  * per-conversion thermal dither through the fused kernel is keyed by
+    the conversion clock: same step ⇒ identical outputs, different
+    steps decorrelate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.cim import (CimConfig, cap_fixed, conversion_clock)
+from repro.core.programmed import (cim_mf_matmul_programmed,
+                                   cim_mf_matmul_swapped, program_macro,
+                                   swap_macro)
+from repro.kernels import ops
+from repro.kernels.cim_mav import CHUNK_PAD, CHUNKS_PER_TILE
+from repro.kernels.ref import cim_mav_sil_ref
+from repro.silicon import SiliconConfig, projection_silicon, sample_fleet
+
+SIGMA0 = SiliconConfig(cap_sigma=0.0, comparator_sigma_v=0.0)
+NOISY = SiliconConfig(cap_sigma=0.08, comparator_sigma_v=0.012)
+THERMAL = dataclasses.replace(NOISY, thermal_sigma_v=0.004)
+
+DESIGNS = ((31, 5), (15, 4))
+
+
+def _xw(b=3, k=70, n=9, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, k))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    return x, w
+
+
+def _proj_sil(scfg, k, n, m=31, slots=24, seed=5, base=0):
+    fleet = sample_fleet(jax.random.PRNGKey(seed), slots, m, scfg)
+    return projection_silicon(fleet, scfg, k, n, base=base)
+
+
+def _cfgs(m, a):
+    return (CimConfig(8, 8, a, m, use_kernel=True), CimConfig(8, 8, a, m))
+
+
+class TestSilMavOracle:
+    """cim_mav_silicon vs the pure-jnp oracle on pre-folded operands."""
+
+    def _operands(self, pg, pp, b, c, n, seed=0):
+        kp = c * CHUNK_PAD
+        keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+        gates = jax.random.bernoulli(keys[0], 0.5,
+                                     (pg, b, kp)).astype(jnp.float32)
+        bits = jax.random.bernoulli(keys[1], 0.5,
+                                    (pp, kp, n)).astype(jnp.float32)
+        # Cap-folded stationary operand: bits weighted by fixed-point
+        # caps, exactly like cim_program_silicon builds it.
+        caps = cap_fixed(1.0 + 0.08 * jax.random.normal(keys[2], (kp, n)))
+        planes = bits * caps[None]
+        den = jnp.sum(
+            caps.reshape(c, CHUNK_PAD, n), axis=1)              # (C, N)
+        off = 0.01 * jax.random.normal(keys[3], (c, n))
+        dither = 0.005 * jax.random.normal(keys[4],
+                                           (pg * pp, c, b, n))
+        return gates, planes, den, off, dither
+
+    @pytest.mark.parametrize("pg,pp", [(1, 7), (7, 1), (1, 1)])
+    @pytest.mark.parametrize("adc", [5, 4])
+    def test_static_bitwise(self, pg, pp, adc):
+        gates, planes, den, off, _ = self._operands(
+            pg, pp, b=3, c=2 * CHUNKS_PER_TILE, n=9, seed=pg * 10 + adc)
+        y = ops.cim_mav_silicon(gates, planes, den, off, adc_bits=adc)
+        yr = cim_mav_sil_ref(gates, planes, den, off, adc_bits=adc)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+    def test_dither_bitwise(self):
+        gates, planes, den, off, dither = self._operands(
+            1, 7, b=3, c=CHUNKS_PER_TILE, n=5, seed=3)
+        y = ops.cim_mav_silicon(gates, planes, den, off, dither,
+                                adc_bits=5)
+        yr = cim_mav_sil_ref(gates, planes, den, off, dither, adc_bits=5)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+        y0 = ops.cim_mav_silicon(gates, planes, den, off, adc_bits=5)
+        assert not np.array_equal(np.asarray(y), np.asarray(y0))
+
+    def test_block_size_invariance(self):
+        gates, planes, den, off, _ = self._operands(
+            1, 7, b=12, c=CHUNKS_PER_TILE, n=17, seed=9)
+        y1 = ops.cim_mav_silicon(gates, planes, den, off, adc_bits=5,
+                                 bb=8, bn=128)
+        y2 = ops.cim_mav_silicon(gates, planes, den, off, adc_bits=5,
+                                 bb=16, bn=256)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+class TestFusedParityMatrix:
+    """σ>0 fused-vs-einsum exactness on every serving layout."""
+
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("scfg", [NOISY, THERMAL],
+                             ids=["static", "thermal"])
+    def test_pinned(self, m, a, scfg):
+        cfg_k, cfg_p = _cfgs(m, a)
+        x, w = _xw()
+        sil = _proj_sil(scfg, 70, 9, m=m)
+        sx = quant.calibrate_scale(x, 8)
+        prog_k = program_macro(w, cfg_k, sx=sx)
+        prog_p = program_macro(w, cfg_p, sx=sx, prefer_lossless=False)
+        y_k = cim_mf_matmul_programmed(x, prog_k, cfg_k, silicon=sil)
+        y_p = cim_mf_matmul_programmed(x, prog_p, cfg_p, silicon=sil)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_p))
+        # σ>0 actually perturbs (the fused path runs real silicon).
+        y_nom = cim_mf_matmul_programmed(x, prog_k, cfg_k)
+        assert not np.array_equal(np.asarray(y_k), np.asarray(y_nom))
+
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("scfg", [NOISY, THERMAL],
+                             ids=["static", "thermal"])
+    def test_tiled(self, m, a, scfg):
+        from repro.compiler.execute import (compiled_matmul_programmed,
+                                            program_layer_tiles)
+        from repro.compiler.tiling import plan_tiling
+        cfg_k, cfg_p = _cfgs(m, a)
+        x, w = _xw(k=3 * m + 7, n=21, seed=2)
+        plan = plan_tiling(w.shape[0], w.shape[1], cfg_p, tile_k_chunks=2,
+                           tile_n=8)
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_layer_tiles(w, plan, cfg_p, sx=sx)
+        sil = _proj_sil(scfg, w.shape[0], w.shape[1], m=m, slots=96)
+        y_k = compiled_matmul_programmed(x, prog, plan, cfg_k, silicon=sil)
+        y_p = compiled_matmul_programmed(x, prog, plan, cfg_p, silicon=sil)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_p))
+
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    @pytest.mark.parametrize("scfg", [NOISY, THERMAL],
+                             ids=["static", "thermal"])
+    def test_swapped(self, m, a, scfg):
+        cfg_k, cfg_p = _cfgs(m, a)
+        x, w = _xw(k=3 * m, n=7, seed=4)
+        sx = quant.calibrate_scale(x, 8)
+        swap = swap_macro(w, cfg_p, tile_slots=5, sx=sx)
+        assert swap.sched.n_rounds > 1
+        sil = _proj_sil(scfg, w.shape[0], w.shape[1], m=m, slots=5)
+        y_k = cim_mf_matmul_swapped(x, w, swap, cfg_k, silicon=sil)
+        y_p = cim_mf_matmul_swapped(x, w, swap, cfg_p, silicon=sil)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_p))
+
+
+class TestSigma0Collapse:
+    @pytest.mark.parametrize("m,a", DESIGNS)
+    def test_fused_sigma0_is_bitwise_nominal(self, m, a):
+        cfg_k, cfg_p = _cfgs(m, a)
+        x, w = _xw()
+        sil0 = _proj_sil(SIGMA0, 70, 9, m=m)
+        sx = quant.calibrate_scale(x, 8)
+        prog_k = program_macro(w, cfg_k, sx=sx)
+        y_sil = cim_mf_matmul_programmed(x, prog_k, cfg_k, silicon=sil0)
+        y_nom = cim_mf_matmul_programmed(x, prog_k, cfg_k)
+        np.testing.assert_array_equal(np.asarray(y_sil), np.asarray(y_nom))
+        # ... which is itself bitwise the plane-state einsum route.
+        prog_p = program_macro(w, cfg_p, sx=sx, prefer_lossless=False)
+        y_ref = cim_mf_matmul_programmed(x, prog_p, cfg_p)
+        np.testing.assert_array_equal(np.asarray(y_nom), np.asarray(y_ref))
+
+
+class TestThermalClock:
+    def test_dither_keyed_by_conversion_step(self):
+        cfg_k, _ = _cfgs(31, 5)
+        x, w = _xw()
+        sil = _proj_sil(THERMAL, 70, 9)
+        sx = quant.calibrate_scale(x, 8)
+        prog = program_macro(w, cfg_k, sx=sx)
+
+        def run(step):
+            with conversion_clock(step):
+                return np.asarray(
+                    cim_mf_matmul_programmed(x, prog, cfg_k, silicon=sil))
+
+        np.testing.assert_array_equal(run(3), run(3))   # replayable
+        assert not np.array_equal(run(3), run(4))       # decorrelates
