@@ -11,7 +11,9 @@ For each evaluation model (the qwen3 smoke LM with every projection on
      (8x62 -> 5-bit, 8x30 -> 4-bit, exactly lossless) AND two non-lossless
      points where real ADC quantisation error is in play: A_P=6 at M=31
      (moderate rounding noise, gated) and A_P=4 at M=31 (noise-dominated,
-     reported as a diagnostic only — see ``UNGATED_DESIGNS``),
+     reported as a diagnostic only — see ``UNGATED_DESIGNS``), plus the
+     macro zoo's collaborative re-budgeted geometries (``MACRO_DESIGNS``,
+     ungated — the ADC-starved regime per-channel calibration targets),
   3. measures each against the fp32 MF reference on held-out batches:
      end-to-end logits error (relative L2), top-1 agreement, and
      per-projection SQNR through the error tap,
@@ -68,6 +70,27 @@ DESIGNS = ((31, 5), (15, 4), (31, 6))
 # scale policy reliably beats another inside pure ADC noise, which is
 # itself a finding worth keeping on the record.
 UNGATED_DESIGNS = ((31, 4),)
+# Macro-zoo design points (also ungated): the collaborative-digitization
+# re-budget trades shared ADC area for µArray columns at fixed macro
+# area (repro.macros.fleet_for_macro), opening WIDER halves than any
+# 2^A_P - 1 pairing — 38x5 is the ADC-starved regime (31 levels
+# digitising 38-column averages) where the per-channel input-DAC trims
+# are expected to earn their keep, 38x6 the moderately-rounded one.
+# Computed through the same feasible_columns the compiler uses, so these
+# cells track the zoo's geometry by construction.
+
+
+def _macro_design_points() -> tuple[tuple[int, int], ...]:
+    from repro.macros import (CollaborativeDigitization, feasible_columns,
+                              reference_budget_units)
+    budget = reference_budget_units(CimConfig())
+    return tuple(
+        (feasible_columns(CollaborativeDigitization(group_size=g), a,
+                          budget_units=budget), a)
+        for g, a in ((4, 5), (4, 6)))
+
+
+MACRO_DESIGNS = _macro_design_points()
 METHODS = ("static", "amax", "percentile", "mse")
 # Per-channel variants: the scalar policy's scale shaped over each
 # projection's per-feature amax profile (input-DAC gain trims; see
@@ -170,6 +193,7 @@ def run(quick: bool = True):
         "per_channel_methods": [f"{m}_pc" for m in PC_METHODS],
         "designs": [f"{m}x{a}" for m, a in DESIGNS],
         "ungated_designs": [f"{m}x{a}" for m, a in UNGATED_DESIGNS],
+        "macro_designs": [f"{m}x{a}" for m, a in MACRO_DESIGNS],
         "configs": {},
     }
     obs_cfg = ObserverConfig()
@@ -183,7 +207,7 @@ def run(quick: bool = True):
         rows.append((f"calib_collect_{setup.name}", collect_us,
                      f"projections={registry.n_ids}"))
         per_design = {}
-        for m, a in DESIGNS + UNGATED_DESIGNS:
+        for m, a in DESIGNS + UNGATED_DESIGNS + MACRO_DESIGNS:
             gated = (m, a) in DESIGNS
             cim = CimConfig(w_bits=8, x_bits=8, adc_bits=a, m_columns=m)
             cim_fwd = setup.cim_forward_builder(cim)
@@ -239,6 +263,7 @@ def run(quick: bool = True):
                 "cells": cells,
                 "adc_exactly_lossless": adc_exactly_lossless(cim),
                 "gated": gated,
+                "macro_zoo": (m, a) in MACRO_DESIGNS,
                 "calibrated_beats_static": improved,
                 "per_channel_sqnr_delta_db": pc_delta,
                 "static_scales_parity": parity,

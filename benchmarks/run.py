@@ -23,6 +23,7 @@ SUITES = (
     "traffic_report",
     "calib_report",
     "silicon_report",
+    "macro_report",
     "roofline_report",
 )
 

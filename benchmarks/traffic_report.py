@@ -20,7 +20,10 @@ to ``cim_sim`` and served from a pinned fleet:
     the single-device engine. Gate: >= 1.5x, asserted ONLY when the host
     actually has >= 2 cores (XLA's forced host devices share one thread
     pool per core; on a 1-core machine the gate is recorded as vacuous
-    with ``host_parallel_capable: false``).
+    with ``host_parallel_capable: false``). CI exports
+    ``BENCH_TRAFFIC_REQUIRE_MULTIDEV=1``, which turns the vacuous
+    fallback into a hard failure — on the 4-vCPU runners the >= 1.5x
+    gate must actually be measured and asserted.
 
 Emits ``BENCH_traffic.json`` and the ``benchmarks/run.py`` CSV rows.
 
@@ -231,6 +234,15 @@ def _multidevice_scaling(quick: bool) -> dict:
     cpu_count = len(os.sched_getaffinity(0)) if hasattr(
         os, "sched_getaffinity") else (os.cpu_count() or 1)
     capable = cpu_count >= 2
+    # CI runs on multi-vCPU hosts and exports this to FORBID the vacuous
+    # fallback: a single-core runner there means the gate silently
+    # stopped measuring anything, which should fail loudly instead.
+    if os.environ.get("BENCH_TRAFFIC_REQUIRE_MULTIDEV") == "1" \
+            and not capable:
+        raise RuntimeError(
+            f"BENCH_TRAFFIC_REQUIRE_MULTIDEV=1 but this host exposes only "
+            f"{cpu_count} core(s) — the >=1.5x multi-device gate would be "
+            f"vacuous")
     ticks = 8 if quick else 24
     r = subprocess.run(
         [sys.executable, "-c", MULTIDEV_SCRIPT, str(ticks)],

@@ -15,6 +15,9 @@
 # gate, sigma=0 bitwise collapse, sigma>0 exact-code parity) and leaves
 # BENCH_silicon_kernel.json — a fast alternative to the full
 # TIER1_SILICON_BENCH report, which includes the same section.
+# TIER1_MACRO_BENCH=1 additionally runs the macro-zoo smoke (registry
+# parity, collaborative area re-budget + compiler tile shrink, MC yield
+# over macro models, tiered re-trim aging) and leaves BENCH_macros.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -35,4 +38,7 @@ if [[ "${TIER1_TRAFFIC_BENCH:-0}" == "1" ]]; then
 fi
 if [[ "${TIER1_KERNEL_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.silicon_report --smoke --only-kernel
+fi
+if [[ "${TIER1_MACRO_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.macro_report --smoke
 fi

@@ -79,10 +79,25 @@ class FleetCost:
         return ops / e / 1e12 if e else 0.0
 
 
+def _fleet_cycles(fleet: Fleet) -> int:
+    """Eq. 4a unit-op cycles for this fleet — through the macro model's
+    hook when one is attached (``Fleet.macro``), else the source
+    paper's SA-ADC formula."""
+    if fleet.macro is not None:
+        return fleet.macro.unit_op_cycles(fleet.cfg)
+    return unit_op_cycles(fleet.cfg)
+
+
+def _fleet_energy_j(fleet: Fleet, macro: MacroParams) -> float:
+    """Eq. 4b unit-op energy for this fleet (macro-model aware)."""
+    if fleet.macro is not None:
+        return fleet.macro.unit_op_energy_j(fleet.cfg, macro)
+    return unit_op_energy_j(fleet.cfg, macro)
+
+
 def layer_cost(sched: LayerSchedule, fleet: Fleet,
                macro: MacroParams = DEFAULT_MACRO) -> LayerCost:
-    cfg = fleet.cfg
-    cycles = sched.macro_unit_ops * unit_op_cycles(cfg)
+    cycles = sched.macro_unit_ops * _fleet_cycles(fleet)
     reload_s = sched.reload_bits / fleet.reload_bits_per_s
     busy = fleet.n_macros * sched.macro_unit_ops
     return LayerCost(
@@ -91,7 +106,7 @@ def layer_cost(sched: LayerSchedule, fleet: Fleet,
         mac_ops=sched.mac_ops,
         cycles=cycles,
         latency_s=cycles / macro.clock_hz + reload_s,
-        compute_energy_j=sched.unit_ops * unit_op_energy_j(cfg, macro),
+        compute_energy_j=sched.unit_ops * _fleet_energy_j(fleet, macro),
         reload_energy_j=sched.reload_bits * fleet.reload_j_per_bit,
         utilization=sched.unit_ops / busy if busy else 0.0,
         waste_fraction=sched.plan.waste_fraction,
@@ -103,7 +118,7 @@ def rollup(costs: Sequence[LayerCost], fleet: Fleet,
            macro: MacroParams = DEFAULT_MACRO,
            digital_ops: int = 0) -> FleetCost:
     unit_ops = sum(c.unit_ops for c in costs)
-    macro_unit_ops = sum(c.cycles for c in costs) // unit_op_cycles(fleet.cfg) \
+    macro_unit_ops = sum(c.cycles for c in costs) // _fleet_cycles(fleet) \
         if costs else 0
     busy = fleet.n_macros * macro_unit_ops
     return FleetCost(
@@ -113,7 +128,7 @@ def rollup(costs: Sequence[LayerCost], fleet: Fleet,
         latency_s=sum(c.latency_s for c in costs),
         # product of the TOTAL, not a sum of per-layer products: keeps the
         # "unit_ops x unit energy == roll-up" identity exact in floats.
-        compute_energy_j=unit_ops * unit_op_energy_j(fleet.cfg, macro),
+        compute_energy_j=unit_ops * _fleet_energy_j(fleet, macro),
         reload_energy_j=sum(c.reload_energy_j for c in costs),
         utilization=unit_ops / busy if busy else 0.0,
         digital_ops=digital_ops,

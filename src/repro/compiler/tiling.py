@@ -107,6 +107,11 @@ class Fleet:
     fleet simultaneously keeps weights pinned (no per-inference reloads);
     otherwise — or when capacity is exceeded — tiles are streamed in
     rounds and every tile write is priced and scheduled.
+    ``macro``: an optional macro model (``repro.macros``) whose Eq. 4
+    cycle/energy hooks price this fleet's unit operations — None keeps
+    the source paper's SA-ADC constants. ``fleet_for_macro`` builds the
+    matching re-budgeted geometry (flavour ADC area traded for columns
+    at fixed macro area) and sets this field in one step.
     """
 
     n_macros: int = 64
@@ -115,6 +120,7 @@ class Fleet:
     weight_stationary: bool = True
     reload_j_per_bit: float = 10e-15     # SRAM write energy (~10 fJ/bit @45nm)
     reload_bits_per_s: float = 64e9      # fleet weight-load bandwidth
+    macro: object = None                 # Optional[repro.macros.MacroModel]
 
     @property
     def tile_slots(self) -> int:

@@ -1,0 +1,40 @@
+"""Macro zoo: pluggable CIM macro models behind one registry.
+
+One frozen-dataclass flavour per macro paper
+(:class:`~repro.macros.base.MacroModel` protocol), registered by name:
+
+  * ``saadc`` — the source paper's per-slot memory-immersed SA-ADC,
+    delegating to the raw :mod:`repro.silicon.instance` physics (bitwise
+    the pre-registry silicon path);
+  * ``collaborative`` — memory-immersed collaborative digitization
+    (arXiv 2307.03863): shared cap-DAC instances spanning slot groups,
+    correlated mismatch, cross-macro coupling noise, amortised ADC area;
+  * ``p8t`` — the charge-domain P-8T cell (arXiv 2211.16008): explicit
+    metal-cap DAC (better matching, bigger cell), cheaper MAV energy.
+
+Everywhere the silicon lab takes a ``SiliconConfig`` it now also takes
+a flavour (or its registry name): ``ServeEngine(silicon=...)``,
+``attach_silicon``, ``projection_silicon``, ``fleet_silicon``, the
+Monte-Carlo sweeps. The compiler re-budgets each flavour's ADC area
+into µArray columns at fixed macro area (:func:`fleet_for_macro`) and
+prices unit ops through the flavour's Eq. 4 hooks.
+"""
+
+from repro.macros.base import (CELL_AREA_UNITS, COMPARATOR_AREA_UNITS,
+                               COUPLING_AREA_UNITS, CAL_DAC_AREA_UNITS,
+                               SAR_AREA_UNITS_PER_BIT, MacroModel,
+                               feasible_columns, fleet_for_macro,
+                               reference_budget_units)
+from repro.macros.collaborative import CollaborativeDigitization
+from repro.macros.p8t import P8T
+from repro.macros.registry import (MacroLike, as_macro, available,
+                                   get_macro, register)
+from repro.macros.saadc import SAADC
+
+__all__ = [
+    "MacroModel", "MacroLike", "SAADC", "CollaborativeDigitization", "P8T",
+    "register", "available", "get_macro", "as_macro",
+    "feasible_columns", "fleet_for_macro", "reference_budget_units",
+    "CELL_AREA_UNITS", "COMPARATOR_AREA_UNITS", "COUPLING_AREA_UNITS",
+    "CAL_DAC_AREA_UNITS", "SAR_AREA_UNITS_PER_BIT",
+]

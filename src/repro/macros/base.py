@@ -1,0 +1,257 @@
+"""Macro-model protocol: one pluggable object per CIM macro paper.
+
+The silicon lab (PR 5/7) hard-coded the source paper's per-slot SA-ADC:
+``repro.silicon.instance`` both *sampled* the silicon lottery and *was*
+the only macro physics the compiler, serving engine and Monte-Carlo
+sweeps knew about. Follow-up papers from the same group change exactly
+the pieces that were hard-coded — how ADC instances are shared across
+slots (memory-immersed collaborative digitization, arXiv 2307.03863),
+what the conversion costs in area/energy/cycles (charge-domain P-8T,
+arXiv 2211.16008) — so this module turns the macro model into a
+first-class extension point.
+
+:class:`MacroModel` is a frozen dataclass protocol with three groups of
+hooks:
+
+  * **silicon hooks** — ``sample`` / ``effective_caps`` /
+    ``effective_offsets`` / ``recalibrate`` / ``retrim`` / ``age`` /
+    ``conversion_pair`` / ``quantise``: everything the serving datapath
+    and yield sweeps need to realise and evolve one silicon instance of
+    a fleet. The defaults delegate to the *raw* per-slot SA-ADC
+    functions in :mod:`repro.silicon.instance` — the exact code the
+    pre-registry silicon path ran — so the built-in
+    :class:`~repro.macros.saadc.SAADC` plug-in is bitwise identical at
+    σ=0 and exact-code identical at σ>0 by construction.
+  * **area descriptors** — ``adc_area_units`` / ``cell_area_units`` in
+    a stylised cell-equivalent unit system (below). The compiler
+    re-budgets ADC area saved by a macro flavour into extra µArray
+    columns at fixed macro area (:func:`feasible_columns` /
+    :func:`fleet_for_macro`): fewer ADC units per slot ⇒ strictly wider
+    feasible tiles ⇒ fewer tiles per projection in the Eq. 4 roll-up.
+  * **energy/latency descriptors** — ``unit_op_cycles`` /
+    ``unit_op_energy_j`` hooks defaulting to the calibrated Eq. 4a/4b
+    model of :mod:`repro.core.energy`; flavours override to price their
+    own conversion scheme.
+
+Area unit system (stylised, relative — absolute µm² are not published
+at matching granularity across the three papers): one 6T bit cell of
+the µArray is 1.0 unit; the SA-ADC's comparator (the half's sense amp
+plus latch), its SAR logic per resolved bit, and the 2-bit tail-current
+calibration DAC are priced as small digital/analog blocks relative to
+that cell. The *memory-immersed* trick is already reflected here: there
+is no explicit cap-DAC term for the SA-ADC because the bit-line
+parasitics ARE the DAC — collaborative digitization then divides the
+remaining per-slot ADC cost across the slots of a sharing group, and
+the P-8T flavour instead grows the cell (8T + explicit metal cap) while
+keeping the same SAR back end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional
+
+import jax
+
+from repro.core.cim import CimConfig, ProjectionSilicon, adc_codes
+from repro.core.energy import (DEFAULT_MACRO, MacroParams, unit_op_cycles,
+                               unit_op_energy_j)
+from repro.silicon import instance as inst
+from repro.silicon.instance import FleetSilicon, SiliconConfig
+
+# --- stylised area unit system (cell-equivalent units) ---------------------
+CELL_AREA_UNITS = 1.0          # one 6T µArray bit cell
+COMPARATOR_AREA_UNITS = 24.0   # sense-amp comparator + latch per half
+SAR_AREA_UNITS_PER_BIT = 10.0  # SAR logic + timing per resolved bit
+CAL_DAC_AREA_UNITS = 16.0      # 2-bit tail-current offset-cal DAC
+COUPLING_AREA_UNITS = 8.0      # inter-macro bit-line bridge switches
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroModel:
+    """Base protocol + the source paper's SA-ADC physics as defaults.
+
+    Concrete flavours are frozen dataclasses registered with
+    :func:`repro.macros.registry.register`; their ``silicon`` field
+    carries the distribution/drift knobs (a plain
+    :class:`~repro.silicon.instance.SiliconConfig`), so every existing
+    Monte-Carlo sweep parameterises over macro models by
+    ``dataclasses.replace`` on that field (:meth:`with_mismatch`).
+    """
+
+    silicon: SiliconConfig = dataclasses.field(
+        default_factory=SiliconConfig)
+    # Fine re-trim range is ±3σ (the tail-current DAC of Fig. 8e); the
+    # coarse tier re-trims saturated slots on a DAC re-biased to this
+    # multiple of the fine range (same step count ⇒ coarser LSB).
+    coarse_retrim_mult: float = 3.0
+
+    name: ClassVar[str] = "base"
+
+    # -- silicon hooks ------------------------------------------------------
+
+    def sample(self, key: jax.Array, n_slots: int, m_columns: int
+               ) -> FleetSilicon:
+        """Sample one silicon realisation of ``n_slots`` tile slots."""
+        raise NotImplementedError
+
+    def effective_caps(self, state: FleetSilicon) -> jax.Array:
+        """(S, m) cap-DAC weights at the fleet's current age."""
+        return inst.effective_caps(state, self.silicon)
+
+    def effective_offsets(self, state: FleetSilicon) -> jax.Array:
+        """(S,) comparator offsets NOW, as full-scale fractions."""
+        return inst.effective_offsets(state, self.silicon)
+
+    def age(self, state: FleetSilicon, streams) -> FleetSilicon:
+        return inst.age(state, streams)
+
+    def recalibrate(self, state: FleetSilicon) -> FleetSilicon:
+        """Fine-tier-only comparator re-trim (the pre-aging behaviour)."""
+        return inst.recalibrate_comparators(state, self.silicon)
+
+    def retrim(self, state: FleetSilicon
+               ) -> tuple[FleetSilicon, jax.Array]:
+        """Tiered comparator re-trim: ``(new_state, tier)`` with tier 0
+        (fine DAC), 1 (coarse tier engaged) or 2 (beyond even the coarse
+        range — the slot is flagged retired) per slot. Identical to
+        :meth:`recalibrate` wherever the fine range suffices."""
+        return inst.retrim_comparators(state, self.silicon,
+                                       coarse_mult=self.coarse_retrim_mult)
+
+    def retired_mask(self, state: FleetSilicon) -> jax.Array:
+        """(S,) bool — slots whose drifted offset exceeds even the
+        coarse re-trim DAC range (screening verdict: retire)."""
+        return inst.retired_slots_mask(state, self.silicon,
+                                       coarse_mult=self.coarse_retrim_mult)
+
+    def conversion_pair(self, noise_key: Optional[jax.Array] = None
+                        ) -> tuple[Optional[jax.Array],
+                                   Optional[jax.Array]]:
+        """(noise_rms_fs, noise_key) of the per-conversion dither stream
+        (:meth:`~repro.core.cim.ProjectionSilicon.dither`, keyed off the
+        serving engine's ``conversion_clock``) — (None, None) when this
+        flavour adds no per-conversion noise."""
+        return inst._thermal_pair(self.silicon, noise_key)
+
+    def quantise(self, mav: jax.Array, adc_bits: int,
+                 comparator_offset: Optional[jax.Array] = None
+                 ) -> jax.Array:
+        """ADC transfer function: MAV (full-scale fraction) → integer
+        code. Built-in flavours keep the uniform mid-tread SA quantiser
+        (:func:`repro.core.cim.adc_codes`) — the jitted datapath relies
+        on that transfer function for its lossless-collapse and kernel
+        identities, so this hook is a *contract* (verified by the macro
+        test suite), not a per-call dispatch in the hot loop."""
+        return adc_codes(mav, adc_bits, comparator_offset)
+
+    # -- area descriptors ---------------------------------------------------
+
+    @property
+    def cell_area_units(self) -> float:
+        """Area of one weight-bit cell, in cell-equivalent units."""
+        return CELL_AREA_UNITS
+
+    def adc_area_units(self, adc_bits: int) -> float:
+        """Per-slot digitisation area (comparator + SAR + cal DAC) in
+        cell-equivalent units, amortised over any sharing group."""
+        raise NotImplementedError
+
+    def half_area_units(self, cim: CimConfig) -> float:
+        """Total per-slot (µArray half) area: cells + amortised ADC."""
+        return (cim.w_bits * cim.m_columns * self.cell_area_units
+                + self.adc_area_units(cim.adc_bits))
+
+    # -- energy / latency descriptors ---------------------------------------
+
+    def unit_op_cycles(self, cim: CimConfig) -> int:
+        """Eq. 4a unit-operation latency in macro clock cycles."""
+        return unit_op_cycles(cim)
+
+    def unit_op_energy_j(self, cim: CimConfig,
+                         macro: MacroParams = DEFAULT_MACRO) -> float:
+        """Eq. 4b unit-operation energy (J)."""
+        return unit_op_energy_j(cim, macro)
+
+    # -- config plumbing ----------------------------------------------------
+
+    @property
+    def is_nominal(self) -> bool:
+        """σ=0 everywhere ⇒ the bitwise-parity regime."""
+        return self.silicon.is_nominal
+
+    @property
+    def is_drifting(self) -> bool:
+        return (self.silicon.drift_sigma_v_per_kstream != 0.0
+                or self.silicon.drift_cap_sigma_per_kstream != 0.0)
+
+    @property
+    def seed(self) -> int:
+        return self.silicon.seed
+
+    def with_silicon(self, cfg: SiliconConfig) -> "MacroModel":
+        return dataclasses.replace(self, silicon=cfg)
+
+    def with_mismatch(self, cap_sigma: float) -> "MacroModel":
+        """The yield-sweep knob: same flavour, swept cap-DAC mismatch."""
+        return self.with_silicon(dataclasses.replace(
+            self.silicon, cap_sigma=float(cap_sigma)))
+
+    def nominal(self) -> "MacroModel":
+        """The σ=0 instance of this flavour (bitwise-parity regime)."""
+        return self.with_silicon(SiliconConfig(
+            cap_sigma=0.0, comparator_sigma_v=0.0,
+            seed=self.silicon.seed))
+
+    def describe(self, cim: CimConfig) -> dict:
+        """Bench-facing summary of this flavour at one design point."""
+        return {
+            "name": self.name,
+            "cell_area_units": self.cell_area_units,
+            "adc_area_units": self.adc_area_units(cim.adc_bits),
+            "half_area_units": self.half_area_units(cim),
+            "unit_op_cycles": self.unit_op_cycles(cim),
+            "unit_op_energy_j": self.unit_op_energy_j(cim),
+        }
+
+
+def reference_budget_units(cim: CimConfig) -> float:
+    """The fixed per-slot area envelope everything is re-budgeted
+    against: the source paper's SA-ADC half at geometry ``cim`` (cells
+    at 1.0 unit + the full un-shared per-slot ADC). 8×62 (M=31, A_P=5)
+    ⇒ 8·31·1.0 + (24 + 50 + 16) = 338 units."""
+    return (cim.w_bits * cim.m_columns * CELL_AREA_UNITS
+            + COMPARATOR_AREA_UNITS
+            + SAR_AREA_UNITS_PER_BIT * cim.adc_bits
+            + CAL_DAC_AREA_UNITS)
+
+
+def feasible_columns(model: MacroModel, adc_bits: int, *,
+                     budget_units: float, w_bits: int = 8) -> int:
+    """Widest µArray half (columns M) a flavour fits in a fixed area
+    envelope: whatever the (amortised) ADC does not consume is re-spent
+    on weight cells. This is the area-for-tiles trade-off of the
+    collaborative-digitization paper, in compiler currency."""
+    cells = budget_units - model.adc_area_units(adc_bits)
+    m = int(cells // (w_bits * model.cell_area_units))
+    if m < 1:
+        raise ValueError(
+            f"macro '{model.name}' does not fit the {budget_units:.0f}-"
+            f"unit envelope at A_P={adc_bits} (ADC alone is "
+            f"{model.adc_area_units(adc_bits):.1f} units)")
+    return m
+
+
+def fleet_for_macro(model: MacroModel, base, adc_bits: Optional[int] = None):
+    """Re-budget a reference fleet's macro area for ``model``: same
+    per-slot area envelope (the SA-ADC half of ``base.cfg``), the
+    flavour's ADC cost, every spare unit converted to columns. Returns a
+    new :class:`~repro.compiler.tiling.Fleet` carrying the model (so the
+    Eq. 4 roll-up prices unit ops through the flavour's hooks)."""
+    import dataclasses as _dc
+    a = base.cfg.adc_bits if adc_bits is None else int(adc_bits)
+    budget = reference_budget_units(base.cfg)
+    m = feasible_columns(model, a, budget_units=budget,
+                         w_bits=base.cfg.w_bits)
+    cfg = _dc.replace(base.cfg, m_columns=m, adc_bits=a)
+    return _dc.replace(base, cfg=cfg, macro=model)

@@ -1,0 +1,152 @@
+"""Memory-immersed collaborative digitization (arXiv 2307.03863).
+
+The follow-up to the source paper: neighbouring macros lend their
+bit-line parasitics as a *shared* cap-DAC, so one SA-ADC instance spans
+a group of tile slots instead of every slot carrying its own. Two
+consequences, both modelled:
+
+  * **correlated mismatch** — the group shares one physical cap-DAC and
+    comparator, so all member slots see the SAME sampled cap weights,
+    offset, correction and drift directions. :meth:`sample` draws one
+    instance per group and broadcasts it across members (perfectly
+    correlated within a group, independent across groups, same key ⇒
+    same shared caps).
+  * **cross-macro coupling** — bridging bit lines across macros couples
+    switching noise from the (group_size − 1) lending neighbours into
+    every conversion. Modelled as a per-conversion zero-mean dither of
+    RMS ``coupling_sigma_v · sqrt(group_size − 1)`` riding the existing
+    thermal-noise channel (:meth:`conversion_pair`): keyed off the
+    serving engine's ``conversion_clock``, fresh per ADC evaluation,
+    untouched by recalibration.
+
+The pay-off is area: the per-slot ADC cost divides by the group size
+(plus a small bridge-switch overhead), which the compiler re-spends on
+µArray columns (``fleet_for_macro``) — bigger feasible tiles at fixed
+macro area. The price is latency: the shared SAR serialises a short
+arbitration tail over the lending neighbours each unit op, and every
+conversion charges the bridge switching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim import CimConfig
+from repro.core.energy import (DEFAULT_MACRO, MacroParams, unit_op_cycles,
+                               unit_op_energy_j)
+from repro.macros.base import (CAL_DAC_AREA_UNITS, COMPARATOR_AREA_UNITS,
+                               COUPLING_AREA_UNITS, SAR_AREA_UNITS_PER_BIT,
+                               MacroModel)
+from repro.macros.registry import register
+from repro.silicon import instance as inst
+from repro.silicon.instance import FleetSilicon, SiliconConfig
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class CollaborativeDigitization(MacroModel):
+    """Shared cap-DAC SA-ADC spanning ``group_size`` tile slots."""
+
+    group_size: int = 4
+    coupling_sigma_v: float = 0.002   # per-neighbour switching noise RMS (V)
+
+    name: ClassVar[str] = "collaborative"
+
+    def __post_init__(self):
+        if self.group_size < 1:
+            raise ValueError(
+                f"group_size must be >= 1, got {self.group_size}")
+        if self.coupling_sigma_v < 0.0:
+            raise ValueError(
+                f"coupling_sigma_v must be >= 0, got "
+                f"{self.coupling_sigma_v}")
+
+    # -- silicon hooks ------------------------------------------------------
+
+    def sample(self, key: jax.Array, n_slots: int, m_columns: int
+               ) -> FleetSilicon:
+        """One sampled ADC instance per slot GROUP, broadcast across the
+        group's members — the correlated-mismatch structure of a shared
+        cap-DAC. Slot s belongs to group s // group_size."""
+        g = self.group_size
+        n_groups = -(-n_slots // g)
+        shared = inst.sample_fleet(key, n_groups, m_columns, self.silicon)
+
+        def spread(a: jax.Array) -> jax.Array:
+            return jnp.repeat(a, g, axis=0)[:n_slots]
+
+        return FleetSilicon(
+            cap=spread(shared.cap),
+            offset_v=spread(shared.offset_v),
+            correction_v=spread(shared.correction_v),
+            drift_dir_v=spread(shared.drift_dir_v),
+            drift_dir_cap=spread(shared.drift_dir_cap),
+            age_streams=shared.age_streams)
+
+    def conversion_pair(self, noise_key: Optional[jax.Array] = None
+                        ) -> tuple[Optional[jax.Array],
+                                   Optional[jax.Array]]:
+        """Thermal floor ⊕ cross-macro coupling, as one per-conversion
+        dither RMS (independent noise sources add in quadrature)."""
+        scfg = self.silicon
+        coupled = (self.coupling_sigma_v ** 2) * (self.group_size - 1)
+        sigma_v = math.sqrt(scfg.thermal_sigma_v ** 2 + coupled)
+        if sigma_v == 0.0:
+            return None, None
+        fs = jnp.float32(sigma_v / scfg.v_full_scale)
+        if noise_key is None:
+            noise_key = jax.random.PRNGKey(scfg.seed)
+        return fs, noise_key
+
+    # -- area ---------------------------------------------------------------
+
+    def adc_area_units(self, adc_bits: int) -> float:
+        """The shared ADC amortises over the group; the bit-line bridge
+        switches are per slot and do not."""
+        shared = (COMPARATOR_AREA_UNITS
+                  + SAR_AREA_UNITS_PER_BIT * adc_bits
+                  + CAL_DAC_AREA_UNITS)
+        return shared / self.group_size + COUPLING_AREA_UNITS
+
+    # -- energy / latency ---------------------------------------------------
+
+    def unit_op_cycles(self, cim: CimConfig) -> int:
+        """Eq. 4a plus an arbitration tail: the shared SAR hands the
+        group token across the (group_size − 1) lending neighbours, one
+        short settle per resolved bit (stylised serialisation cost)."""
+        return (unit_op_cycles(cim)
+                + (self.group_size - 1) * cim.adc_bits)
+
+    def unit_op_energy_j(self, cim: CimConfig,
+                         macro: MacroParams = DEFAULT_MACRO) -> float:
+        """Eq. 4b plus the bridge-switch charge: each of the A_P SA
+        iterations drives the coupled neighbour bit lines once (one
+        C_PL·V² quantum per lending neighbour per iteration)."""
+        bridge = ((self.group_size - 1) * cim.adc_bits
+                  * macro.c_pl_v2_j)
+        return unit_op_energy_j(cim, macro) + bridge
+
+    # -- config plumbing ----------------------------------------------------
+
+    @property
+    def is_nominal(self) -> bool:
+        return self.silicon.is_nominal and (
+            self.group_size == 1 or self.coupling_sigma_v == 0.0)
+
+    def nominal(self) -> "CollaborativeDigitization":
+        return dataclasses.replace(
+            self,
+            silicon=SiliconConfig(cap_sigma=0.0, comparator_sigma_v=0.0,
+                                  seed=self.silicon.seed),
+            coupling_sigma_v=0.0)
+
+    def describe(self, cim: CimConfig) -> dict:
+        return super().describe(cim) | {
+            "group_size": self.group_size,
+            "coupling_sigma_v": self.coupling_sigma_v,
+        }

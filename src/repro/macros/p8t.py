@@ -1,0 +1,77 @@
+"""Charge-domain P-8T macro flavour (arXiv 2211.16008).
+
+A second external plug-in proving the registry interface: the P-8T
+bitcell computes in the charge domain through an explicit per-cell metal
+capacitor instead of the 6T cell's parasitic bit line. Three cost-point
+differences from the SA-ADC macro, all expressed through existing
+protocol hooks:
+
+  * **cell area** — the 8T cell plus its metal cap is larger than the
+    6T cell (``cell_area_units`` > 1), so at fixed macro area the
+    feasible tile is NARROWER than the source paper's — the compiler's
+    re-budgeting surfaces the trade honestly in both directions;
+  * **DAC matching** — metal-oxide-metal caps match far better than
+    bit-line parasitics: the sampled cap-DAC mismatch is the configured
+    ``cap_sigma`` scaled by ``dac_matching`` (< 1), which is what buys
+    the flavour its yield at high mismatch corners;
+  * **MAV energy** — charge-domain accumulation avoids repeated
+    precharge of the full bit line; the Eq. 4b MAV term scales by
+    ``mav_energy_scale`` while the SAR digitisation term is unchanged
+    (same comparator + SAR back end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+
+from repro.core.cim import CimConfig
+from repro.core.energy import (DEFAULT_MACRO, MacroParams,
+                               unit_op_energy_j)
+from repro.macros.base import (CAL_DAC_AREA_UNITS, COMPARATOR_AREA_UNITS,
+                               SAR_AREA_UNITS_PER_BIT, MacroModel)
+from repro.macros.registry import register
+from repro.silicon import instance as inst
+from repro.silicon.instance import FleetSilicon
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class P8T(MacroModel):
+    """Charge-domain 8T + metal-cap macro."""
+
+    dac_matching: float = 0.5      # cap mismatch relative to parasitic DAC
+    mav_energy_scale: float = 0.6  # charge-domain MAV vs bit-line precharge
+    p8t_cell_area_units: float = 1.35  # 8T + metal cap vs the 6T cell
+
+    name: ClassVar[str] = "p8t"
+
+    def sample(self, key: jax.Array, n_slots: int, m_columns: int
+               ) -> FleetSilicon:
+        """Same per-slot sampling lottery, tighter cap distribution (the
+        metal-cap DAC's matching advantage)."""
+        scfg = dataclasses.replace(
+            self.silicon,
+            cap_sigma=self.silicon.cap_sigma * self.dac_matching)
+        return inst.sample_fleet(key, n_slots, m_columns, scfg)
+
+    def adc_area_units(self, adc_bits: int) -> float:
+        """Same SAR back end as the SA-ADC; the explicit cap-DAC is
+        per-cell metal (priced into ``cell_area_units``), not a
+        standalone block."""
+        return (COMPARATOR_AREA_UNITS
+                + SAR_AREA_UNITS_PER_BIT * adc_bits
+                + CAL_DAC_AREA_UNITS)
+
+    @property
+    def cell_area_units(self) -> float:
+        return self.p8t_cell_area_units
+
+    def unit_op_energy_j(self, cim: CimConfig,
+                         macro: MacroParams = DEFAULT_MACRO) -> float:
+        """Eq. 4b with the MAV term rescaled to the charge domain."""
+        mav = cim.w_bits * cim.m_columns * macro.c_pl_v2_j
+        return (unit_op_energy_j(cim, macro)
+                - mav * (1.0 - self.mav_energy_scale))

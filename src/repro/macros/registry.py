@@ -1,0 +1,83 @@
+"""Macro-model registry: name → flavour, plus coercion helpers.
+
+``@register`` on a :class:`~repro.macros.base.MacroModel` subclass makes
+it constructible by name everywhere a macro model is accepted —
+``ServeEngine(silicon="collaborative")``, yield sweeps, the compiler's
+re-budgeting, benches. The built-in flavours (``saadc``,
+``collaborative``, ``p8t``) self-register on first lookup, so importing
+:mod:`repro.macros` is enough; external papers add theirs with one
+module that defines a dataclass and calls :func:`register`.
+
+:func:`as_macro` is the dispatch seam the silicon lab uses to stay
+backward compatible: every function that historically took a
+``SiliconConfig`` now coerces its argument through it — a plain
+``SiliconConfig`` becomes the SA-ADC flavour wrapping it (the exact
+pre-registry physics), a string resolves through the registry, and a
+``MacroModel`` passes through untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Type, Union
+
+from repro.macros.base import MacroModel
+from repro.silicon.instance import SiliconConfig
+
+_REGISTRY: dict[str, Type[MacroModel]] = {}
+
+
+def register(cls: Type[MacroModel]) -> Type[MacroModel]:
+    """Class decorator: add a macro flavour to the registry under its
+    ``name`` ClassVar. Re-registering a name overwrites (last wins) so
+    notebooks can iterate on a flavour without restarting."""
+    if not isinstance(getattr(cls, "name", None), str) or not cls.name:
+        raise ValueError(
+            f"{cls.__name__} needs a non-empty `name` ClassVar to be "
+            f"registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def _ensure_builtin() -> None:
+    """Import the built-in flavours (their decorators register them)."""
+    from repro.macros import collaborative, p8t, saadc  # noqa: F401
+
+
+def available() -> tuple[str, ...]:
+    """Registered macro-model names, sorted."""
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_macro(name: str, **kwargs) -> MacroModel:
+    """Construct a registered flavour by name (kwargs → its dataclass
+    fields). Unknown names fail with the full menu."""
+    _ensure_builtin()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown macro model '{name}' — registered models: "
+            f"{', '.join(sorted(_REGISTRY))}")
+    return _REGISTRY[name](**kwargs)
+
+
+MacroLike = Union[MacroModel, SiliconConfig, str]
+
+
+def as_macro(spec: MacroLike) -> MacroModel:
+    """Coerce anything macro-shaped to a :class:`MacroModel`.
+
+    * ``MacroModel`` → itself;
+    * ``SiliconConfig`` → the SA-ADC flavour wrapping it (bitwise the
+      pre-registry per-slot silicon path);
+    * ``str`` → :func:`get_macro` with default fields.
+    """
+    if isinstance(spec, MacroModel):
+        return spec
+    if isinstance(spec, SiliconConfig):
+        from repro.macros.saadc import SAADC
+        return SAADC(silicon=spec)
+    if isinstance(spec, str):
+        return get_macro(spec)
+    raise TypeError(
+        f"expected a MacroModel, SiliconConfig or registered macro name, "
+        f"got {type(spec).__name__}")

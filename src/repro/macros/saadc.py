@@ -1,0 +1,46 @@
+"""The source paper's per-slot SA-ADC, as a registered macro flavour.
+
+This is the pre-registry silicon path of :mod:`repro.silicon.instance`
+refactored *behind* the :class:`~repro.macros.base.MacroModel` protocol:
+every hook delegates to the exact raw functions the silicon lab has
+always run (``sample_fleet`` / ``effective_caps`` / ``effective_offsets``
+/ ``_thermal_pair`` / the tail-current re-trim), so an engine built with
+``SAADC(silicon=cfg)`` is bitwise identical to one built with the bare
+``SiliconConfig`` at σ=0 AND exact-code identical at σ>0 — the
+acceptance gate of ``BENCH_macros.json``.
+
+Area: the SA-ADC is *memory-immersed* — its cap-DAC is the bit-line
+parasitic capacitance of the half it serves, so the per-slot
+digitisation area is just comparator + SAR logic + calibration DAC (no
+explicit capacitor array), and the cell is the plain 6T bit cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+
+from repro.macros.base import (CAL_DAC_AREA_UNITS, COMPARATOR_AREA_UNITS,
+                               SAR_AREA_UNITS_PER_BIT, MacroModel)
+from repro.macros.registry import register
+from repro.silicon import instance as inst
+from repro.silicon.instance import FleetSilicon
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class SAADC(MacroModel):
+    """Per-slot memory-immersed SA-ADC (the source paper's macro)."""
+
+    name: ClassVar[str] = "saadc"
+
+    def sample(self, key: jax.Array, n_slots: int, m_columns: int
+               ) -> FleetSilicon:
+        return inst.sample_fleet(key, n_slots, m_columns, self.silicon)
+
+    def adc_area_units(self, adc_bits: int) -> float:
+        return (COMPARATOR_AREA_UNITS
+                + SAR_AREA_UNITS_PER_BIT * adc_bits
+                + CAL_DAC_AREA_UNITS)

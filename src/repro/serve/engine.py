@@ -27,16 +27,20 @@ the pinned path, with every reprogram event charged against the Eq. 4
 roll-up (`repro.compiler.cost.serve_reload_cost`) in the
 :class:`ServeReport` each ``run()`` produces.
 
-Silicon-aware serving (``repro.silicon``): constructed with a
-``SiliconConfig``, the engine samples one ADC instance per fleet tile
-slot (cap-DAC mismatch, comparator offset + tail-current correction,
-noise floor, drift directions) and every stream decodes through the
-per-tile silicon datapath. A ``DriftPolicy`` adds the aging loop: the
-fleet ages one unit per input stream, drifted views are refreshed on
-cadence, and a probe corpus is replayed against the float MF reference
-on cadence — past the alarm thresholds the engine re-runs the comparator
-offset calibration, re-measures per-projection activation scales on the
-healed datapath, re-programs every macro, and charges the rewrite in the
+Silicon-aware serving (``repro.silicon`` + ``repro.macros``):
+constructed with a ``SiliconConfig``, a macro model, or a registered
+macro name (``silicon="collaborative"``), the engine samples the
+flavour's silicon instances over the fleet's tile slots (cap-DAC
+mismatch — per slot or shared per group, comparator offset +
+tail-current correction, conversion noise, drift directions) and every
+stream decodes through the per-tile silicon datapath. A ``DriftPolicy``
+adds the aging loop: the fleet ages one unit per input stream, drifted
+views are refreshed on cadence, and a probe corpus is replayed against
+the float MF reference on cadence — past the alarm thresholds the
+engine re-runs the macro's tiered comparator re-trim (fine DAC, coarse
+tier once drift saturates the ±3σ range, retirement screening beyond
+that), re-measures per-projection activation scales on the healed
+datapath, re-programs every macro, and charges the rewrite in the
 ``ServeReport`` next to the per-stream reload costs.
 """
 
@@ -131,6 +135,11 @@ class ServeReport:
     recal_reload_bits: int = 0  # µArray weight bits rewritten by recals
     recal_energy_j: float = 0.0
     recal_s: float = 0.0
+    # Slots whose drifted offset exceeded even the coarse re-trim DAC
+    # range at the LAST recalibration (a fleet-health level, not a
+    # per-window delta): screened for retirement — their residue can no
+    # longer be trimmed and only grows with further drift.
+    retired_slots: int = 0
 
     @property
     def streams(self) -> int:
@@ -165,10 +174,12 @@ class ServeEngine:
         # ``fleet`` (a repro.compiler.tiling.Fleet) makes serving
         # fleet-faithful: models that exceed its resident tile slots are
         # served round-interleaved (see module docstring).
-        # ``silicon`` (a repro.silicon SiliconConfig) samples one ADC
-        # instance per fleet tile slot (keyed by ``silicon_key``, default
-        # PRNGKey(silicon.seed)) and serves every decode/prefill stream
-        # through the per-tile silicon datapath.
+        # ``silicon`` (a repro.silicon SiliconConfig, a repro.macros
+        # MacroModel, or a registered macro name like "collaborative")
+        # samples the flavour's silicon instances over the fleet's tile
+        # slots (keyed by ``silicon_key``, default PRNGKey(seed)) and
+        # serves every decode/prefill stream through the per-tile
+        # silicon datapath.
         # ``drift`` (a repro.silicon.drift DriftPolicy) probes the live
         # datapath against the calibration baseline every
         # ``check_interval`` streams and auto-recalibrates on alarm.
@@ -178,7 +189,8 @@ class ServeEngine:
         self.fleet = fleet
         self.schedule = None
         self.silicon = None                 # sampled FleetSilicon
-        self.silicon_cfg = None
+        self.silicon_cfg = None             # the macro model serving it
+        self.macro = None                   # alias of silicon_cfg
         self.drift = drift
         self.drift_log = []                 # DriftStatus per probe
         self.last_drift_status = None
@@ -236,17 +248,17 @@ class ServeEngine:
                 self._base_params, self._registry = \
                     attach_observer_ids(params)
             if silicon is not None:
-                from repro.silicon.instance import (SiliconConfig,
-                                                    fleet_silicon)
-                if not isinstance(silicon, SiliconConfig):
-                    raise TypeError(
-                        f"silicon= takes a repro.silicon.SiliconConfig, "
-                        f"got {type(silicon).__name__}")
-                self.silicon_cfg = silicon
-                self.silicon = fleet_silicon(fleet, silicon, silicon_key)
-                self._drifting = (
-                    silicon.drift_sigma_v_per_kstream != 0.0
-                    or silicon.drift_cap_sigma_per_kstream != 0.0)
+                from repro.macros.registry import as_macro
+                from repro.silicon.instance import fleet_silicon
+                # Any macro-shaped spec: SiliconConfig (→ the SA-ADC
+                # flavour, the pre-registry physics), a MacroModel, or
+                # a registered name. Unknown names/types fail with the
+                # registry's precise error.
+                model = as_macro(silicon)
+                self.silicon_cfg = model
+                self.macro = model
+                self.silicon = fleet_silicon(fleet, model, silicon_key)
+                self._drifting = model.is_drifting
             self._program(scales)
             self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
@@ -290,6 +302,11 @@ class ServeEngine:
         self._drift_alarms = 0
         self._recals = 0
         self._recal_bits = 0
+        # Tiered-retrim fleet health, refreshed at every recalibration:
+        # levels (how many slots are coarse-trimmed / retired NOW), not
+        # cumulative event counts.
+        self._retrim_coarse = 0
+        self._retired_slots = 0
         self.last_report: Optional[ServeReport] = None
         if drift is not None:
             from repro.silicon.drift import DriftMonitor
@@ -534,23 +551,29 @@ class ServeEngine:
             self._drift_alarms += 1
             if self.drift.auto_recalibrate:
                 post = self._recalibrate(streams)
-                status = dataclasses.replace(status, recalibrated=True,
-                                             post_rel_l2=post)
+                status = dataclasses.replace(
+                    status, recalibrated=True, post_rel_l2=post,
+                    retrim_coarse_slots=self._retrim_coarse,
+                    retired_slots=self._retired_slots)
         self.drift_log.append(status)
         self.last_drift_status = status
 
     def _recalibrate(self, streams: int) -> float:
-        """Auto-recalibration: re-run the comparator offset calibration
-        against the DRIFTED silicon, re-measure per-projection activation
-        scales on the healed datapath, re-program every macro, and charge
-        the full weight rewrite. Returns the post-recovery probe rel-L2.
+        """Auto-recalibration: re-run the macro's tiered comparator
+        re-trim against the DRIFTED silicon (fine DAC where it still
+        captures, the coarse tier where drift saturated the ±3σ range,
+        retirement screening beyond even that), re-measure
+        per-projection activation scales on the healed datapath,
+        re-program every macro, and charge the full weight rewrite.
+        Returns the post-recovery probe rel-L2.
         """
         from repro.calib.artifact import CalibrationArtifact
         from repro.calib.corpus import scales_from_stats
         if self.silicon is not None:
-            from repro.silicon.instance import recalibrate_comparators
-            self.silicon = recalibrate_comparators(self.silicon,
-                                                   self.silicon_cfg)
+            self.silicon, tiers = self.macro.retrim(self.silicon)
+            tiers = np.asarray(tiers)
+            self._retrim_coarse = int((tiers == 1).sum())
+            self._retired_slots = int((tiers == 2).sum())
             self._refresh_silicon()
         # One probe replay on the healed datapath measures the live
         # activation statistics (the monitor's observe forward is
@@ -587,7 +610,9 @@ class ServeEngine:
                     prefill_tokens=self._prefill_tokens,
                     drift_checks=self._drift_checks,
                     drift_alarms=self._drift_alarms,
-                    recals=self._recals, recal_bits=self._recal_bits)
+                    recals=self._recals, recal_bits=self._recal_bits,
+                    retired_slots=self._retired_slots,
+                    retrim_coarse_slots=self._retrim_coarse)
 
     def report_since(self, before: dict, elapsed_s: float) -> ServeReport:
         """Eq. 4-charged :class:`ServeReport` of the window between a
@@ -603,7 +628,10 @@ class ServeEngine:
             drift_checks=now["drift_checks"] - before["drift_checks"],
             drift_alarms=now["drift_alarms"] - before["drift_alarms"],
             recalibrations=now["recals"] - before["recals"],
-            recal_reload_bits=now["recal_bits"] - before["recal_bits"])
+            recal_reload_bits=now["recal_bits"] - before["recal_bits"],
+            # A fleet-health level as of the last recalibration, not a
+            # windowed delta — retirement is a standing condition.
+            retired_slots=now["retired_slots"])
         return self.last_report
 
     def run(self, reqs: list[Request], max_ticks: int = 10_000
@@ -658,7 +686,8 @@ class ServeEngine:
                       prefill_calls: int, prefill_tokens: int,
                       elapsed_s: float, drift_checks: int = 0,
                       drift_alarms: int = 0, recalibrations: int = 0,
-                      recal_reload_bits: int = 0) -> ServeReport:
+                      recal_reload_bits: int = 0,
+                      retired_slots: int = 0) -> ServeReport:
         pinned = None
         rounds_max = 0
         utilization = 0.0
@@ -691,7 +720,7 @@ class ServeEngine:
             utilization=utilization, drift_checks=drift_checks,
             drift_alarms=drift_alarms, recalibrations=recalibrations,
             recal_reload_bits=recal_reload_bits, recal_energy_j=recal_j,
-            recal_s=recal_s)
+            recal_s=recal_s, retired_slots=retired_slots)
 
 
 def _check_calibration_names(params, calibration) -> None:

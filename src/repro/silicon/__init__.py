@@ -17,21 +17,23 @@ Three layers:
 
 from repro.silicon.variability import (VariabilityConfig, calibrated_offset,
                                        mav_crossover_probability,
-                                       sample_cap_weights,
+                                       retrim_offset, sample_cap_weights,
                                        sample_comparator_offset,
                                        screen_columns)
 from repro.silicon.instance import (FleetSilicon, SiliconConfig,
                                     age, attach_silicon, effective_caps,
                                     effective_offsets, fleet_silicon, merge,
                                     projection_silicon,
-                                    recalibrate_comparators, sample_fleet,
-                                    strip_silicon)
+                                    recalibrate_comparators,
+                                    retired_slots_mask, retrim_comparators,
+                                    sample_fleet, strip_silicon)
 
 __all__ = [
     "VariabilityConfig", "calibrated_offset", "mav_crossover_probability",
-    "sample_cap_weights", "sample_comparator_offset", "screen_columns",
+    "retrim_offset", "sample_cap_weights", "sample_comparator_offset",
+    "screen_columns",
     "FleetSilicon", "SiliconConfig", "age", "attach_silicon",
     "effective_caps", "effective_offsets", "fleet_silicon", "merge",
-    "projection_silicon", "recalibrate_comparators", "sample_fleet",
-    "strip_silicon",
+    "projection_silicon", "recalibrate_comparators", "retired_slots_mask",
+    "retrim_comparators", "sample_fleet", "strip_silicon",
 ]

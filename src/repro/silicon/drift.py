@@ -72,6 +72,12 @@ class DriftStatus:
     reasons: tuple[str, ...]
     recalibrated: bool = False
     post_rel_l2: float = math.nan
+    # Tiered re-trim accounting (repro.silicon.instance.retrim_comparators,
+    # filled by the engine when a recalibration ran): slots whose drift
+    # saturated the fine ±3σ DAC and re-trimmed on the coarse tier, and
+    # slots beyond even the coarse range — screened for retirement.
+    retrim_coarse_slots: int = 0
+    retired_slots: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self) | {"reasons": list(self.reasons)}

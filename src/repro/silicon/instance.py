@@ -52,7 +52,16 @@ from repro.core.cim import (CimConfig, ProjectionSilicon,
 from repro.core.programmed import (_EXPERT_KEYS, ProgrammedMacro,
                                    conv_weight_matrix, map_projections,
                                    strip_keys)
-from repro.silicon.variability import calibrated_offset
+from repro.silicon.variability import calibrated_offset, retrim_offset
+
+
+def _as_macro(spec):
+    """Coerce a ``SiliconConfig`` / macro name / MacroModel to a macro
+    model (lazy import: ``repro.macros`` builds on this module). The
+    SA-ADC wrapper delegates straight back to the raw functions below,
+    so dispatching through it is the identical computation."""
+    from repro.macros.registry import as_macro
+    return as_macro(spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,13 +146,17 @@ def sample_fleet(key: jax.Array, n_slots: int, m_columns: int,
                         age_streams=jnp.float32(0.0))
 
 
-def fleet_silicon(fleet, cfg: SiliconConfig,
-                  key: Optional[jax.Array] = None) -> FleetSilicon:
+def fleet_silicon(fleet, cfg, key: Optional[jax.Array] = None
+                  ) -> FleetSilicon:
     """Sample a :class:`~repro.compiler.tiling.Fleet`'s silicon (seeded
-    from ``cfg.seed`` unless an explicit key is given)."""
+    from the config's seed unless an explicit key is given). ``cfg`` is
+    a :class:`SiliconConfig` OR any macro model / registered macro name
+    (``repro.macros``) — the flavour's ``sample`` hook decides the
+    sharing structure (per-slot, per-group, ...)."""
+    model = _as_macro(cfg)
     if key is None:
-        key = jax.random.PRNGKey(cfg.seed)
-    return sample_fleet(key, fleet.tile_slots, fleet.cfg.m_columns, cfg)
+        key = jax.random.PRNGKey(model.seed)
+    return model.sample(key, fleet.tile_slots, fleet.cfg.m_columns)
 
 
 def merge(a: FleetSilicon, b: FleetSilicon) -> FleetSilicon:
@@ -191,18 +204,48 @@ def effective_caps(sil: FleetSilicon, cfg: SiliconConfig) -> jax.Array:
     return jnp.maximum(sil.cap + drift, 1e-3)
 
 
-def recalibrate_comparators(sil: FleetSilicon,
-                            cfg: SiliconConfig) -> FleetSilicon:
+def recalibrate_comparators(sil: FleetSilicon, cfg) -> FleetSilicon:
     """Re-run the tail-current offset calibration against the DRIFTED
     offsets: the new standing correction cancels the drifted offset to
     within half a cal-DAC LSB wherever it falls inside the ±3σ DAC range
     (beyond-range drift saturates the DAC — residue grows, faithfully).
-    No-op when the comparator calibration is disabled."""
+    No-op when the comparator calibration is disabled. ``cfg`` may be a
+    macro model / registered name, whose ``recalibrate`` hook runs."""
+    if not isinstance(cfg, SiliconConfig):
+        return _as_macro(cfg).recalibrate(sil)
     if not cfg.calibrate_comparator or cfg.comparator_sigma_v == 0.0:
         return sil
     raw_t = _drifted_offset_v(sil, cfg)
     correction = raw_t - calibrated_offset(raw_t, cfg)
     return sil._replace(correction_v=correction.astype(jnp.float32))
+
+
+def retrim_comparators(sil: FleetSilicon, cfg: SiliconConfig, *,
+                       coarse_mult: float = 3.0
+                       ) -> tuple[FleetSilicon, jax.Array]:
+    """Tiered re-trim against the drifted offsets: the fine ±3σ DAC
+    where it still captures, a ``coarse_mult``× re-biased coarse tier
+    for slots whose drift saturated the fine range, and an int32 tier
+    verdict per slot (0 fine / 1 coarse / 2 saturated-even-coarse —
+    the screening candidates for retirement). Bit-identical to
+    :func:`recalibrate_comparators` wherever the fine range suffices.
+    """
+    if not cfg.calibrate_comparator or cfg.comparator_sigma_v == 0.0:
+        return sil, jnp.zeros((sil.n_slots,), jnp.int32)
+    raw_t = _drifted_offset_v(sil, cfg)
+    residue, tier = retrim_offset(raw_t, cfg, coarse_mult)
+    correction = raw_t - residue
+    return sil._replace(correction_v=correction.astype(jnp.float32)), tier
+
+
+def retired_slots_mask(sil: FleetSilicon, cfg: SiliconConfig, *,
+                       coarse_mult: float = 3.0) -> jax.Array:
+    """(S,) bool — slots whose drifted offset exceeds even the coarse
+    re-trim range (tier 2 of :func:`retrim_comparators`)."""
+    if not cfg.calibrate_comparator or cfg.comparator_sigma_v == 0.0:
+        return jnp.zeros((sil.n_slots,), bool)
+    _, tier = retrim_offset(_drifted_offset_v(sil, cfg), cfg, coarse_mult)
+    return tier == 2
 
 
 # ---------------------------------------------------------------------------
@@ -238,16 +281,19 @@ def _thermal_pair(cfg: SiliconConfig,
     return fs, noise_key
 
 
-def projection_silicon(sil: FleetSilicon, cfg: SiliconConfig, k: int,
+def projection_silicon(sil: FleetSilicon, cfg, k: int,
                        n: int, *, base: int = 0,
                        noise_key: Optional[jax.Array] = None
                        ) -> ProjectionSilicon:
     """The per-tile silicon view of one (k, n) projection whose tiles
     occupy slots ``(base + t) % n_slots`` in column-major tile order.
-    ``noise_key`` seeds the per-conversion thermal dither stream when
-    ``cfg.thermal_sigma_v > 0`` (default: keyed from ``cfg.seed``)."""
-    fs, nkey = _thermal_pair(cfg, noise_key)
-    return _gather(effective_caps(sil, cfg), effective_offsets(sil, cfg),
+    ``noise_key`` seeds the per-conversion dither stream when the macro
+    adds conversion noise (thermal floor, cross-macro coupling) —
+    default: keyed from the config's seed. ``cfg`` is a
+    :class:`SiliconConfig` or any macro model / registered name."""
+    model = _as_macro(cfg)
+    fs, nkey = model.conversion_pair(noise_key)
+    return _gather(model.effective_caps(sil), model.effective_offsets(sil),
                    k, n, base, fs, nkey)
 
 
@@ -255,9 +301,15 @@ def _tiles(k: int, n: int, m: int) -> int:
     return (-(-k // m)) * n
 
 
-def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
+def attach_silicon(params: Any, sil: FleetSilicon, cfg,
                    cim: CimConfig, *, pinned: bool = True) -> Any:
     """Embed per-tile silicon views in every MF projection of a tree.
+
+    ``cfg`` is a :class:`SiliconConfig` or any macro model / registered
+    macro name (``repro.macros``): the flavour's effective-caps /
+    effective-offsets / conversion-noise hooks shape the views. A bare
+    ``SiliconConfig`` dispatches through the SA-ADC flavour, whose hooks
+    ARE the raw functions of this module — the identical computation.
 
     Returns a copy of ``params`` where each projection dict gains a
     ``"sil"`` entry (expert banks: ``sil_up/gate/down``) consumed by
@@ -283,9 +335,10 @@ def attach_silicon(params: Any, sil: FleetSilicon, cfg: SiliconConfig,
         raise ValueError(
             f"fleet silicon is sampled for m_columns={sil.m_columns}, "
             f"the model runs m_columns={cim.m_columns}")
-    eff_cap = effective_caps(sil, cfg)
-    eff_off = effective_offsets(sil, cfg)
-    thermal_fs, noise_root = _thermal_pair(cfg)
+    model = _as_macro(cfg)
+    eff_cap = model.effective_caps(sil)
+    eff_off = model.effective_offsets(sil)
+    thermal_fs, noise_root = model.conversion_pair()
     m = cim.m_columns
     next_base = 0
     next_inst = 0

@@ -26,20 +26,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cim import CimConfig, ProjectionSilicon, cim_mf_matmul
-from repro.silicon.instance import (FleetSilicon, SiliconConfig,
+from repro.silicon.instance import (FleetSilicon, SiliconConfig, _as_macro,
                                     projection_silicon, sample_fleet)
 
 
 def sample_projection_silicon(key: jax.Array, k: int, n: int,
-                              m_columns: int, cfg: SiliconConfig
-                              ) -> ProjectionSilicon:
+                              m_columns: int, cfg) -> ProjectionSilicon:
     """Sample a dedicated slot per µArray tile of one (k, n) projection —
-    the fully-independent-instances regime of a fresh fleet."""
+    the fresh-fleet regime. ``cfg`` is a :class:`SiliconConfig` or any
+    macro model / registered name (``repro.macros``): the flavour's
+    ``sample`` hook decides instance sharing (per-slot, per-group)."""
+    model = _as_macro(cfg)
     chunks = -(-k // m_columns)
-    fleet = sample_fleet(key, chunks * n, m_columns, cfg)
+    fleet = model.sample(key, chunks * n, m_columns)
     # The dither stream rides the sampling key so vmapped MC instances
-    # draw independent per-conversion thermal noise.
-    return projection_silicon(fleet, cfg, k, n,
+    # draw independent per-conversion noise.
+    return projection_silicon(fleet, model, k, n,
                               noise_key=jax.random.fold_in(key, 7))
 
 
@@ -52,10 +54,11 @@ def _sqnr_db(ref: jax.Array, y: jax.Array, cap_db: float = 120.0
 
 
 def projection_sqnr_samples(key: jax.Array, x: jax.Array, w: jax.Array,
-                            cim: CimConfig, cfg: SiliconConfig,
+                            cim: CimConfig, cfg,
                             n_seeds: int) -> jax.Array:
     """(n_seeds,) SQNR in dB of the silicon route vs the nominal CIM
-    output, one sampled fleet per seed (vmapped end to end)."""
+    output, one sampled fleet per seed (vmapped end to end). ``cfg`` is
+    a :class:`SiliconConfig` or any macro model / registered name."""
     y0 = cim_mf_matmul(x, w, cim)
     k, n = w.shape
 
@@ -82,14 +85,17 @@ class YieldPoint:
 
 
 def projection_yield_curve(key: jax.Array, x: jax.Array, w: jax.Array,
-                           cim: CimConfig, base: SiliconConfig,
+                           cim: CimConfig, base,
                            sigmas: Sequence[float], n_seeds: int,
                            sqnr_floor_db: float = 20.0
                            ) -> list[YieldPoint]:
-    """Sweep cap-DAC mismatch σ; every other knob comes from ``base``."""
+    """Sweep cap-DAC mismatch σ; every other knob comes from ``base`` —
+    a :class:`SiliconConfig` or any macro model / registered name, so
+    yield curves parameterise over the whole macro zoo."""
+    model = _as_macro(base)
     points = []
     for i, sigma in enumerate(sigmas):
-        cfg = dataclasses.replace(base, cap_sigma=float(sigma))
+        cfg = model.with_mismatch(float(sigma))
         s = projection_sqnr_samples(jax.random.fold_in(key, i), x, w, cim,
                                     cfg, n_seeds)
         points.append(YieldPoint(

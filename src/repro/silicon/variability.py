@@ -83,6 +83,45 @@ def calibrated_offset(offset_v: jax.Array, cfg: VariabilityConfig
                                steps // 2) * lsb
 
 
+def retrim_offset(offset_v: jax.Array, cfg: VariabilityConfig,
+                  coarse_mult: float = 3.0
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Tiered tail-current re-trim: ``(residue_v, tier)``.
+
+    Aging extension of :func:`calibrated_offset`. The fine tier is the
+    standard ±3σ cal DAC; once a slot's (drifted) offset leaves the fine
+    range — |offset| beyond the outermost fine step's capture window —
+    the DAC is re-biased to a ``coarse_mult``× wider range at the same
+    step count (coarser LSB, same hardware: the tail-current mirror is
+    ratioed up). Offsets beyond even the coarse range saturate the DAC;
+    their residue grows without bound and the slot is the screening
+    candidate for retirement.
+
+    Returns the post-trim residue (V) and an int32 tier per slot:
+    0 = fine (bit-identical to :func:`calibrated_offset`), 1 = coarse
+    tier engaged, 2 = saturated beyond the coarse range (retire).
+    """
+    full = 3.0 * cfg.comparator_sigma_v
+    steps = 2 ** cfg.comparator_cal_bits
+    half = steps // 2
+    lsb = 2.0 * full / steps
+    fine = offset_v - jnp.clip(jnp.round(offset_v / lsb), -half,
+                               half) * lsb
+    coarse_full = coarse_mult * full
+    coarse_lsb = 2.0 * coarse_full / steps
+    coarse = offset_v - jnp.clip(jnp.round(offset_v / coarse_lsb), -half,
+                                 half) * coarse_lsb
+    # Inside this window the fine clip never binds, so the fine branch
+    # IS calibrated_offset — existing drift benches whose offsets stay
+    # in range re-trim bit-identically to the single-tier path.
+    in_fine = jnp.abs(offset_v) <= full + 0.5 * lsb
+    in_coarse = jnp.abs(offset_v) <= coarse_full + 0.5 * coarse_lsb
+    residue = jnp.where(in_fine, fine, coarse)
+    tier = jnp.where(in_fine, 0,
+                     jnp.where(in_coarse, 1, 2)).astype(jnp.int32)
+    return residue, tier
+
+
 def estimate_cap_strength(cap_weights: jax.Array, cfg: VariabilityConfig,
                           key: Optional[jax.Array] = None) -> jax.Array:
     """On-chip charge-cycle counting estimator of per-column C_PL (Fig. 8c).

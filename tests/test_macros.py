@@ -1,0 +1,459 @@
+"""Macro zoo: registry dispatch, flavour parity, collaborative structure,
+area re-budgeting, tiered re-trim, and the compiler's macro-aware Eq. 4.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compiler.cost import layer_cost, model_cost
+from repro.compiler.schedule import compile_model
+from repro.compiler.tiling import Fleet
+from repro.core.cim import CimConfig, adc_codes, cim_mf_matmul
+from repro.core.energy import unit_op_cycles, unit_op_energy_j
+from repro.core.mapping import LayerStat, MappingPolicy
+from repro.macros import (P8T, SAADC, CollaborativeDigitization, MacroModel,
+                          as_macro, available, feasible_columns,
+                          fleet_for_macro, get_macro,
+                          reference_budget_units)
+from repro.silicon.instance import (SiliconConfig, age,
+                                    fleet_silicon, projection_silicon,
+                                    recalibrate_comparators,
+                                    retired_slots_mask, retrim_comparators,
+                                    sample_fleet)
+from repro.silicon.variability import calibrated_offset, retrim_offset
+
+CIM = CimConfig(w_bits=8, x_bits=8, adc_bits=5, m_columns=31)
+NOISY = SiliconConfig(cap_sigma=0.02, comparator_sigma_v=0.008,
+                      thermal_sigma_v=0.001)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_flavours():
+    names = available()
+    assert {"saadc", "collaborative", "p8t"} <= set(names)
+    assert names == tuple(sorted(names))
+
+
+def test_registry_constructs_by_name_with_kwargs():
+    m = get_macro("collaborative", group_size=8)
+    assert isinstance(m, CollaborativeDigitization)
+    assert m.group_size == 8
+
+
+def test_registry_unknown_name_is_precise():
+    with pytest.raises(ValueError, match=r"unknown macro model 'emram'.*"
+                                         r"collaborative, p8t, saadc"):
+        get_macro("emram")
+
+
+def test_as_macro_coercions():
+    assert isinstance(as_macro("p8t"), P8T)
+    wrapped = as_macro(NOISY)
+    assert isinstance(wrapped, SAADC) and wrapped.silicon == NOISY
+    m = CollaborativeDigitization()
+    assert as_macro(m) is m
+    with pytest.raises(TypeError, match="MacroModel, SiliconConfig or "
+                                        "registered macro name"):
+        as_macro(42)
+
+
+def test_register_requires_name():
+    from repro.macros.registry import register
+
+    class Nameless(MacroModel):
+        name = ""
+
+    with pytest.raises(ValueError, match="name"):
+        register(Nameless)
+
+
+# ---------------------------------------------------------------------------
+# σ=0 bitwise parity for EVERY registered flavour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", available())
+def test_every_flavour_nominal_is_bitwise_nominal(name):
+    model = get_macro(name).nominal()
+    assert model.is_nominal
+    k, n = 70, 9
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    y0 = cim_mf_matmul(x, w, CIM)
+    fleet = model.sample(jax.random.PRNGKey(2), 32, CIM.m_columns)
+    sil = projection_silicon(fleet, model, k, n)
+    y = cim_mf_matmul(x, w, CIM, silicon=sil)
+    assert np.array_equal(np.asarray(y0), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# SA-ADC plug-in ≡ pre-registry silicon path at σ>0 (exact-code identity)
+# ---------------------------------------------------------------------------
+
+def test_saadc_sigma_pos_views_identical_to_raw_config():
+    s = sample_fleet(jax.random.PRNGKey(3), 32, CIM.m_columns, NOISY)
+    via_cfg = projection_silicon(s, NOISY, 70, 9)
+    via_macro = projection_silicon(s, SAADC(silicon=NOISY), 70, 9)
+    for a, b in zip(jax.tree.leaves(via_cfg), jax.tree.leaves(via_macro)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_saadc_fleet_sampling_identical_to_raw_config():
+    fleet = Fleet(n_macros=16, cfg=CIM)
+    a = fleet_silicon(fleet, NOISY)
+    b = fleet_silicon(fleet, SAADC(silicon=NOISY))
+    c = fleet_silicon(fleet, "saadc")   # default silicon ≠ NOISY: differs
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    assert not np.array_equal(np.asarray(a.offset_v), np.asarray(c.offset_v))
+
+
+def test_saadc_sigma_pos_matmul_identical_to_raw_config():
+    k, n = 3 * 31 + 5, 11
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, k))
+    w = jax.random.normal(jax.random.PRNGKey(5), (k, n))
+    s = sample_fleet(jax.random.PRNGKey(6), 48, CIM.m_columns, NOISY)
+    y_cfg = cim_mf_matmul(x, w, CIM,
+                          silicon=projection_silicon(s, NOISY, k, n))
+    y_mac = cim_mf_matmul(x, w, CIM,
+                          silicon=projection_silicon(
+                              s, SAADC(silicon=NOISY), k, n))
+    assert np.array_equal(np.asarray(y_cfg), np.asarray(y_mac))
+
+
+def test_quantise_hook_matches_datapath_transfer_function():
+    mav = jnp.linspace(-0.1, 1.1, 97)
+    off = jnp.full_like(mav, 0.01)
+    for name in available():
+        model = get_macro(name)
+        assert np.array_equal(np.asarray(model.quantise(mav, 5)),
+                              np.asarray(adc_codes(mav, 5)))
+        assert np.array_equal(np.asarray(model.quantise(mav, 5, off)),
+                              np.asarray(adc_codes(mav, 5, off)))
+
+
+# ---------------------------------------------------------------------------
+# Collaborative digitization: sharing structure + coupling noise
+# ---------------------------------------------------------------------------
+
+def test_collaborative_same_key_same_shared_caps():
+    m = CollaborativeDigitization(group_size=4, silicon=NOISY)
+    f1 = m.sample(jax.random.PRNGKey(0), 10, 31)
+    f2 = m.sample(jax.random.PRNGKey(0), 10, 31)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    f3 = m.sample(jax.random.PRNGKey(1), 10, 31)
+    assert not np.array_equal(np.asarray(f1.cap), np.asarray(f3.cap))
+
+
+def test_collaborative_within_group_correlated_across_groups_not():
+    g = 4
+    m = CollaborativeDigitization(group_size=g, silicon=NOISY)
+    f = m.sample(jax.random.PRNGKey(0), 11, 31)
+    assert f.cap.shape == (11, 31)
+    cap = np.asarray(f.cap)
+    off = np.asarray(f.offset_v)
+    for s in range(11):
+        lead = (s // g) * g
+        assert np.array_equal(cap[s], cap[lead])
+        assert off[s] == off[lead]
+    assert not np.array_equal(cap[0], cap[g])
+    # drift directions share the group's instance too (correlated aging)
+    dv = np.asarray(f.drift_dir_v)
+    assert dv[0] == dv[g - 1] and dv[0] != dv[g]
+
+
+def test_collaborative_group_matches_raw_sample_of_groups():
+    """The shared instances ARE a raw SA-ADC fleet of n_groups slots."""
+    m = CollaborativeDigitization(group_size=2, silicon=NOISY)
+    f = m.sample(jax.random.PRNGKey(7), 8, 31)
+    raw = sample_fleet(jax.random.PRNGKey(7), 4, 31, NOISY)
+    assert np.array_equal(np.asarray(f.cap[::2]), np.asarray(raw.cap))
+    assert np.array_equal(np.asarray(f.offset_v[::2]),
+                          np.asarray(raw.offset_v))
+
+
+def test_collaborative_coupling_noise_keyed_off_conversion_clock():
+    from repro.core.cim import conversion_clock
+    m = CollaborativeDigitization(group_size=4, coupling_sigma_v=0.002,
+                                  silicon=NOISY)
+    fleet = m.sample(jax.random.PRNGKey(0), 16, 31)
+    sil = projection_silicon(fleet, m, 62, 4)
+    assert sil.thermal_fs is not None
+    # RMS: thermal ⊕ (G-1) coupling in quadrature, as full-scale fraction
+    expect = np.sqrt(NOISY.thermal_sigma_v ** 2
+                     + 3 * 0.002 ** 2) / NOISY.v_full_scale
+    assert np.isclose(float(sil.thermal_fs), expect, rtol=1e-6)
+    with conversion_clock(3):
+        d1 = sil.dither((4, 4), 1)
+    with conversion_clock(3):
+        d2 = sil.dither((4, 4), 1)
+    with conversion_clock(4):
+        d3 = sil.dither((4, 4), 1)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert not np.array_equal(np.asarray(d1), np.asarray(d3))
+
+
+def test_collaborative_group1_no_coupling_is_saadc():
+    m = CollaborativeDigitization(group_size=1, silicon=NOISY)
+    raw = sample_fleet(jax.random.PRNGKey(2), 6, 31, NOISY)
+    f = m.sample(jax.random.PRNGKey(2), 6, 31)
+    assert np.array_equal(np.asarray(f.cap), np.asarray(raw.cap))
+    fs, _ = m.conversion_pair()
+    # thermal floor only — no neighbours to couple
+    assert np.isclose(float(fs), NOISY.thermal_sigma_v / NOISY.v_full_scale)
+
+
+def test_collaborative_validates_fields():
+    with pytest.raises(ValueError, match="group_size"):
+        CollaborativeDigitization(group_size=0)
+    with pytest.raises(ValueError, match="coupling_sigma_v"):
+        CollaborativeDigitization(coupling_sigma_v=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Area re-budgeting: ADC area traded for columns at fixed macro area
+# ---------------------------------------------------------------------------
+
+def test_collaborative_rebudget_widens_tiles():
+    base = Fleet(n_macros=64, cfg=CIM)
+    budget = reference_budget_units(CIM)
+    for g, a in ((4, 5), (4, 6), (2, 6)):
+        m = CollaborativeDigitization(group_size=g)
+        f = fleet_for_macro(m, base, adc_bits=a)
+        assert f.cfg.m_columns > CIM.m_columns, (g, a)
+        assert m.half_area_units(f.cfg) <= budget
+        assert f.macro is m
+    # sanity: the SA-ADC re-budgets to itself
+    f = fleet_for_macro(SAADC(), base)
+    assert f.cfg.m_columns == CIM.m_columns
+
+
+def test_p8t_rebudget_narrows_tiles():
+    base = Fleet(n_macros=64, cfg=CIM)
+    f = fleet_for_macro(P8T(), base)
+    assert f.cfg.m_columns < CIM.m_columns
+    assert P8T().half_area_units(f.cfg) <= reference_budget_units(CIM)
+
+
+def test_feasible_columns_monotone_in_group_size():
+    budget = reference_budget_units(CIM)
+    ms = [feasible_columns(CollaborativeDigitization(group_size=g), 5,
+                           budget_units=budget)
+          for g in (1, 2, 4, 8)]
+    assert ms == sorted(ms)
+    assert ms[-1] > CIM.m_columns
+
+
+def test_feasible_columns_rejects_impossible_envelope():
+    with pytest.raises(ValueError, match="does not fit"):
+        feasible_columns(SAADC(), 5, budget_units=90.0)
+
+
+def test_compiler_prices_through_macro_hooks():
+    stats = [LayerStat("proj", params=256 * 128, ops=2 * 256 * 128 * 4,
+                       k=256, n=128)]
+    base = Fleet(n_macros=256, cfg=CIM)
+    collab = CollaborativeDigitization(group_size=4)
+    fc = fleet_for_macro(collab, base, adc_bits=5)
+    sched_b = compile_model(stats, base,
+                            policy=MappingPolicy(threshold=0.0,
+                                                 always_digital=()))
+    sched_c = compile_model(stats, fc,
+                            policy=MappingPolicy(threshold=0.0,
+                                                 always_digital=()))
+    # wider tiles ⇒ strictly fewer µArray tiles for the same projection
+    assert sched_c.total_tiles < sched_b.total_tiles
+    _, cost_b = model_cost(sched_b)
+    _, cost_c = model_cost(sched_c)
+    # per-unit-op pricing runs through the flavour's hooks
+    lc = layer_cost(sched_c.layers[0], fc)
+    assert lc.cycles == (sched_c.layers[0].macro_unit_ops
+                         * collab.unit_op_cycles(fc.cfg))
+    assert collab.unit_op_cycles(fc.cfg) > unit_op_cycles(fc.cfg)
+    assert (collab.unit_op_energy_j(fc.cfg)
+            > unit_op_energy_j(fc.cfg))
+    assert cost_c.unit_ops < cost_b.unit_ops
+
+
+def test_p8t_energy_cheaper_mav_same_adc():
+    p = P8T(mav_energy_scale=0.6)
+    assert p.unit_op_energy_j(CIM) < unit_op_energy_j(CIM)
+    # only the MAV term scales: the difference is 40% of the MAV term
+    from repro.core.energy import DEFAULT_MACRO
+    mav = CIM.w_bits * CIM.m_columns * DEFAULT_MACRO.c_pl_v2_j
+    assert np.isclose(unit_op_energy_j(CIM) - p.unit_op_energy_j(CIM),
+                      0.4 * mav)
+
+
+def test_p8t_sampling_tightens_cap_mismatch():
+    p = P8T(dac_matching=0.5, silicon=NOISY)
+    f = p.sample(jax.random.PRNGKey(0), 64, 31)
+    raw = sample_fleet(jax.random.PRNGKey(0), 64, 31, NOISY)
+    assert np.allclose(np.asarray(f.cap) - 1.0,
+                       0.5 * (np.asarray(raw.cap) - 1.0), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Tiered re-trim + retirement screening
+# ---------------------------------------------------------------------------
+
+def _aged_fleet(streams, n=256):
+    # drift scale = 0.3 V/kstream x (streams/1000) on N(0,1) directions;
+    # comparator sigma 8 mV => fine window ±30 mV, coarse window ±90 mV.
+    # 100 streams (σ≈31 mV) leaves a healthy fine population, 150 streams
+    # populates the coarse tier, 1000 streams (σ=300 mV) saturates most.
+    scfg = dataclasses.replace(NOISY, thermal_sigma_v=0.0,
+                               drift_sigma_v_per_kstream=0.3)
+    return age(sample_fleet(jax.random.PRNGKey(11), n, 31, scfg),
+               streams), scfg
+
+
+def test_retrim_fine_tier_is_bitwise_the_single_tier_recal():
+    sil, scfg = _aged_fleet(streams=100)
+    single = recalibrate_comparators(sil, scfg)
+    tiered, tiers = retrim_comparators(sil, scfg)
+    tiers = np.asarray(tiers)
+    fine = tiers == 0
+    assert fine.any()
+    assert np.array_equal(np.asarray(single.correction_v)[fine],
+                          np.asarray(tiered.correction_v)[fine])
+
+
+def test_retrim_coarse_tier_beats_saturated_fine_dac():
+    from repro.silicon.instance import _drifted_offset_v
+    sil, scfg = _aged_fleet(streams=150)
+    single = recalibrate_comparators(sil, scfg)
+    tiered, tiers = retrim_comparators(sil, scfg)
+    tiers = np.asarray(tiers)
+    coarse = tiers == 1
+    assert coarse.any()
+    raw = np.asarray(_drifted_offset_v(sil, scfg))
+    res_single = np.abs(raw - np.asarray(single.correction_v))
+    res_tiered = np.abs(raw - np.asarray(tiered.correction_v))
+    # the saturated fine DAC leaves a strictly larger residue than the
+    # re-biased coarse tier on every coarse-tier slot
+    assert (res_tiered[coarse] < res_single[coarse]).all()
+
+
+def test_retrim_tier2_flags_saturation_and_matches_mask():
+    sil, scfg = _aged_fleet(streams=1000)
+    _, tiers = retrim_comparators(sil, scfg)
+    tiers = np.asarray(tiers)
+    assert (tiers == 2).any()
+    mask = np.asarray(retired_slots_mask(sil, scfg))
+    assert np.array_equal(mask, tiers == 2)
+
+
+def test_retrim_offset_tier_boundaries():
+    scfg = SiliconConfig(comparator_sigma_v=0.015)  # fine range ±45 mV
+    off = jnp.asarray([0.0, 0.040, 0.070, 0.500, -0.070, -0.500])
+    residue, tier = retrim_offset(off, scfg)
+    assert np.array_equal(np.asarray(tier), [0, 0, 1, 2, 1, 2])
+    fine = np.asarray(calibrated_offset(off, scfg))
+    r = np.asarray(residue)
+    assert r[0] == fine[0] and r[1] == fine[1]
+    # coarse LSB = 67.5 mV: the 70 mV slot trims to within half of that
+    assert abs(r[2]) <= 0.03375 + 1e-9
+    # saturated: residue is offset minus the clipped coarse DAC rail
+    assert abs(r[3]) > 0.2
+
+
+def test_retrim_noop_without_calibration():
+    scfg = SiliconConfig(comparator_sigma_v=0.0)
+    sil = sample_fleet(jax.random.PRNGKey(0), 8, 31, scfg)
+    out, tiers = retrim_comparators(sil, scfg)
+    assert out is sil
+    assert not np.asarray(tiers).any()
+    assert not np.asarray(retired_slots_mask(sil, scfg)).any()
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sweeps parameterise over the registry
+# ---------------------------------------------------------------------------
+
+def test_yield_curve_accepts_macro_models():
+    from repro.silicon.montecarlo import projection_yield_curve
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 62))
+    w = jax.random.normal(jax.random.PRNGKey(1), (62, 6))
+    m = CollaborativeDigitization(
+        group_size=4, coupling_sigma_v=0.0,
+        silicon=SiliconConfig(comparator_sigma_v=0.0))
+    # 0.2: well past the code-flip threshold of the lossless design
+    # point (below it, mismatch cancels in the ratiometric conversion)
+    pts = projection_yield_curve(jax.random.PRNGKey(2), x, w, CIM, m,
+                                 sigmas=(0.0, 0.2), n_seeds=4)
+    assert pts[0].mean_sqnr_db > pts[1].mean_sqnr_db
+    assert pts[0].yield_frac == 1.0
+
+
+def test_yield_curve_macro_vs_config_identical_for_saadc():
+    from repro.silicon.montecarlo import projection_sqnr_samples
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 62))
+    w = jax.random.normal(jax.random.PRNGKey(1), (62, 6))
+    base = SiliconConfig(comparator_sigma_v=0.0, cap_sigma=0.05)
+    s_cfg = projection_sqnr_samples(jax.random.PRNGKey(2), x, w, CIM,
+                                    base, 4)
+    s_mac = projection_sqnr_samples(jax.random.PRNGKey(2), x, w, CIM,
+                                    SAADC(silicon=base), 4)
+    assert np.array_equal(np.asarray(s_cfg), np.asarray(s_mac))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (slow: builds serving engines)
+# ---------------------------------------------------------------------------
+
+def _engine_cfg():
+    from repro.configs.base import MFTechniqueConfig, ModelConfig
+    return ModelConfig(
+        name="macro-tiny", family="lm", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+        dtype=jnp.float32,
+        mf=MFTechniqueConfig(mode="cim_sim", cim=CimConfig(4, 4, 5, 31)))
+
+
+@pytest.mark.slow
+def test_engine_accepts_macro_by_name_and_nominal_parity():
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+    cfg = _engine_cfg()
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    fleet = Fleet(n_macros=4096, cfg=cfg.mf.cim)
+
+    def serve(silicon):
+        eng = ServeEngine(params, cfg, slots=2, max_len=16, fleet=fleet,
+                          batched_prefill=False, silicon=silicon)
+        return eng, [r.out for r in eng.run(
+            [Request(prompt=[1, 2, 3], max_new_tokens=4)
+             for _ in range(2)])]
+
+    _, ref = serve(None)
+    # a nominal macro of ANY flavour serves the silicon-free tokens
+    _, toks = serve(CollaborativeDigitization(group_size=4).nominal())
+    assert toks == ref
+    # a registered name resolves (σ>0 default silicon: tokens may differ,
+    # but the engine must construct, serve, and expose the macro)
+    eng, toks = serve("saadc")
+    assert isinstance(eng.macro, SAADC)
+    assert len(toks) == 2 and all(len(t) == 4 for t in toks)
+
+
+@pytest.mark.slow
+def test_engine_rejects_unknown_macro_name_precisely():
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+    cfg = _engine_cfg()
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    fleet = Fleet(n_macros=4096, cfg=cfg.mf.cim)
+    with pytest.raises(ValueError, match="unknown macro model 'emram'"):
+        ServeEngine(params, cfg, slots=2, max_len=16, fleet=fleet,
+                    batched_prefill=False, silicon="emram")
+    with pytest.raises(TypeError, match="MacroModel, SiliconConfig or "):
+        ServeEngine(params, cfg, slots=2, max_len=16, fleet=fleet,
+                    batched_prefill=False, silicon=3.14)
