@@ -6,7 +6,6 @@ the dry-run roofline where MF costs exactly 2x matmul FLOPs).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import timed
 from repro.core.cim import CimConfig, cim_mf_matmul

@@ -55,7 +55,8 @@ def run(quick: bool = True):
         rf = r["roofline"]
         rows.append((
             f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
-            f"dom={rf['dominant']} bound={max(rf['compute_s'], rf['memory_s'], rf['collective_s']):.4f}s "
+            f"dom={rf['dominant']} "
+            f"bound={max(rf['compute_s'], rf['memory_s'], rf['collective_s']):.4f}s "
             f"c/m/x={rf['compute_s']:.3f}/{rf['memory_s']:.3f}/"
             f"{rf['collective_s']:.3f}"))
     md = markdown_table(recs)

@@ -18,10 +18,21 @@
 # TIER1_MACRO_BENCH=1 additionally runs the macro-zoo smoke (registry
 # parity, collaborative area re-budget + compiler tile shrink, MC yield
 # over macro models, tiered re-trim aging) and leaves BENCH_macros.json.
+# TIER1_LINT=1 additionally gates on the static passes: repro-lint
+# (python -m repro.analysis, zero unsuppressed findings vs the shrink-only
+# analysis_baseline.json) and ruff when it is installed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+if [[ "${TIER1_LINT:-0}" == "1" ]]; then
+  python -m repro.analysis src benchmarks tests --stats
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks
+  else
+    echo "tier1: ruff not installed; skipping (CI runs it)" >&2
+  fi
+fi
 python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --only compiler
 if [[ "${TIER1_SERVE_BENCH:-0}" == "1" ]]; then

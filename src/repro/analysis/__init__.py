@@ -1,0 +1,21 @@
+"""repro-lint: JAX-aware exactness linter for the CIM datapath.
+
+``python -m repro.analysis src benchmarks tests`` — see ``engine`` for
+the rule/suppression/baseline vocabulary and ``rules/`` for the bug
+classes (R001-R006). The runtime half (``REPRO_SANITIZE=1``) lives in
+``repro.analysis.sanitize``.
+"""
+
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    FileReport,
+    ModuleContext,
+    Rule,
+    all_rules,
+    analyze_file,
+    analyze_source,
+    diff_baseline,
+    iter_python_files,
+    load_baseline,
+    save_baseline,
+)

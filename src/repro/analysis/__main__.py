@@ -1,0 +1,101 @@
+"""CLI: ``python -m repro.analysis <paths> [--json] [--write-baseline]``.
+
+Exit codes: 0 clean (every finding suppressed-with-reason or in the
+baseline, no stale baseline entries), 1 findings/stale entries, 2 usage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.engine import (
+    all_rules,
+    analyze_file,
+    diff_baseline,
+    iter_python_files,
+    load_baseline,
+    save_baseline,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="repro-lint: JAX-aware exactness linter (R001-R006)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to scan (relative to cwd)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="accepted-findings ledger (default: "
+                         "analysis_baseline.json; empty/missing = zero "
+                         "accepted findings)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to the current finding "
+                         "set (for paying debt DOWN, reviewed in diff)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-rule finding/suppression counts")
+    args = ap.parse_args(argv)
+
+    root = Path.cwd()
+    files = iter_python_files(args.paths, root)
+    if not files:
+        print("repro-lint: no python files under the given paths",
+              file=sys.stderr)
+        return 2
+
+    rules = all_rules()
+    findings = []
+    suppressed = []
+    for f in files:
+        report = analyze_file(f, root, rules)
+        findings.extend(report.findings)
+        suppressed.extend(report.suppressed)
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"repro-lint: wrote {len(findings)} accepted finding(s) to "
+              f"{baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path) if baseline_path.exists() \
+        else []
+    new, stale = diff_baseline(findings, baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.as_json() for f in new],
+            "baselined": len(findings) - len(new),
+            "suppressed": [{"finding": f.as_json(),
+                            "reason": s.reason}
+                           for f, s in suppressed],
+            "stale_baseline": stale,
+            "files_scanned": len(files),
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.human())
+        for b in stale:
+            print(f"{b['path']}:{b['line']}: stale baseline entry "
+                  f"{b['rule']} — the finding is gone; shrink the "
+                  f"baseline (--write-baseline) so it cannot come back")
+        if args.stats or not (new or stale):
+            per_rule: dict[str, int] = {}
+            for f, _ in suppressed:
+                per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+            sup_txt = ", ".join(f"{k}:{v}"
+                                for k, v in sorted(per_rule.items()))
+            print(f"repro-lint: {len(files)} files, "
+                  f"{len(new)} finding(s), {len(findings) - len(new)} "
+                  f"baselined, {len(suppressed)} suppressed"
+                  + (f" [{sup_txt}]" if sup_txt else ""))
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

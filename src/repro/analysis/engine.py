@@ -1,0 +1,349 @@
+"""repro-lint engine: rule registry, module scanning, suppressions, baseline.
+
+The linter encodes this repo's *recurring* exactness/reproducibility bug
+classes as machine-checked AST rules (see ``repro.analysis.rules``). The
+engine is deliberately self-contained (stdlib only — ``ast`` + ``tokenize``)
+so it runs in CI before any jax import.
+
+Vocabulary the rules and CLI share:
+
+* **Module tags** — a file opts into tag-scoped rules with a comment
+  ``# repro-lint: module=exactness-critical[,step-time,...]`` anywhere in
+  the file (conventionally right under the docstring). Tags in use:
+  ``exactness-critical`` (R005 float-accumulation discipline + R004
+  nondeterminism sources), ``deterministic`` (R004 only), ``step-time``
+  (R006 conversion-clock-keyed noise).
+* **Suppressions** — ``# repro-lint: disable=R001[,R004] reason=...`` on
+  the finding's line (or a comment-only line directly above it) suppresses
+  the listed rules there. A suppression WITHOUT a reason is itself a
+  finding (R000): the policy is that every accepted exception documents
+  why it is safe.
+* **Pragmas** — ``# exact-ok: <why>`` marks a float accumulation in an
+  exactness-critical module as proven-exact (integer-valued operands,
+  fixed-point grid, ...). R005 requires it on every ``sum``/``einsum``/
+  ``dot``/``@`` there.
+* **Baseline** — a checked-in JSON list of accepted findings
+  (``analysis_baseline.json``). The gate fails on any finding not in the
+  baseline AND on stale baseline entries, so the baseline can only ever
+  shrink: new debt cannot land, paid-off debt must be removed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+TOOL = "repro-lint"
+
+_DIRECTIVE_RE = re.compile(r"#\s*repro-lint:\s*(?P<body>.*)")
+_DISABLE_RE = re.compile(
+    r"disable=(?P<rules>R\d{3}(?:\s*,\s*R\d{3})*)"
+    r"(?:\s+reason=(?P<reason>\S.*))?")
+_MODULE_RE = re.compile(r"module=(?P<tags>[\w-]+(?:\s*,\s*[\w-]+)*)")
+_EXACT_OK_RE = re.compile(r"#\s*exact-ok\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str          # repo-relative posix path
+    line: int          # 1-indexed
+    col: int           # 0-indexed
+    message: str
+
+    def key(self) -> tuple:
+        """Baseline identity (line-level: stable enough for a baseline
+        whose end state is empty, cheap enough to diff by eye)."""
+        return (self.rule, self.path, self.line)
+
+    def human(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def as_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule sees about one source file."""
+
+    path: str                      # repo-relative posix path
+    tree: ast.AST
+    source: str
+    tags: frozenset[str]
+    comment_lines: dict[int, str]  # physical line -> comment text
+    exact_ok_lines: frozenset[int]
+
+    def has_tag(self, tag: str) -> bool:
+        return tag in self.tags
+
+    def exact_ok(self, line: int) -> bool:
+        """True when ``line`` (or a comment-only line directly above it)
+        carries the ``# exact-ok`` pragma."""
+        return (line in self.exact_ok_lines
+                or (line - 1 in self.exact_ok_lines
+                    and _is_comment_only(self, line - 1)))
+
+
+def _is_comment_only(ctx: ModuleContext, line: int) -> bool:
+    if line not in ctx.comment_lines:
+        return False
+    src_line = ctx.source.splitlines()[line - 1]
+    return src_line.lstrip().startswith("#")
+
+
+class Rule:
+    """Base class: subclass, set the class attrs, implement ``check``.
+
+    ``required_tag`` scopes the rule to modules carrying that tag (None =
+    every scanned module).
+    """
+
+    rule_id: str = "R000"
+    title: str = ""
+    required_tag: Optional[str] = None
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.rule_id, ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator adding a rule to the global registry."""
+    inst = cls()
+    if inst.rule_id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.rule_id}")
+    _REGISTRY[inst.rule_id] = inst
+    return cls
+
+
+def all_rules() -> dict[str, Rule]:
+    # Import for side effect: the rule modules register themselves.
+    from repro.analysis import rules  # noqa: F401
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Comment / directive scanning (tokenize: robust to '#' inside strings).
+# ---------------------------------------------------------------------------
+
+def _scan_comments(source: str) -> dict[int, str]:
+    comments: dict[int, str] = {}
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass
+    return comments
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    rules: frozenset[str]
+    reason: Optional[str]
+    comment_only: bool
+
+
+def _scan_directives(source: str, comments: dict[int, str]
+                     ) -> tuple[frozenset[str], list[Suppression],
+                                frozenset[int]]:
+    """Extract (module tags, suppressions, exact-ok pragma lines)."""
+    tags: set[str] = set()
+    sups: list[Suppression] = []
+    exact_ok: set[int] = set()
+    lines = source.splitlines()
+    for line_no, text in comments.items():
+        comment_only = (line_no <= len(lines)
+                        and lines[line_no - 1].lstrip().startswith("#"))
+        if _EXACT_OK_RE.search(text):
+            exact_ok.add(line_no)
+        m = _DIRECTIVE_RE.search(text)
+        if not m:
+            continue
+        body = m.group("body")
+        mt = _MODULE_RE.search(body)
+        if mt:
+            tags.update(t.strip() for t in mt.group("tags").split(","))
+        md = _DISABLE_RE.search(body)
+        if md:
+            rules = frozenset(r.strip()
+                              for r in md.group("rules").split(","))
+            reason = md.group("reason")
+            sups.append(Suppression(line_no, rules,
+                                    reason.strip() if reason else None,
+                                    comment_only))
+    return frozenset(tags), sups, frozenset(exact_ok)
+
+
+# ---------------------------------------------------------------------------
+# Per-file analysis.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FileReport:
+    path: str
+    findings: list[Finding]
+    suppressed: list[tuple[Finding, Suppression]]
+
+
+def analyze_source(source: str, path: str,
+                   rules: Optional[dict[str, Rule]] = None) -> FileReport:
+    rules = rules if rules is not None else all_rules()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return FileReport(path, [Finding("E999", path, e.lineno or 1,
+                                         e.offset or 0,
+                                         f"syntax error: {e.msg}")], [])
+    comments = _scan_comments(source)
+    tags, sups, exact_ok = _scan_directives(source, comments)
+    ctx = ModuleContext(path=path, tree=tree, source=source, tags=tags,
+                        comment_lines=comments, exact_ok_lines=exact_ok)
+    raw: list[Finding] = []
+    for rule in rules.values():
+        if rule.required_tag is not None and not ctx.has_tag(
+                rule.required_tag):
+            continue
+        raw.extend(rule.check(ctx))
+
+    # Suppression resolution: a directive covers its own line, and — when
+    # it sits on a comment-only line — the next code line below it.
+    by_line: dict[int, list[Suppression]] = {}
+    for s in sups:
+        by_line.setdefault(s.line, []).append(s)
+        if s.comment_only:
+            by_line.setdefault(s.line + 1, []).append(s)
+
+    findings: list[Finding] = []
+    suppressed: list[tuple[Finding, Suppression]] = []
+    used: set[Suppression] = set()
+    for f in sorted(raw, key=lambda f: (f.line, f.col, f.rule)):
+        sup = next((s for s in by_line.get(f.line, ())
+                    if f.rule in s.rules), None)
+        if sup is None:
+            findings.append(f)
+            continue
+        used.add(sup)
+        if sup.reason is None:
+            findings.append(Finding(
+                "R000", path, sup.line, 0,
+                f"suppression of {f.rule} carries no reason= — every "
+                f"accepted exception must document why it is safe"))
+            findings.append(f)
+        else:
+            suppressed.append((f, sup))
+    for s in sups:
+        if s not in used:
+            findings.append(Finding(
+                "R000", path, s.line, 0,
+                f"unused suppression (rules {','.join(sorted(s.rules))} "
+                f"do not fire here) — stale directives hide future "
+                f"regressions; delete it"))
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return FileReport(path, findings, suppressed)
+
+
+def analyze_file(path: Path, root: Path,
+                 rules: Optional[dict[str, Rule]] = None) -> FileReport:
+    rel = path.resolve().relative_to(root.resolve()).as_posix() \
+        if path.resolve().is_relative_to(root.resolve()) \
+        else path.as_posix()
+    return analyze_source(path.read_text(encoding="utf-8"), rel, rules)
+
+
+def iter_python_files(paths: Iterable[str], root: Path) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        pp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if pp.is_dir():
+            out.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            out.append(pp)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline (shrink-only accepted-findings ledger).
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> list[dict]:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: baseline must be a JSON list")
+    return data
+
+
+def save_baseline(path: Path, findings: list[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message} for f in findings]
+    path.write_text(json.dumps(entries, indent=2) + "\n", encoding="utf-8")
+
+
+def diff_baseline(findings: list[Finding], baseline: list[dict]
+                  ) -> tuple[list[Finding], list[dict]]:
+    """Returns (new findings not in the baseline, stale baseline entries).
+
+    Matching is by (rule, path, line): precise enough for a ledger whose
+    target state is empty, and any drift surfaces as "stale" which forces
+    a --write-baseline shrink rather than silently passing.
+    """
+    base_keys = {(b["rule"], b["path"], b["line"]) for b in baseline}
+    found_keys = {f.key() for f in findings}
+    new = [f for f in findings if f.key() not in base_keys]
+    stale = [b for b in baseline
+             if (b["rule"], b["path"], b["line"]) not in found_keys]
+    return new, stale
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by several rules.
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.random.normal' for Attribute/Name chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_functions(tree: ast.AST) -> list[ast.AST]:
+    """Every function/lambda scope in the module, outermost first."""
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda))]
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def for_each_call(tree: ast.AST, fn: Callable[[ast.Call, str], None]
+                  ) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name is not None:
+                fn(node, name)

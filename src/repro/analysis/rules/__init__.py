@@ -1,0 +1,10 @@
+"""Rule modules register themselves with the engine on import."""
+
+from repro.analysis.rules import (  # noqa: F401
+    floatacc,
+    noise,
+    nondeterminism,
+    prng,
+    pytree,
+    tracing,
+)

@@ -1,0 +1,88 @@
+"""R005: float accumulation discipline in exactness-critical modules.
+
+The CIM datapath's bitwise contract rests on every contraction being
+*provably* order-independent: integer-valued ADC codes, and cap-DAC
+weights snapped to the 2^-14 fixed-point grid so partial sums stay exact
+in float32 (PR 7). Any ``sum``/``einsum``/``dot``/``matmul``/``@`` in a
+module tagged ``exactness-critical`` is therefore either (a) one of
+those proven-exact contractions — in which case it carries an
+``# exact-ok: <why>`` pragma stating the proof — or (b) a bug waiting
+for a tile-size change to surface it.
+
+float64/x64 usage is flagged in the same modules: the exactness proofs
+are float32 proofs, and flipping x64 silently changes every threshold.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    register,
+)
+
+_ACC_CALLS = {
+    "sum", "jnp.sum", "np.sum", "numpy.sum",
+    "jnp.einsum", "np.einsum", "numpy.einsum",
+    "jnp.dot", "np.dot", "jnp.vdot",
+    "jnp.matmul", "np.matmul",
+    "jnp.tensordot", "np.tensordot",
+    "jax.lax.dot_general", "lax.dot_general",
+    "jnp.cumsum", "np.cumsum",
+    "math.fsum",
+}
+_ACC_METHODS = {"sum", "dot", "matmul", "cumsum"}
+
+_X64_MARKERS = {"float64", "f64", "x64", "jax_enable_x64", "enable_x64",
+                "double"}
+
+
+@register
+class FloatAccumulation(Rule):
+    rule_id = "R005"
+    title = "unproven float accumulation in an exactness-critical module"
+    required_tag = "exactness-critical"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, ast.Call):
+                name = call_name(n)
+                hit = (name in _ACC_CALLS
+                       or (name is not None and "." in name
+                           and name.rsplit(".", 1)[1] in _ACC_METHODS
+                           and isinstance(n.func, ast.Attribute)))
+                if hit and not ctx.exact_ok(n.lineno):
+                    findings.append(self.finding(
+                        ctx, n,
+                        f"{name or 'accumulation'}() in an "
+                        f"exactness-critical module without an "
+                        f"# exact-ok pragma — state why the contraction "
+                        f"is order-independent (integer codes / 2^-14 "
+                        f"grid) or move it off the exact path"))
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.MatMult) \
+                    and not ctx.exact_ok(n.lineno):
+                findings.append(self.finding(
+                    ctx, n,
+                    "'@' matmul in an exactness-critical module without "
+                    "an # exact-ok pragma"))
+            if isinstance(n, ast.Attribute) and n.attr in _X64_MARKERS \
+                    and not ctx.exact_ok(n.lineno):
+                findings.append(self.finding(
+                    ctx, n,
+                    f"'{n.attr}' in an exactness-critical module — the "
+                    f"exactness proofs are float32 proofs; x64 silently "
+                    f"moves every threshold"))
+            if isinstance(n, ast.Constant) and n.value in (
+                    "float64", "jax_enable_x64") \
+                    and not ctx.exact_ok(n.lineno):
+                findings.append(self.finding(
+                    ctx, n,
+                    f"'{n.value}' literal in an exactness-critical "
+                    f"module — x64/float64 breaks the float32 exactness "
+                    f"contract"))
+        return findings

@@ -1,0 +1,99 @@
+"""R006: step-time noise draws not keyed off the conversion clock.
+
+PR 6's bug class: a dither tensor drawn once at silicon-attach time and
+replayed on every decode step — physically wrong (thermal noise is fresh
+per conversion) and irreproducible once the draw site moves. The contract
+since then: every *step-time* ``jax.random`` draw derives its key from
+``conversion_step()`` (the ``conversion_clock`` context threads the
+engine's stream counter in), usually via
+``fold_in(fold_in(noise_key, conversion_step()), salt)``.
+
+In modules tagged ``step-time`` the rule taints names assigned from
+expressions containing ``conversion_step()`` (transitively, per
+function) and flags any draw whose key expression is untainted. Program-
+time draws living in the same module suppress with a reason stating they
+run before the clock exists.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    register,
+)
+
+_NON_DRAWS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+              "key_data", "clone"}
+
+
+def _is_draw(node: ast.Call) -> bool:
+    name = call_name(node)
+    if name is None:
+        return False
+    parts = name.split(".")
+    if len(parts) == 3 and parts[:2] == ["jax", "random"]:
+        return parts[2] not in _NON_DRAWS
+    if len(parts) == 2 and parts[0] in ("jrandom", "jr"):
+        return parts[1] not in _NON_DRAWS
+    return False
+
+
+def _mentions_clock(node: ast.AST, tainted: set[str]) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            name = call_name(n)
+            if name and name.split(".")[-1] == "conversion_step":
+                return True
+        if isinstance(n, ast.Name) and n.id in tainted:
+            return True
+    return False
+
+
+@register
+class UnkeyedStepNoise(Rule):
+    rule_id = "R006"
+    title = "step-time draw not derived from conversion_clock"
+    required_tag = "step-time"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            tainted = self._taint(fn)
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Call) and _is_draw(n) and n.args:
+                    key = n.args[0]
+                    if not _mentions_clock(key, tainted):
+                        findings.append(self.finding(
+                            ctx, n,
+                            "step-time jax.random draw whose key is not "
+                            "derived from conversion_step() — the noise "
+                            "replays identically every decode step and "
+                            "is not stream-reproducible; fold the "
+                            "conversion clock into the key"))
+        return findings
+
+    @staticmethod
+    def _taint(fn: ast.AST) -> set[str]:
+        """Names (transitively) derived from conversion_step() in fn."""
+        tainted: set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for n in ast.walk(fn):
+                if not isinstance(n, ast.Assign):
+                    continue
+                if _mentions_clock(n.value, tainted):
+                    for t in n.targets:
+                        for tn in ast.walk(t):
+                            if isinstance(tn, ast.Name) \
+                                    and tn.id not in tainted:
+                                tainted.add(tn.id)
+                                changed = True
+        return tainted

@@ -1,0 +1,101 @@
+"""R004: nondeterminism sources in determinism-tagged modules.
+
+Program-time code (weight programming, silicon instantiation, macro
+builds) must be a pure function of config + seed: two runs with the same
+seed must program identical macros, or the exactness contract between
+runs is void before the first decode step. Inside modules tagged
+``deterministic`` or ``exactness-critical`` the rule flags wall-clock
+reads, OS entropy, stdlib/global-numpy RNG state, and iteration over
+unordered sets.
+
+``np.random.default_rng(seed)`` / ``np.random.Generator`` are explicit,
+seeded streams and pass; the *global*-state legacy API does not.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    register,
+)
+
+_TAGS = ("deterministic", "exactness-critical")
+
+_BANNED_CALLS = {
+    "time.time": "wall-clock read",
+    "time.time_ns": "wall-clock read",
+    "datetime.now": "wall-clock read",
+    "datetime.utcnow": "wall-clock read",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "os.urandom": "OS entropy",
+    "uuid.uuid1": "host/time-derived id",
+    "uuid.uuid4": "OS entropy",
+    "secrets.token_bytes": "OS entropy",
+    "secrets.token_hex": "OS entropy",
+}
+
+_NP_SEEDED_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox"}
+
+
+def _banned_reason(name: str) -> str | None:
+    if name in _BANNED_CALLS:
+        return _BANNED_CALLS[name]
+    parts = name.split(".")
+    # stdlib `random` global-state API
+    if len(parts) == 2 and parts[0] == "random":
+        return "stdlib random global state"
+    # numpy legacy global-state API (np.random.seed / .rand / .normal ...)
+    if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+            and parts[1] == "random" and parts[2] not in _NP_SEEDED_OK:
+        return "numpy legacy global RNG state"
+    return None
+
+
+@register
+class NondeterminismSources(Rule):
+    rule_id = "R004"
+    title = "nondeterminism source in a determinism-tagged module"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if not any(ctx.has_tag(t) for t in _TAGS):
+            return []
+        findings: list[Finding] = []
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, ast.Call):
+                name = call_name(n)
+                reason = _banned_reason(name) if name else None
+                if reason is not None:
+                    findings.append(self.finding(
+                        ctx, n,
+                        f"{name}() is a nondeterminism source ({reason}) "
+                        f"in a module tagged for determinism — derive it "
+                        f"from config/seed instead"))
+            if isinstance(n, (ast.For, ast.comprehension)):
+                it = n.iter
+                if self._is_unordered_set(it):
+                    findings.append(self.finding(
+                        ctx, it,
+                        "iteration over a set has no guaranteed order — "
+                        "wrap in sorted(...) so program-time walks are "
+                        "reproducible"))
+        return findings
+
+    @staticmethod
+    def _is_unordered_set(it: ast.AST) -> bool:
+        if isinstance(it, ast.Set):
+            return True
+        if isinstance(it, ast.Call) and call_name(it) == "set":
+            return True
+        if isinstance(it, ast.BinOp) and isinstance(
+                it.op, (ast.BitOr, ast.BitAnd, ast.Sub)) \
+                and (isinstance(it.left, (ast.Set,))
+                     or isinstance(it.right, (ast.Set,))):
+            return True
+        return False

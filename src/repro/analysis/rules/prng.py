@@ -1,0 +1,179 @@
+"""R001: PRNG key reuse.
+
+The same key fed to two ``jax.random.*`` draws without an intervening
+``split``/``fold_in`` collapses two "independent" noise sources into one —
+the exact shape of the PR 6 bug where per-slot dither was drawn once and
+replayed every decode step. Two patterns fire:
+
+* a key *name* used by a second draw after an earlier draw consumed it,
+  with no reassignment in between (linear def-use per function, branches
+  merged by union);
+* a draw inside a ``for``/``while`` body whose bare-name key is never
+  reassigned inside the loop — every iteration replays the same stream.
+
+Only draws consume: ``split``/``fold_in`` derive fresh streams and keys
+built inline (``fold_in(key, i)``, ``keys[i]``) are not bare names, so the
+standard idioms pass untouched.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    register,
+)
+
+_NON_DRAWS = {
+    "split", "fold_in", "PRNGKey", "key", "wrap_key_data", "key_data",
+    "key_impl", "clone",
+}
+
+
+def _draw_key_name(node: ast.Call) -> str | None:
+    """Bare-name key argument of a ``jax.random.<dist>`` draw, else None."""
+    name = call_name(node)
+    if name is None:
+        return None
+    parts = name.split(".")
+    # jax.random.x or a conventional alias; numpy/stdlib random is R004's.
+    if len(parts) == 3 and parts[:2] == ["jax", "random"]:
+        dist = parts[2]
+    elif len(parts) == 2 and parts[0] in ("jrandom", "jr"):
+        dist = parts[1]
+    else:
+        return None
+    if dist in _NON_DRAWS:
+        return None
+    if not node.args:
+        return None
+    key = node.args[0]
+    return key.id if isinstance(key, ast.Name) else None
+
+
+def _assigned_names(stmt: ast.stmt) -> set[str]:
+    out: set[str] = set()
+    targets: list[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items
+                   if i.optional_vars is not None]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+def _all_assigned(stmts: list[ast.stmt]) -> set[str]:
+    out: set[str] = set()
+    for s in stmts:
+        for n in ast.walk(s):
+            if isinstance(n, ast.stmt):
+                out |= _assigned_names(n)
+    return out
+
+
+@register
+class PrngKeyReuse(Rule):
+    rule_id = "R001"
+    title = "PRNG key reuse without split/fold_in"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        flagged: set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_block(ctx, node.body, set(), findings, flagged,
+                                 in_loop=False)
+        return findings
+
+    def _stmt_draws(self, stmt: ast.AST) -> list[tuple[ast.Call, str]]:
+        """Draws in this statement's own expressions — nested function/
+        class scopes are pruned (they may be called with fresh keys)."""
+        out: list[tuple[ast.Call, str]] = []
+
+        def visit(n: ast.AST) -> None:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+                return
+            if isinstance(n, ast.Call):
+                key = _draw_key_name(n)
+                if key is not None:
+                    out.append((n, key))
+            for child in ast.iter_child_nodes(n):
+                visit(child)
+
+        for child in ast.iter_child_nodes(stmt):
+            visit(child)
+        if isinstance(stmt, ast.Call):
+            key = _draw_key_name(stmt)
+            if key is not None:
+                out.append((stmt, key))
+        return out
+
+    def _scan_block(self, ctx: ModuleContext, stmts: list[ast.stmt],
+                    consumed: set[str], findings: list[Finding],
+                    flagged: set[int], in_loop: bool) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested scopes are scanned independently
+            if isinstance(stmt, (ast.For, ast.While)):
+                loop_assigned = _all_assigned(stmt.body) | _assigned_names(
+                    stmt)
+                for call, key in [d for s in stmt.body
+                                  for d in self._stmt_draws(s)]:
+                    if key not in loop_assigned and id(call) not in flagged:
+                        flagged.add(id(call))
+                        findings.append(self.finding(
+                            ctx, call,
+                            f"key '{key}' is drawn from inside a loop but "
+                            f"never reassigned in the loop body — every "
+                            f"iteration replays the same stream; fold_in "
+                            f"the loop index or split per iteration"))
+                self._scan_block(ctx, stmt.body, consumed, findings,
+                                 flagged, in_loop=True)
+                self._scan_block(ctx, stmt.orelse, consumed, findings,
+                                 flagged, in_loop=in_loop)
+                continue
+            if isinstance(stmt, ast.If):
+                c_body = set(consumed)
+                c_else = set(consumed)
+                self._scan_block(ctx, stmt.body, c_body, findings,
+                                 flagged, in_loop)
+                self._scan_block(ctx, stmt.orelse, c_else, findings,
+                                 flagged, in_loop)
+                consumed |= c_body | c_else
+                continue
+            if isinstance(stmt, ast.Try):
+                for block in (stmt.body, stmt.orelse, stmt.finalbody,
+                              *[h.body for h in stmt.handlers]):
+                    self._scan_block(ctx, block, consumed, findings,
+                                     flagged, in_loop)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                consumed -= _assigned_names(stmt)
+                self._scan_block(ctx, stmt.body, consumed, findings,
+                                 flagged, in_loop)
+                continue
+            for call, key in self._stmt_draws(stmt):
+                if id(call) in flagged:
+                    continue
+                if key in consumed:
+                    flagged.add(id(call))
+                    findings.append(self.finding(
+                        ctx, call,
+                        f"key '{key}' was already consumed by an earlier "
+                        f"jax.random draw — split or fold_in before "
+                        f"drawing again"))
+                else:
+                    consumed.add(key)
+            consumed -= _assigned_names(stmt)

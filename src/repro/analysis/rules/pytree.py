@@ -1,0 +1,97 @@
+"""R002: NamedTuple-pytree rebuild through plain ``tuple(...)``.
+
+PR 5's ``strip_silicon`` walked a parameter tree with
+``isinstance(node, tuple)`` + ``tuple(walk(c) for c in node)``: registered
+NamedTuple nodes (``ProgrammedMacro``, caches) came back as anonymous
+tuples, silently changing the pytree treedef and detaching every
+downstream consumer. The safe idiom preserves the node type —
+``type(node)(*children)``, ``node._make(children)``, or an explicit
+``hasattr(node, "_fields")`` early-return.
+
+The rule fires on any function that (a) type-tests ``tuple`` (or
+``(list, tuple)``) AND (b) rebuilds via ``tuple(<comprehension/map>)``,
+unless the function also shows one of the preserving guards.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    register,
+)
+
+
+def _tests_tuple(fn: ast.AST) -> bool:
+    for n in ast.walk(fn):
+        if (isinstance(n, ast.Call) and call_name(n) == "isinstance"
+                and len(n.args) == 2):
+            cls = n.args[1]
+            names = [cls] if not isinstance(cls, ast.Tuple) else cls.elts
+            for c in names:
+                if isinstance(c, ast.Name) and c.id == "tuple":
+                    return True
+    return False
+
+
+def _tuple_rebuilds(fn: ast.AST) -> list[ast.Call]:
+    out = []
+    for n in ast.walk(fn):
+        if (isinstance(n, ast.Call) and call_name(n) == "tuple"
+                and len(n.args) == 1):
+            arg = n.args[0]
+            if isinstance(arg, (ast.GeneratorExp, ast.ListComp)):
+                out.append(n)
+            elif isinstance(arg, ast.Call) and call_name(arg) == "map":
+                out.append(n)
+    return out
+
+
+def _has_preserving_guard(fn: ast.AST) -> bool:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Attribute) and n.attr in ("_fields", "_make"):
+            return True
+        # hasattr(node, "_fields") early-return
+        if (isinstance(n, ast.Call) and call_name(n) == "hasattr"
+                and len(n.args) == 2
+                and isinstance(n.args[1], ast.Constant)
+                and n.args[1].value in ("_fields", "_make")):
+            return True
+        # type(node)(...) reconstruction
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Call)
+                and call_name(n.func) == "type"):
+            return True
+    return False
+
+
+@register
+class NamedTuplePytreeRebuild(Rule):
+    rule_id = "R002"
+    title = "pytree walk rebuilds tuples without preserving NamedTuple type"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        seen: set[int] = set()  # a call is visible from every enclosing fn
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _tests_tuple(fn):
+                continue
+            if _has_preserving_guard(fn):
+                continue
+            for call in _tuple_rebuilds(fn):
+                if id(call) in seen:
+                    continue
+                seen.add(id(call))
+                findings.append(self.finding(
+                    ctx, call,
+                    "tuple(...) rebuild in a pytree walk that type-tests "
+                    "tuple: registered NamedTuple nodes would come back "
+                    "as anonymous tuples and change the treedef — guard "
+                    "with hasattr(node, '_fields') or rebuild via "
+                    "type(node)(*children)"))
+        return findings

@@ -1,0 +1,198 @@
+"""R003: trace-cache discipline for ``jax.jit``.
+
+PR 5's ``DriftMonitor`` built ``jax.jit(self._observe)`` inside its probe
+method: a fresh bound method each call means a fresh jit wrapper and a
+full retrace per probe. The cache only pays off when the jitted callable
+is created once and reused. Three shapes fire:
+
+* ``jax.jit(...)`` evaluated inside a ``for``/``while`` body — a new
+  wrapper (and trace) per iteration;
+* an immediately-invoked ``jax.jit(f)(args)`` inside a function — the
+  wrapper dies after one call, so every call of the enclosing function
+  retraces;
+* ``g = jax.jit(f)`` bound to a local AND called in the same function
+  body — same lifetime bug one line later. Factories that *return* the
+  wrapper, ``__init__`` methods stashing it on ``self``, and module-level
+  bindings all pass.
+
+A fourth shape guards the mutable-closure variant: a jitted inner
+function reading a name the enclosing scope bound to a ``list``/``dict``/
+``set`` literal — mutations after trace time are invisible to the
+compiled code.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_name,
+    dotted_name,
+    register,
+)
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and call_name(node) in _JIT_NAMES)
+
+
+def _walk_scope(root: ast.AST):
+    """Yield nodes of one scope, pruning nested function/class bodies."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda, ast.ClassDef)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _loop_bodies(fn: ast.AST):
+    for n in ast.walk(fn):
+        if isinstance(n, (ast.For, ast.While)):
+            yield n
+
+
+@register
+class TraceCacheDiscipline(Rule):
+    rule_id = "R003"
+    title = "jax.jit wrapper created per call / per iteration"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        flagged: set[int] = set()
+        self._check_loops(ctx, findings, flagged)
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_function(ctx, fn, findings, flagged)
+        self._check_mutable_closures(ctx, findings)
+        return findings
+
+    def _check_loops(self, ctx: ModuleContext, findings: list[Finding],
+                     flagged: set[int]) -> None:
+        for loop in _loop_bodies(ctx.tree):
+            for stmt in loop.body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue  # defs in loops get their own scan
+                for n in _walk_scope(stmt):
+                    if _is_jit_call(n) and id(n) not in flagged:
+                        flagged.add(id(n))
+                        findings.append(self.finding(
+                            ctx, n,
+                            "jax.jit evaluated inside a loop body — a "
+                            "fresh wrapper (and retrace) per iteration; "
+                            "hoist the jitted callable out of the loop"))
+
+    def _check_function(self, ctx: ModuleContext, fn: ast.AST,
+                        findings: list[Finding],
+                        flagged: set[int]) -> None:
+        jit_locals: dict[str, ast.Call] = {}
+        returned: set[str] = set()
+        for n in _walk_scope(fn):
+            # immediately-invoked jax.jit(f)(...)
+            if (isinstance(n, ast.Call) and _is_jit_call(n.func)
+                    and id(n.func) not in flagged):
+                flagged.add(id(n.func))
+                findings.append(self.finding(
+                    ctx, n,
+                    "immediately-invoked jax.jit(f)(...) inside a "
+                    "function — the wrapper (and its trace cache) dies "
+                    "after one call; bind it once at module/init scope"))
+            if isinstance(n, ast.Assign) and _is_jit_call(n.value):
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        jit_locals[t.id] = n.value
+            if isinstance(n, ast.Return) and n.value is not None:
+                # Only BARE returns make a factory: `return g` (or a
+                # tuple/dict of names). `return g(x)` still calls the
+                # wrapper before it dies, so it stays flagged.
+                vals = [n.value]
+                if isinstance(n.value, (ast.Tuple, ast.List)):
+                    vals = list(n.value.elts)
+                elif isinstance(n.value, ast.Dict):
+                    vals = [v for v in n.value.values if v is not None]
+                for r in vals:
+                    if isinstance(r, ast.Name):
+                        returned.add(r.id)
+        if not jit_locals:
+            return
+        if getattr(fn, "name", "") == "__init__":
+            return  # stashing on self: wrapper lives as long as the object
+        for n in _walk_scope(fn):
+            if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                    and n.func.id in jit_locals
+                    and n.func.id not in returned):
+                jc = jit_locals[n.func.id]
+                if id(jc) in flagged:
+                    continue
+                flagged.add(id(jc))
+                findings.append(self.finding(
+                    ctx, jc,
+                    f"jax.jit result '{n.func.id}' is created and called "
+                    f"within the same function — every call of the "
+                    f"enclosing function retraces; create the wrapper "
+                    f"once (module scope, __init__, or a returned "
+                    f"factory)"))
+
+    def _check_mutable_closures(self, ctx: ModuleContext,
+                                findings: list[Finding]) -> None:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            mutable: set[str] = set()
+            for n in _walk_scope(fn):
+                if isinstance(n, ast.Assign) and isinstance(
+                        n.value, (ast.List, ast.Dict, ast.Set)):
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            mutable.add(t.id)
+            if not mutable:
+                continue
+            for inner in ast.walk(fn):
+                if not isinstance(inner, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                    continue
+                if inner is fn or not self._is_jitted(fn, inner):
+                    continue
+                local = {a.arg for a in inner.args.args}
+                local |= {t.id for n in ast.walk(inner)
+                          if isinstance(n, ast.Assign)
+                          for t in n.targets if isinstance(t, ast.Name)}
+                for n in ast.walk(inner):
+                    if (isinstance(n, ast.Name)
+                            and isinstance(n.ctx, ast.Load)
+                            and n.id in mutable and n.id not in local):
+                        findings.append(self.finding(
+                            ctx, n,
+                            f"jitted inner function reads '{n.id}', a "
+                            f"mutable literal from the enclosing scope — "
+                            f"mutations after trace time are invisible "
+                            f"to the compiled code; pass it as an "
+                            f"argument or make it immutable"))
+                        break
+        return
+
+    @staticmethod
+    def _is_jitted(outer: ast.AST, inner: ast.AST) -> bool:
+        for d in getattr(inner, "decorator_list", ()):
+            name = dotted_name(d if not isinstance(d, ast.Call) else d.func)
+            if name in _JIT_NAMES:
+                return True
+            if isinstance(d, ast.Call) and call_name(d) in ("partial",
+                                                            "functools.partial"):
+                if d.args and dotted_name(d.args[0]) in _JIT_NAMES:
+                    return True
+        for n in ast.walk(outer):
+            if (isinstance(n, ast.Call) and call_name(n) in _JIT_NAMES
+                    and n.args and isinstance(n.args[0], ast.Name)
+                    and n.args[0].id == getattr(inner, "name", None)):
+                return True
+        return False

@@ -1,0 +1,240 @@
+"""Runtime sanitizer for the CIM datapath (``REPRO_SANITIZE=1``).
+
+The static rules (R001-R006) catch the bug *shapes*; this module checks
+the bitwise contracts themselves while an engine serves:
+
+* **Shadow execution** — every decode tick re-runs from the SAME inputs
+  (exec tree aside) through the reference einsum datapath
+  (``use_kernel=False``, plane-level programmed state) and asserts the
+  sampled tokens AND the logits are bitwise identical to the primary
+  path. Identical integer ADC codes imply identical recombines, so any
+  drift here means a broken exactness proof — exactly the class the
+  PR 7 sigma>0 parity gate guards, but live, against the engine's real
+  silicon state and cache.
+* **NaN / saturation tripwires** — :func:`repro.core.cim.adc_codes`
+  stages a debug callback per conversion while armed; a conversion
+  tensor containing NaN, or sitting entirely at full scale (the ADC
+  pegged: scales are wrong), raises at the step that produced it.
+* **cap_fixed integer-quanta invariant** — on every silicon refresh,
+  each attached cap/operand tensor must sit on the 2^-14 fixed-point
+  grid with per-conversion denominators far below 2^24 quanta; this is
+  the premise of every ``# exact-ok`` pragma on the einsum path.
+
+The sanitizer costs roughly a second full forward per tick plus host
+transfers — a debug mode, enabled by environment so production call
+sites carry no flag plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_ENV = "REPRO_SANITIZE"
+_TRUTHY = ("1", "true", "yes", "on")
+
+# Conversion tripwire records staged by adc_codes while armed:
+# (nan_fraction, saturated_fraction) per digitised tensor, drained by the
+# sanitizer (or a test) after the step that produced them completes.
+_TRIPWIRE_LOG: list[tuple[float, float]] = []
+_FORCE_ARMED = False
+
+
+def sanitize_enabled() -> bool:
+    return os.environ.get(_ENV, "").strip().lower() in _TRUTHY
+
+
+def tripwires_armed() -> bool:
+    """Read live at trace time: each engine owns a fresh jit cache, so
+    arming before the first step stages the callbacks for that engine."""
+    return _FORCE_ARMED or sanitize_enabled()
+
+
+def arm_tripwires(on: bool = True) -> None:
+    """Explicit arm/disarm for tests that bypass the environment."""
+    global _FORCE_ARMED
+    _FORCE_ARMED = on
+
+
+def stage_conversion_tripwire(codes: jax.Array, levels: float) -> None:
+    """Called from ``adc_codes`` under trace while armed."""
+    import jax.numpy as jnp
+
+    nan_frac = jnp.mean(jnp.isnan(codes).astype(jnp.float32))
+    sat_frac = jnp.mean((codes >= levels).astype(jnp.float32))
+
+    def record(nf, sf):
+        _TRIPWIRE_LOG.append((float(nf), float(sf)))
+
+    jax.debug.callback(record, nan_frac, sat_frac)
+
+
+def drain_tripwires() -> list[tuple[float, float]]:
+    out = list(_TRIPWIRE_LOG)
+    _TRIPWIRE_LOG.clear()
+    return out
+
+
+class SanitizeError(AssertionError):
+    """A bitwise datapath contract was violated at runtime."""
+
+
+def _tree_nodes(tree: Any, cls: type) -> list[Any]:
+    """All ``cls`` NamedTuple nodes in a params tree (dict/list/tuple
+    recursion; NamedTuples are leaves unless they ARE the target)."""
+    found: list[Any] = []
+
+    def walk(node: Any) -> None:
+        if isinstance(node, cls):
+            found.append(node)
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)) \
+                and not hasattr(node, "_fields"):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return found
+
+
+def check_cap_quanta(exec_params: Any) -> None:
+    """Assert the cap_fixed integer-quanta invariant over an exec tree.
+
+    Every silicon operand the datapath will contract against must be an
+    integer multiple of 2^-CAP_FIXED_BITS, and every per-conversion
+    denominator (the largest possible pre-ADC numerator) must stay below
+    2^24 quanta — the premise under which float32 contraction order
+    cannot matter.
+    """
+    from repro.core.cim import (CAP_FIXED_BITS, CimKernelSilicon,
+                                ProjectionSilicon, cap_fixed)
+    scale = 2.0 ** CAP_FIXED_BITS
+    budget = 2.0 ** 24
+
+    def must_be_quanta(arr: jax.Array, what: str) -> np.ndarray:
+        q = np.asarray(arr, dtype=np.float64) * scale
+        if not np.all(np.isfinite(q)):
+            raise SanitizeError(f"{what}: non-finite silicon operand")
+        if np.max(np.abs(q - np.round(q)), initial=0.0) != 0.0:
+            raise SanitizeError(
+                f"{what}: values are off the 2^-{CAP_FIXED_BITS} "
+                f"fixed-point grid — float32 contraction order is no "
+                f"longer provably irrelevant")
+        return q
+
+    for sil in _tree_nodes(exec_params, ProjectionSilicon):
+        for name in ("cap", "rx_cap"):
+            snapped = cap_fixed(getattr(sil, name))
+            q = must_be_quanta(snapped, f"ProjectionSilicon.{name}")
+            per_conv = np.sum(q, axis=-1)  # quanta per chunk conversion
+            if np.max(per_conv, initial=0.0) >= budget:
+                raise SanitizeError(
+                    f"ProjectionSilicon.{name}: a conversion denominator "
+                    f"reaches {np.max(per_conv):.3g} quanta >= 2^24 — "
+                    f"float32 partial sums can round")
+    for silk in _tree_nodes(exec_params, CimKernelSilicon):
+        for name in ("wpc", "gwc", "rxp"):
+            must_be_quanta(getattr(silk, name), f"CimKernelSilicon.{name}")
+        for name in ("den", "rx_den"):
+            q = must_be_quanta(getattr(silk, name),
+                               f"CimKernelSilicon.{name}")
+            if np.max(q, initial=0.0) >= budget:
+                raise SanitizeError(
+                    f"CimKernelSilicon.{name}: a conversion denominator "
+                    f"reaches {np.max(q):.3g} quanta >= 2^24 — float32 "
+                    f"partial sums can round")
+
+
+class ServeSanitizer:
+    """Shadow-execution harness attached to a :class:`ServeEngine`.
+
+    Owns a reference-datapath twin of the engine's config (fused kernel
+    off, lossless collapse off → the plane-level einsum pipeline), a
+    shadow programmed/exec tree kept in sync through the engine's
+    refresh path, and a jitted shadow step. ``check_step`` replays the
+    tick and compares bitwise.
+    """
+
+    def __init__(self, engine, temperature: float = 0.0):
+        from repro.serve.engine import make_serve_step
+        cim = dataclasses.replace(engine.cfg.mf.cim, use_kernel=False)
+        mf = dataclasses.replace(engine.cfg.mf, cim=cim)
+        self.cfg = dataclasses.replace(engine.cfg, mf=mf)
+        self._cim = cim
+        self.step_fn = jax.jit(make_serve_step(self.cfg,
+                                               temperature=temperature))
+        self._programmed_src: Optional[int] = None
+        self._shadow_programmed = None
+        self.shadow_exec = None
+        self.checked_steps = 0
+        self.refresh(engine)
+
+    def refresh(self, engine) -> None:
+        """Rebuild the shadow exec tree against the engine's CURRENT
+        programmed/silicon state; runs the quanta invariant on both."""
+        from repro.core.programmed import program_weights
+        if self._programmed_src != id(engine._programmed_params):
+            # Re-program only when the engine re-programmed (scales /
+            # swap changed); silicon-only refreshes reuse the state.
+            self._shadow_programmed = program_weights(
+                engine._base_params, self._cim,
+                scales=engine._last_scales, swap=engine._swap_map,
+                prefer_lossless=False)
+            self._programmed_src = id(engine._programmed_params)
+        if engine.silicon is None:
+            self.shadow_exec = self._shadow_programmed
+        else:
+            from repro.silicon.instance import attach_silicon
+            pinned = engine.schedule.pinned \
+                if engine.schedule is not None else True
+            self.shadow_exec = attach_silicon(
+                self._shadow_programmed, engine.silicon,
+                engine.silicon_cfg, self._cim, pinned=pinned)
+        check_cap_quanta(engine._exec_params)
+        check_cap_quanta(self.shadow_exec)
+
+    def check_step(self, engine, cache_before, tokens, rng, step,
+                   nxt, logits) -> None:
+        """Replay one decode tick through the reference datapath and
+        assert bitwise agreement; then inspect the tripwire log."""
+        s_nxt, s_logits, _ = self.step_fn(self.shadow_exec, cache_before,
+                                          tokens, rng, step)
+        h_logits = np.asarray(logits)
+        hs_logits = np.asarray(s_logits)
+        if np.any(np.isnan(h_logits)):
+            raise SanitizeError(
+                f"NaN logits at stream step {int(step)} on the primary "
+                f"datapath")
+        if not np.array_equal(h_logits, hs_logits):
+            bad = int(np.sum(h_logits != hs_logits))
+            i = np.unravel_index(
+                int(np.argmax(h_logits != hs_logits)), h_logits.shape)
+            raise SanitizeError(
+                f"fused/einsum divergence at stream step {int(step)}: "
+                f"{bad} logit(s) differ, first at {tuple(i)} "
+                f"(primary {h_logits[i]!r} vs reference {hs_logits[i]!r})"
+                f" — the exactness contract between the Pallas kernel "
+                f"path and the reference einsums is broken")
+        if not np.array_equal(np.asarray(nxt), np.asarray(s_nxt)):
+            raise SanitizeError(
+                f"sampled-token divergence at stream step {int(step)} "
+                f"despite equal logits — RNG threading differs between "
+                f"primary and shadow steps")
+        for nan_frac, sat_frac in drain_tripwires():
+            if nan_frac > 0.0:
+                raise SanitizeError(
+                    f"conversion tripwire: {nan_frac:.1%} NaN ADC codes "
+                    f"at stream step {int(step)}")
+            if sat_frac >= 1.0:
+                raise SanitizeError(
+                    f"conversion tripwire: a conversion tensor is fully "
+                    f"saturated at stream step {int(step)} — activation "
+                    f"scales are pegging the ADC")
+        self.checked_steps += 1

@@ -88,6 +88,10 @@ def strip_observer_ids(params: Any) -> Any:
             return {k: walk(v) for k, v in node.items()
                     if not (isinstance(k, str) and k.startswith("obs_id"))}
         if isinstance(node, tuple):
+            if hasattr(node, "_fields"):
+                # NamedTuple pytree nodes (ProgrammedMacro, ...) are
+                # leaves: a plain-tuple rebuild would change the treedef.
+                return node
             return tuple(walk(v) for v in node)
         if isinstance(node, list):
             return [walk(v) for v in node]
@@ -229,6 +233,7 @@ def collect_stats(forward_fn: Callable[[Any, Any], Any], tagged_params: Any,
     with tap.observing(collector):
         # Fresh jit per collector: traces (and stages the callbacks) on
         # the first batch of each shape, replays compiled thereafter.
+        # repro-lint: disable=R003 reason=one trace per collector tap, reused per batch
         jitted = jax.jit(lambda p, b: forward_fn(p, b))
         if devices is None:
             for batch in batches:

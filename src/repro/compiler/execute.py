@@ -24,6 +24,7 @@ and :func:`compiled_matmul_programmed` streams inputs through those
 programmed slices doing only step-time work — bit-exact against both
 on-the-fly paths.
 """
+# repro-lint: module=exactness-critical
 
 from __future__ import annotations
 

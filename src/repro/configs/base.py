@@ -7,7 +7,7 @@ Every assigned architecture is a `ModelConfig` in its own module under
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax.numpy as jnp
 

@@ -9,7 +9,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.configs.base import MFTechniqueConfig, MLAConfig, ModelConfig, MoEConfig
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
 
 CONFIG = ModelConfig(
     name="deepseek-v3-671b",

@@ -5,7 +5,6 @@ shape applicability, and ShapeDtypeStruct input specs for the dry-run.
 from __future__ import annotations
 
 import importlib
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +100,6 @@ def all_cells(smoke: bool = False):
     """Every (arch, shape) cell with applicability annotations."""
     cells = []
     for arch in ARCH_IDS:
-        cfg = get_config(arch, smoke=smoke)
         full = get_config(arch, smoke=False)
         for shape in LM_SHAPES:
             ok, reason = shape_applicability(full, shape)

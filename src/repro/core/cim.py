@@ -33,6 +33,7 @@ This path is forward-only hardware emulation; ``cim_mf_matmul_ste`` wraps it
 with a straight-through estimator whose backward is the float MF surrogate
 gradient, enabling hardware-in-the-loop QAT.
 """
+# repro-lint: module=exactness-critical,step-time
 
 from __future__ import annotations
 
@@ -123,7 +124,14 @@ def adc_codes(mav: jax.Array, adc_bits: int,
     """
     levels = 2 ** adc_bits - 1
     v = mav if comparator_offset is None else mav + comparator_offset
-    return jnp.clip(jnp.round(v * levels), 0, levels)
+    codes = jnp.clip(jnp.round(v * levels), 0, levels)
+    from repro.analysis import sanitize
+    if sanitize.tripwires_armed():
+        # REPRO_SANITIZE=1 only: stage a NaN/saturation tripwire callback
+        # per conversion (armed at trace time; each engine owns a fresh
+        # jit cache, so production traces carry no callback).
+        sanitize.stage_conversion_tripwire(codes, float(levels))
+    return codes
 
 
 def adc_quantize(mav: jax.Array, adc_bits: int,
@@ -319,6 +327,7 @@ def cim_program_weight_state(w: jax.Array, cfg: CimConfig,
     wt = jnp.transpose(wp, (2, 3, 0, 1)).astype(jnp.int8)        # (C, m, N, Pw)
     gw = _chunk(step_w.T, m, K)                                  # (N, C, m)
     gwt = jnp.transpose(gw, (1, 2, 0)).astype(jnp.int8)          # (C, m, N)
+    # exact-ok: integer |w_q| magnitudes, column sums below 2^24 — exact in f32
     r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]    # (1, N)
     return CimWeightState(wt, gwt, r_w)
 
@@ -408,14 +417,18 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
         # defined against the (B, N, Pw, C) ADC tensor layout.)
         inv = jnp.float32(m)
         # S1 = sum_k step(x_k) * |w|_kn  (Eq. 2b numerator)
+        # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
         counts1 = jnp.einsum("bcm,cmnp->cbnp", gx,
                              ws.wt.astype(jnp.float32))
         codes1 = adc(counts1 / inv)                              # (C, B, N, Pw)
+        # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
         s1c = jnp.einsum("cbnp,p->bn", codes1, pw)
         # S2 = sum_k step(w_kn) * |x|_k  (Eq. 2a numerator)
+        # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
         counts2 = jnp.einsum("qbcm,cmn->cqbn", xp,
                              ws.gwt.astype(jnp.float32))
         codes2 = adc(counts2 / inv)                              # (C, Px, B, N)
+        # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
         s2c = jnp.einsum("cqbn,q->bn", codes2, px)
         # R_x via the dummy all-ones row (shared across weight vectors).
         rxc = _nominal_rx(xp, cfg)                               # (B, 1)
@@ -430,18 +443,25 @@ def cim_input_partials(x2: jax.Array, ws: CimWeightState, cfg: CimConfig,
     else:
         cap = cap_fixed(_chunk(cap_weights.astype(jnp.float32)[None, :],
                                m, K)[0])
+    # exact-ok: 2^-14-grid caps; small fixed-point chunk sums — exact in f32
     cap_sum = jnp.sum(cap, axis=-1)                              # (C,)
     wp = jnp.transpose(ws.wt.astype(jnp.float32),
                        (2, 3, 0, 1))                             # (N, Pw, C, m)
     gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num1 = jnp.einsum("bcm,npcm,cm->bnpc", gx, wp, cap)
     codes1 = adc(num1 / cap_sum[None, None, None, :])            # (B, N, Pw, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num2 = jnp.einsum("pbcm,ncm,cm->pbnc", xp, gw, cap)
     codes2 = adc(num2 / cap_sum[None, None, None, :])            # (Px, B, N, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     s2c = jnp.einsum("pbnc,p->bn", codes2, px)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num_rx = jnp.einsum("pbcm,cm->pbc", xp, cap)
     codes_rx = adc(num_rx / cap_sum[None, None, :])              # (Px, B, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     rxc = jnp.einsum("pbc,p->b", codes_rx, px)[:, None]          # (B, 1)
     return CimPartials(s1c, s2c, rxc, ws.r_w)
 
@@ -464,11 +484,13 @@ def _silicon_partials(gx: jax.Array, xp: jax.Array, ws: CimWeightState,
             f"silicon cap shape {sil.cap.shape} does not match this "
             f"projection's ({n_out}, {nchunks}, {cfg.m_columns}) tiles")
     cap = cap_fixed(sil.cap)                                     # (N, C, m)
+    # exact-ok: 2^-14-grid caps; small fixed-point chunk sums — exact in f32
     cap_sum = jnp.sum(cap, axis=-1)                              # (N, C)
     off = sil.offset.astype(jnp.float32)                         # (N, C)
     wp = jnp.transpose(ws.wt.astype(jnp.float32),
                        (2, 3, 0, 1))                             # (N, Pw, C, m)
     gw = jnp.transpose(ws.gwt.astype(jnp.float32), (2, 0, 1))    # (N, C, m)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num1 = jnp.einsum("bcm,npcm,ncm->bnpc", gx, wp, cap)
     off1 = off[:, None, :]
     d1 = sil.dither(num1.shape, 1)
@@ -476,13 +498,16 @@ def _silicon_partials(gx: jax.Array, xp: jax.Array, ws: CimWeightState,
         off1 = off1 + d1
     codes1 = adc_codes(num1 / cap_sum[:, None, :], cfg.adc_bits,
                        off1)                                     # (B, N, Pw, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     s1c = jnp.einsum("bnpc,p->bn", codes1, pw)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num2 = jnp.einsum("qbcm,ncm,ncm->qbnc", xp, gw, cap)
     off2 = off
     d2 = sil.dither(num2.shape, 2)
     if d2 is not None:
         off2 = off2 + d2
     codes2 = adc_codes(num2 / cap_sum, cfg.adc_bits, off2)       # (Px, B, N, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     s2c = jnp.einsum("qbnc,q->bn", codes2, px)
     rxc = _silicon_rx(xp, cfg, sil)                              # (B, 1)
     return CimPartials(s1c, s2c, rxc, ws.r_w)
@@ -493,7 +518,9 @@ def _silicon_rx(xp: jax.Array, cfg: CimConfig, sil: ProjectionSilicon
     """|x| dummy-row code sum digitised by the per-chunk rx instances."""
     px = 2.0 ** jnp.arange(cfg.x_planes)
     rx_cap = cap_fixed(sil.rx_cap)                               # (C, m)
+    # exact-ok: 2^-14-grid caps; small fixed-point chunk sums — exact in f32
     rx_sum = jnp.sum(rx_cap, axis=-1)                            # (C,)
+    # exact-ok: {0,1} bits x 2^-14-grid caps; integer quanta < 2^24 — exact in f32
     num_rx = jnp.einsum("qbcm,cm->qbc", xp, rx_cap)
     off_rx = sil.rx_offset.astype(jnp.float32)
     d_rx = sil.dither(num_rx.shape, 3)
@@ -501,6 +528,7 @@ def _silicon_rx(xp: jax.Array, cfg: CimConfig, sil: ProjectionSilicon
         off_rx = off_rx + d_rx
     codes_rx = adc_codes(num_rx / rx_sum, cfg.adc_bits,
                          off_rx)                                 # (Px, B, C)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     return jnp.einsum("qbc,q->b", codes_rx, px)[:, None]         # (B, 1)
 
 
@@ -512,9 +540,11 @@ def _nominal_rx(xp: jax.Array, cfg: CimConfig) -> jax.Array:
     bit-identity structural rather than hand-synchronised.
     """
     px = 2.0 ** jnp.arange(cfg.x_planes)
+    # exact-ok: {0,1} x-plane bits -> integer counts — exact in f32
     counts_rx = jnp.sum(xp, axis=-1)                             # (Px, B, C)
     codes_rx = adc_codes(counts_rx / jnp.float32(cfg.m_columns),
                          cfg.adc_bits)
+    # exact-ok: integer ADC codes x power-of-two plane weights — exact in f32
     return jnp.einsum("pbc,p->b", codes_rx, px)[:, None]         # (B, 1)
 
 
@@ -600,6 +630,7 @@ def cim_program_kernel_state(w: jax.Array, cfg: CimConfig,
     step_w, abs_w, w_planes = _weight_operands(w, cfg, sw)
     gw_packed = kops.pack_chunks(step_w.T, cfg.m_columns)
     wp_packed = kops.pack_planes(w_planes, cfg.m_columns)
+    # exact-ok: integer |w_q| magnitudes, column sums below 2^24 — exact in f32
     r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
     rx_gates = kops.pack_chunks(jnp.ones((1, K), jnp.float32), cfg.m_columns)
     return CimKernelState(gw_packed, wp_packed, r_w, rx_gates)
@@ -721,11 +752,13 @@ def cim_program_silicon(ks: CimKernelState, sil: ProjectionSilicon,
     capk = jnp.swapaxes(kops.pack_chunked(capq, m), -1, -2)      # (...,Kp,N)
     wpc = ks.wp_packed.astype(jnp.float32) * capk[..., None, :, :]
     gwc = jnp.swapaxes(ks.gw_packed.astype(jnp.float32), -1, -2) * capk
+    # exact-ok: 2^-14-grid caps; small fixed-point chunk sums — exact in f32
     den = _pad_axis(jnp.swapaxes(jnp.sum(capq, -1), -1, -2), -2, cpad, 1.0)
     off = _pad_axis(jnp.swapaxes(sil.offset.astype(jnp.float32), -1, -2),
                     -2, cpad, 0.0)
     rxq = cap_fixed(sil.rx_cap)                                  # (..., C, m)
     rxp = kops.pack_chunked(rxq, m)                              # (..., Kp)
+    # exact-ok: 2^-14-grid caps; small fixed-point chunk sums — exact in f32
     rx_den = _pad_axis(jnp.sum(rxq, -1), -1, cpad, 1.0)
     rx_off = _pad_axis(sil.rx_offset.astype(jnp.float32), -1, cpad, 0.0)
     return CimKernelSilicon(wpc, gwc, den, off, rxp, rx_den, rx_off)

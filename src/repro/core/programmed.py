@@ -37,6 +37,7 @@ modelling choice (hardware cannot re-calibrate the input DAC per batch);
 per-projection scales through the ``scales=`` hook below — see
 EXPERIMENTS.md "Corpus-driven activation calibration".
 """
+# repro-lint: module=exactness-critical
 
 from __future__ import annotations
 
@@ -104,6 +105,7 @@ def pack_weight_state(ws: CimWeightState, cfg: CimConfig) -> CimPackedPlanes:
     """Pack chunked {0,1} plane/gate cells into one byte per cell."""
     _check_packable(cfg)
     bits = jnp.arange(cfg.w_planes, dtype=jnp.int32)
+    # exact-ok: int32 shift-sum of {0,1} plane bits — integer arithmetic
     mag = jnp.sum(ws.wt.astype(jnp.int32) << bits, axis=-1)      # (C, m, N)
     packed = mag | (ws.gwt.astype(jnp.int32) << _SIGN_BIT)
     return CimPackedPlanes(packed.astype(jnp.uint8), ws.r_w)
@@ -228,6 +230,7 @@ def program_macro(w: jax.Array, cfg: CimConfig, *, sx, sw=None,
     _check_packable(cfg)
     if prefer_lossless and adc_exactly_lossless(cfg) and dac_gains is None:
         step_w, abs_w, _ = _weight_operands(w, cfg, sw)
+        # exact-ok: integer |w_q| magnitudes, column sums below 2^24 — exact in f32
         r_w = jnp.sum(abs_w, axis=0).astype(jnp.float32)[None, :]
         packed = (abs_w.astype(jnp.int32)
                   | (step_w.astype(jnp.int32) << _SIGN_BIT))
@@ -249,8 +252,11 @@ def _lossless_partials(x2: jax.Array, ls: CimLosslessState, cfg: CimConfig,
     ``cim_mf_recombine``.
     """
     step_x, abs_x, _ = _input_operands(x2, cfg, sx)
+    # exact-ok: integer-valued f32 operands below 2^24 — exact matmul
     s1c = step_x @ ls.magnitudes()                             # (B, N)
+    # exact-ok: integer-valued f32 operands below 2^24 — exact matmul
     s2c = abs_x.astype(jnp.float32) @ ls.gates()
+    # exact-ok: integer |x_q| magnitudes, row sums below 2^24 — exact in f32
     rxc = jnp.sum(abs_x, axis=-1, keepdims=True).astype(jnp.float32)
     return CimPartials(s1c, s2c, rxc, r_w)
 
@@ -346,6 +352,7 @@ class ProgrammedLayer(NamedTuple):
 
     @property
     def n_tiles(self) -> int:
+        # exact-ok: host-side integer byte/count arithmetic
         return sum(len(row) for row in self.tiles)
 
 
@@ -586,6 +593,11 @@ def map_projections(params: Any, fn: Callable[[str, dict, str], dict]) -> Any:
         if isinstance(node, dict):
             return {k: walk(v, path + (str(k),)) for k, v in node.items()}
         if isinstance(node, tuple):
+            if hasattr(node, "_fields"):
+                # NamedTuple pytree nodes are leaves here: they hold
+                # arrays, never projection dicts, and a plain-tuple
+                # rebuild would corrupt the treedef.
+                return node
             return tuple(walk(v, path + (str(i),))
                          for i, v in enumerate(node))
         if isinstance(node, list):
@@ -774,6 +786,7 @@ def programmed_bytes(params: Any) -> int:
 
     def count(v):
         nonlocal total
+        # exact-ok: host-side integer byte/count arithmetic
         total += sum(leaf.size * leaf.dtype.itemsize
                      for leaf in jax.tree.leaves(v))
 
@@ -807,6 +820,7 @@ def programmed_bytes_unpacked(params: Any, cfg: CimConfig) -> int:
             if pm.lossless is not None:
                 total += pm.lossless.packed.size * 2
             if pm.kernel is not None:
+                # exact-ok: host-side integer byte/count arithmetic
                 total += sum(leaf.size * leaf.dtype.itemsize
                              for leaf in jax.tree.leaves(pm.kernel))
 

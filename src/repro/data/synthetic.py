@@ -17,7 +17,7 @@ Tasks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

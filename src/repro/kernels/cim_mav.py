@@ -32,6 +32,7 @@ denominator, comparator offset, and optional per-conversion thermal dither
 ride as extra operands — the full SA-ADC instance evaluates *inside* the
 kernel, so sigma>0 fleets never fall back to the reference einsums.
 """
+# repro-lint: module=exactness-critical
 
 from __future__ import annotations
 
@@ -62,6 +63,7 @@ def _cim_mav_kernel(g_ref, p_ref, o_ref, acc_ref, *, m_columns: int,
     for s in range(CHUNKS_PER_TILE):
         gs = g[:, s * CHUNK_PAD:(s + 1) * CHUNK_PAD]
         ps = p[s * CHUNK_PAD:(s + 1) * CHUNK_PAD, :]
+        # exact-ok: {0,1} gate x plane-bit/grid-cap operands — exact in f32
         counts = jnp.dot(gs, ps, preferred_element_type=jnp.float32)
         mav = counts * inv_m
         code = jnp.clip(jnp.round(mav * adc_levels), 0.0, adc_levels)
@@ -138,6 +140,7 @@ def _cim_mav_sil_kernel(*refs, adc_levels: int, n_planes: int, c_steps: int,
     for s in range(CHUNKS_PER_TILE):
         gs = g[:, s * CHUNK_PAD:(s + 1) * CHUNK_PAD]
         ps = p[s * CHUNK_PAD:(s + 1) * CHUNK_PAD, :]
+        # exact-ok: {0,1} gate x plane-bit/grid-cap operands — exact in f32
         num = jnp.dot(gs, ps, preferred_element_type=jnp.float32)
         mav = num / den_ref[s:s + 1, :]
         off = off_ref[s:s + 1, :]

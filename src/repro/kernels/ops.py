@@ -5,14 +5,13 @@ selection, and the CPU fallback (interpret mode) so models can call these
 unconditionally. On CPU hosts (tests, this container) the kernels run in
 interpret mode; on TPU they compile to Mosaic.
 """
+# repro-lint: module=exactness-critical
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.cim_mav import (CHUNK_PAD, CHUNKS_PER_TILE,
                                    cim_mav_pallas, cim_mav_sil_pallas)

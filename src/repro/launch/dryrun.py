@@ -17,7 +17,6 @@ import traceback
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (LM_SHAPES, ModelConfig, ParallelConfig,

@@ -13,6 +13,40 @@ from __future__ import annotations
 import jax
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``shard_map``.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (with the replication check
+    spelled ``check_vma``); on 0.4.x the public symbol raises
+    AttributeError through the deprecation shim and the implementation
+    lives at ``jax.experimental.shard_map.shard_map`` with the check
+    spelled ``check_rep``. Model code calls this wrapper so both runtimes
+    lower the same programs.
+    """
+    sm = getattr(jax, "shard_map", None)
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if sm is not None:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return sm(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as sm_old
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return sm_old(f, **kwargs)
+
+
+def axis_size(name) -> int:
+    """Static size of a bound mesh axis, inside ``shard_map``.
+
+    ``jax.lax.axis_size`` only exists from jax 0.5; on 0.4.x the axis
+    environment exposes the same static int via ``jax.core.axis_frame``.
+    """
+    sz = getattr(jax.lax, "axis_size", None)
+    if sz is not None:
+        return sz(name)
+    return jax.core.axis_frame(name)
+
+
 def auto_axis_types(n_axes: int) -> dict:
     """``axis_types`` kwargs for ``jax.make_mesh``, if this jax has them.
 

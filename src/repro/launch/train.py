@@ -8,7 +8,6 @@ loop is restart-safe: checkpoints + stateless data make `--resume` exact.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -67,6 +66,7 @@ def main() -> None:
             state = ckpt_mod.restore(args.ckpt_dir, state, step=start_step)
             print(f"[train] resumed from step {start_step}")
 
+    # repro-lint: disable=R003 reason=built once per process, reused across steps
     step_fn = jax.jit(TL.make_train_step(cfg, pcfg, tcfg),
                       donate_argnums=(0,))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,

@@ -53,7 +53,7 @@ from typing import ClassVar, Optional
 
 import jax
 
-from repro.core.cim import CimConfig, ProjectionSilicon, adc_codes
+from repro.core.cim import CimConfig, adc_codes
 from repro.core.energy import (DEFAULT_MACRO, MacroParams, unit_op_cycles,
                                unit_op_energy_j)
 from repro.silicon import instance as inst

@@ -26,6 +26,7 @@ macro area. The price is latency: the shared SAR serialises a short
 arbitration tail over the lending neighbours each unit op, and every
 conversion charges the bridge switching.
 """
+# repro-lint: module=deterministic
 
 from __future__ import annotations
 

@@ -19,6 +19,7 @@ protocol hooks:
     ``mav_energy_scale`` while the SAR digitisation term is unchanged
     (same comparator + SAR back end).
 """
+# repro-lint: module=deterministic
 
 from __future__ import annotations
 

@@ -18,7 +18,7 @@ pre-registry physics), a string resolves through the registry, and a
 
 from __future__ import annotations
 
-from typing import Callable, Type, Union
+from typing import Type, Union
 
 from repro.macros.base import MacroModel
 from repro.silicon.instance import SiliconConfig

@@ -14,6 +14,7 @@ parasitic capacitance of the half it serves, so the per-slot
 digitisation area is just comparator + SAR logic + calibration DAC (no
 explicit capacitor array), and the cell is the plain 6T bit cell.
 """
+# repro-lint: module=deterministic
 
 from __future__ import annotations
 

@@ -19,7 +19,6 @@ stats feed the Fig. 9 mapping tables.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Optional, Sequence
 
 import jax
@@ -28,7 +27,7 @@ import jax.numpy as jnp
 from repro.calib import tap as _calib_tap
 from repro.core.cim import CimConfig
 from repro.core.mapping import LayerStat
-from repro.core.mf import ExecMode, mf_conv2d, mf_correlate_ref, mf_matmul
+from repro.core.mf import ExecMode, mf_conv2d, mf_correlate_ref
 from repro.core import cim as cim_mod
 from repro.models import blocks
 

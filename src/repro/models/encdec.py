@@ -9,13 +9,11 @@ MF-able like every other arch.
 
 from __future__ import annotations
 
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.mf import ExecMode
 from repro.models import attention, blocks
 from repro.models.transformer import ParallelContext, resolve_modes, _mf_kw
 
@@ -235,7 +233,6 @@ def encdec_decode_step(params: dict, cache: dict, tokens: jax.Array,
     """One decoder step against precomputed cross K/V."""
     modes = resolve_modes(cfg)
     kw = _mf_kw(cfg)
-    b = tokens.shape[0]
     x = blocks.embed_apply(params["embed"], tokens[:, None])
     max_len = cache["self"]["k"].shape[2]
     table = _sinusoid(max_len, cfg.d_model)

@@ -19,7 +19,6 @@ routers, gates and the LM head are always the typical operator.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -176,7 +175,8 @@ def _moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, pctx: ParallelContext,
               "experts": expert_specs}
     if "shared" in p:
         pspecs["shared"] = jax.tree.map(lambda _: P(), p["shared"])
-    return jax.shard_map(
+    from repro.launch.mesh import shard_map
+    return shard_map(
         ep_fn, mesh=pctx.mesh,
         in_specs=(pspecs, x_spec),
         out_specs=(out_spec, P()),

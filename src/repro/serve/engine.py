@@ -308,6 +308,14 @@ class ServeEngine:
         self._retrim_coarse = 0
         self._retired_slots = 0
         self.last_report: Optional[ServeReport] = None
+        # Runtime sanitizer (REPRO_SANITIZE=1): shadow-execute every
+        # decode tick through the reference einsum datapath and assert
+        # bitwise agreement (see repro.analysis.sanitize).
+        self._sanitizer = None
+        from repro.analysis.sanitize import sanitize_enabled
+        if sanitize_enabled() and self.programmed:
+            from repro.analysis.sanitize import ServeSanitizer
+            self._sanitizer = ServeSanitizer(self, temperature=temperature)
         if drift is not None:
             from repro.silicon.drift import DriftMonitor
             self._monitor = DriftMonitor(cfg, params, drift, self._registry,
@@ -325,6 +333,7 @@ class ServeEngine:
         fused kernel operands (``attach_silicon``'s ``silk`` entries), so
         sigma>0 fleets decode on the fused fast path."""
         from repro.core.programmed import program_weights
+        self._last_scales = scales   # the shadow sanitizer re-programs with these
         self._programmed_params = program_weights(
             self._base_params, self.cfg.mf.cim, scales=scales,
             swap=self._swap_map, prefer_lossless=self.silicon is None)
@@ -343,9 +352,12 @@ class ServeEngine:
                 self._programmed_params, self.silicon, self.silicon_cfg,
                 self.cfg.mf.cim, pinned=pinned)
         # getattr: _refresh_silicon first runs from __init__ before the
-        # hook list exists.
+        # hook list (and the sanitizer) exist.
         for hook in getattr(self, "exec_refresh_hooks", ()):
             hook(self)
+        san = getattr(self, "_sanitizer", None)
+        if san is not None:
+            san.refresh(self)
 
     def _compile_fleet_schedule(self):
         """Compile the model's projections onto the fleet; returns the
@@ -494,9 +506,14 @@ class ServeEngine:
         """One engine tick: decode every occupied slot by one token."""
         self._rng, sub = jax.random.split(self._rng)
         tokens = jnp.asarray(self._feed)
-        nxt, _, self.cache = self.step_fn(self._exec_params, self.cache,
-                                          tokens, sub,
-                                          jnp.int32(self.stream_index))
+        step_idx = jnp.int32(self.stream_index)
+        cache_before = self.cache if self._sanitizer is not None else None
+        nxt, logits, self.cache = self.step_fn(self._exec_params,
+                                               self.cache, tokens, sub,
+                                               step_idx)
+        if self._sanitizer is not None:
+            self._sanitizer.check_step(self, cache_before, tokens, sub,
+                                       step_idx, nxt, logits)
         self._decode_steps += 1
         nxt = np.asarray(nxt)
         for s, req in enumerate(self.requests):

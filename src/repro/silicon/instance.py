@@ -38,6 +38,7 @@ cumulative tile offset for pinned models and 0 for swapped execution,
 whose rounds always fill slots from 0. ``attach_silicon`` applies this
 walk-order convention across a whole parameter tree.
 """
+# repro-lint: module=deterministic
 
 from __future__ import annotations
 

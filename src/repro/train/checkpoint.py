@@ -22,7 +22,6 @@ Properties:
 
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import threading

@@ -12,8 +12,7 @@ API mirrors the (init, update) pair convention:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ exactly this function for the train_4k cells.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

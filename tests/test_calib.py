@@ -88,6 +88,7 @@ class TestObserverSemantics:
     def test_update_under_jit(self):
         x = jax.random.normal(jax.random.PRNGKey(0), (6, 4))
         eager = observer_update(observer_init(OBS), x, OBS)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         jitted = jax.jit(lambda s, v: observer_update(s, v, OBS))(
             observer_init(OBS), x)
         np.testing.assert_array_equal(np.asarray(eager.hist),
@@ -303,6 +304,7 @@ class TestScaleProgramming:
         pa = program_weights(params, cfg.mf.cim)
         pb = program_weights(params, cfg.mf.cim, scales=scales)
         cache = T.lm_init_cache(cfg, 2, 8)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
         la, _ = step(pa, cache, jnp.array([1, 2]))
         cache = T.lm_init_cache(cfg, 2, 8)
@@ -440,6 +442,7 @@ class TestPerChannelCalibration:
         assert node["prog"].dac_gains is not None
         assert node["prog"].sx.shape == registry.entries[first][1]
         cache = T.lm_init_cache(cfg, 2, 8)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         logits, _ = jax.jit(
             lambda p, c, t: T.lm_decode_step(p, c, t, cfg))(
                 progd, cache, jnp.array([1, 2]))
@@ -635,6 +638,7 @@ class TestTrainedCalibration:
         from repro.train import train_loop as TL
         tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
         state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
                                           tcfg))
         dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=8,

@@ -9,8 +9,8 @@ import numpy as np
 import pytest
 
 from repro.compiler import (Fleet, compile_model, compiled_matmul,
-                            layer_cost, layer_table, lm_layer_stats,
-                            model_cost, plan_tiling, rollup, rollup_summary,
+                            layer_table, lm_layer_stats, model_cost,
+                            plan_tiling, rollup_summary,
                             schedule_layer, verify_bit_exact)
 from repro.core import (CimConfig, ExecMode, FleetMappingPolicy, LayerStat,
                         cim_mf_matmul, unit_op_energy_j)

@@ -1,7 +1,6 @@
 """Eq. 4 energy/latency model + mixed-mapping policy tests."""
 
 import numpy as np
-import pytest
 
 from repro.core import (CimConfig, LayerStat, MappingPolicy, ExecMode,
                         mixed_system_tops_per_watt, plan_mapping,

@@ -10,7 +10,6 @@ except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (hw_sign, mf_correlate_ref, mf_correlate_step_form,
                         mf_matmul, mf_conv2d)

@@ -54,6 +54,7 @@ def test_smoke_forward_and_train_step(arch):
         assert logits.shape == (BATCH, exp_t, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
+    # repro-lint: disable=R003 reason=one-shot test body wrapper
     step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
                                       tcfg))
     state2, metrics = step(state, batch)
@@ -88,6 +89,7 @@ def test_smoke_decode_step(arch):
     params = T.lm_init(jax.random.PRNGKey(0), cfg)
     cache = T.lm_init_cache(cfg, BATCH, 16)
     tok = jnp.zeros((BATCH,), jnp.int32)
+    # repro-lint: disable=R003 reason=one-shot test body wrapper
     step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
     for _ in range(3):
         logits, cache = step(params, cache, tok)
@@ -140,6 +142,7 @@ def test_loss_decreases_with_mf():
     cfg = dataclasses.replace(cfg, dtype=jnp.float32)
     tcfg = TrainConfig(lr=3e-3, warmup_steps=3, total_steps=40)
     state = TL.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    # repro-lint: disable=R003 reason=one-shot test body wrapper
     step = jax.jit(TL.make_train_step(cfg, ParallelConfig(remat="none"),
                                       tcfg))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,

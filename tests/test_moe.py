@@ -25,7 +25,6 @@ class TestRouter:
 
     def test_aux_loss_penalises_collapse(self):
         # all tokens to one expert -> aux ~ E; uniform -> aux ~ 1
-        p = _params(jax.random.PRNGKey(0))
         e = 4
         probs_collapsed = jnp.zeros((8, e)).at[:, 0].set(1.0)
         me = jnp.mean(probs_collapsed, axis=0)
@@ -155,7 +154,6 @@ class TestProgrammedExperts:
     def test_default_programming_covers_experts_in_model(self):
         # End to end: a MoE ModelConfig programs at engine construction
         # and decodes from expert macro state.
-        import dataclasses
         from repro.configs.base import (MFTechniqueConfig, ModelConfig,
                                         MoEConfig)
         from repro.core.cim import CimConfig
@@ -173,6 +171,7 @@ class TestProgrammedExperts:
         layer_moe = pp["layers"][0]["moe"]["experts"]
         assert {"prog_up", "prog_gate", "prog_down"} <= set(layer_moe)
         cache = T.lm_init_cache(cfg, 2, 8)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         step = jax.jit(lambda p_, c, t: T.lm_decode_step(p_, c, t, cfg))
         logits, _ = step(pp, cache, jnp.array([1, 2]))
         assert logits.shape == (2, 64)

@@ -1,20 +1,17 @@
 """Distribution-layer tests: sharding rules + a multi-device subprocess
 check of the EP MoE and a miniature production-mesh dry-run."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, MoEConfig, ParallelConfig, TrainConfig
+from repro.configs.base import ParallelConfig
 from repro.configs.registry import get_config
-from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
 from repro.parallel import sharding as shd
 

@@ -162,6 +162,7 @@ class TestModelProgramming:
         assert jax.tree.structure(strip_programmed(pp)) == \
             jax.tree.structure(params)
         cache = T.lm_init_cache(cfg, 2, 8)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
         logits, _ = step(pp, cache, jnp.array([1, 2]))
         assert logits.shape == (2, 64)
@@ -173,6 +174,7 @@ class TestModelProgramming:
         from repro.models import transformer as T
         cfg = self._cfg()
         params = T.lm_init(jax.random.PRNGKey(0), cfg)
+        # repro-lint: disable=R003 reason=one-shot test body wrapper
         step = jax.jit(lambda p, c, t: T.lm_decode_step(p, c, t, cfg))
         outs = []
         for _ in range(2):

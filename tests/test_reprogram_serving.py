@@ -16,17 +16,15 @@ The contracts under test:
   * ``collect_stats`` traces the observe forward once per batch shape.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.compiler.schedule import compile_model, schedule_layer
+from repro.compiler.schedule import schedule_layer
 from repro.compiler.tiling import Fleet
 from repro.configs.base import MFTechniqueConfig, ModelConfig
-from repro.core import quant
 from repro.core.cim import CimConfig
 from repro.core.programmed import (SwappedMacro, build_swap_schedule,
                                    cim_mf_matmul_programmed,

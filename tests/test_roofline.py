@@ -7,7 +7,6 @@ except ImportError:  # deterministic fallback, see tests/_hypothesis_stub.py
     from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline import analysis as R
 

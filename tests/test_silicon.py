@@ -25,7 +25,7 @@ from repro.core.cim import CimConfig, cim_mf_matmul
 from repro.core.programmed import (cim_mf_matmul_programmed,
                                    cim_mf_matmul_swapped, program_macro,
                                    swap_macro)
-from repro.silicon import (SiliconConfig, attach_silicon, fleet_silicon,
+from repro.silicon import (SiliconConfig, attach_silicon,
                            merge, projection_silicon,
                            recalibrate_comparators, sample_fleet,
                            strip_silicon)

@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import (MFTechniqueConfig, ModelConfig,
-                                ParallelConfig, TrainConfig)
+from repro.configs.base import (ModelConfig, ParallelConfig,
+                                TrainConfig)
 from repro.data.synthetic import DataConfig, image_batch, lm_batch
 from repro.models import transformer as T
 from repro.train import checkpoint as ckpt

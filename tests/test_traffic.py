@@ -17,7 +17,6 @@ The contracts under test:
   * sharded ``collect_stats`` merges per-device observer states exactly.
 """
 
-import dataclasses
 import os
 import subprocess
 import sys
