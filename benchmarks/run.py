@@ -25,6 +25,7 @@ SUITES = (
     "silicon_report",
     "macro_report",
     "roofline_report",
+    "obs_report",
 )
 
 

@@ -18,6 +18,10 @@
 # TIER1_MACRO_BENCH=1 additionally runs the macro-zoo smoke (registry
 # parity, collaborative area re-budget + compiler tile shrink, MC yield
 # over macro models, tiered re-trim aging) and leaves BENCH_macros.json.
+# TIER1_OBS_BENCH=1 additionally runs the observability smoke (tracing
+# disabled = bitwise decode parity, tracing <= 5% tok/s overhead, drift
+# alarm -> retrim/retire -> recal story reconstructed from the exported
+# trace) and leaves BENCH_obs.json + BENCH_obs_trace.jsonl.
 # TIER1_LINT=1 additionally gates on the static passes: repro-lint
 # (python -m repro.analysis, zero unsuppressed findings vs the shrink-only
 # analysis_baseline.json) and ruff when it is installed.
@@ -52,4 +56,7 @@ if [[ "${TIER1_KERNEL_BENCH:-0}" == "1" ]]; then
 fi
 if [[ "${TIER1_MACRO_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.macro_report --smoke
+fi
+if [[ "${TIER1_OBS_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.obs_report --smoke
 fi

@@ -83,6 +83,18 @@ class SanitizeError(AssertionError):
     """A bitwise datapath contract was violated at runtime."""
 
 
+def _finding(msg: str, *, check: str, stream: Optional[int] = None,
+             **data: Any) -> SanitizeError:
+    """Record a sanitizer finding on the telemetry bus (kind
+    ``sanitize``), then hand back the error to raise — a crash-stopped
+    serve leaves its last finding in the exported trace next to the
+    events that led up to it."""
+    from repro.obs import trace as obs_trace
+    obs_trace.emit("sanitize", stream=stream, check=check, error=msg,
+                   **data)
+    return SanitizeError(msg)
+
+
 def _tree_nodes(tree: Any, cls: type) -> list[Any]:
     """All ``cls`` NamedTuple nodes in a params tree (dict/list/tuple
     recursion; NamedTuples are leaves unless they ARE the target)."""
@@ -209,32 +221,38 @@ class ServeSanitizer:
         h_logits = np.asarray(logits)
         hs_logits = np.asarray(s_logits)
         if np.any(np.isnan(h_logits)):
-            raise SanitizeError(
+            raise _finding(
                 f"NaN logits at stream step {int(step)} on the primary "
-                f"datapath")
+                f"datapath", check="nan_logits", stream=int(step))
         if not np.array_equal(h_logits, hs_logits):
             bad = int(np.sum(h_logits != hs_logits))
             i = np.unravel_index(
                 int(np.argmax(h_logits != hs_logits)), h_logits.shape)
-            raise SanitizeError(
+            raise _finding(
                 f"fused/einsum divergence at stream step {int(step)}: "
                 f"{bad} logit(s) differ, first at {tuple(i)} "
                 f"(primary {h_logits[i]!r} vs reference {hs_logits[i]!r})"
                 f" — the exactness contract between the Pallas kernel "
-                f"path and the reference einsums is broken")
+                f"path and the reference einsums is broken",
+                check="logit_divergence", stream=int(step), n_diff=bad)
         if not np.array_equal(np.asarray(nxt), np.asarray(s_nxt)):
-            raise SanitizeError(
+            raise _finding(
                 f"sampled-token divergence at stream step {int(step)} "
                 f"despite equal logits — RNG threading differs between "
-                f"primary and shadow steps")
+                f"primary and shadow steps",
+                check="token_divergence", stream=int(step))
         for nan_frac, sat_frac in drain_tripwires():
             if nan_frac > 0.0:
-                raise SanitizeError(
+                raise _finding(
                     f"conversion tripwire: {nan_frac:.1%} NaN ADC codes "
-                    f"at stream step {int(step)}")
+                    f"at stream step {int(step)}",
+                    check="nan_codes", stream=int(step),
+                    nan_frac=nan_frac)
             if sat_frac >= 1.0:
-                raise SanitizeError(
+                raise _finding(
                     f"conversion tripwire: a conversion tensor is fully "
                     f"saturated at stream step {int(step)} — activation "
-                    f"scales are pegging the ADC")
+                    f"scales are pegging the ADC",
+                    check="saturation", stream=int(step),
+                    sat_frac=sat_frac)
         self.checked_steps += 1

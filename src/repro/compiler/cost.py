@@ -157,6 +157,15 @@ class ServeReloadCost:
     reload_energy_j: float      # bits x SRAM write energy (Eq. 4b term)
     reload_s: float             # bits / load-port bandwidth, serialised
 
+    def to_payload(self) -> dict:
+        """JSON-safe Eq. 4 figures for telemetry (``repro.obs``) trace
+        events — nJ / µs, the natural scale of a per-stream charge."""
+        return {"streams": self.streams,
+                "reprogram_events": self.reprogram_events,
+                "reload_bits": self.reload_bits,
+                "reload_energy_nj": self.reload_energy_j * 1e9,
+                "reload_us": self.reload_s * 1e6}
+
 
 def serve_reload_cost(msched: ModelSchedule, streams: int) -> ServeReloadCost:
     """Charge the schedule's reprogram events against ``streams`` decode

@@ -1,0 +1,125 @@
+"""Exports: Prometheus text exposition for metrics, JSONL for traces.
+
+Both formats round-trip (``parse_prometheus`` /
+:func:`read_trace_jsonl`), which is what the CI artifacts and the test
+suite pin — an exported telemetry file is a faithful, loss-bounded
+serialisation of the in-process state, not a pretty-print.
+
+Prometheus exposition follows the text format version 0.0.4: ``# HELP``
+/ ``# TYPE`` headers, histogram ``_bucket{le="..."}`` series with a
+cumulative ``+Inf`` bucket, ``_sum`` and ``_count``. Floats are
+serialised with ``repr`` so parsing recovers them exactly.
+"""
+# repro-lint: module=observability
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Iterable, Union
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import TraceBuffer, TraceEvent
+
+
+def _fmt(v: float) -> str:
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _esc(s: str) -> str:
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def to_prometheus(registry: MetricsRegistry) -> str:
+    """Text exposition of every registered metric (stable name order)."""
+    lines: list[str] = []
+    for m in registry.metrics():
+        if m.help:
+            lines.append(f"# HELP {m.name} {_esc(m.help)}")
+        lines.append(f"# TYPE {m.name} {m.kind}")
+        if isinstance(m, (Counter, Gauge)):
+            lines.append(f"{m.name} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            cum = 0.0
+            for edge, c in zip(m.edges, m.counts):
+                cum += float(c)
+                lines.append(
+                    f'{m.name}_bucket{{le="{_fmt(edge)}"}} {_fmt(cum)}')
+            cum += float(m.counts[-1])
+            lines.append(f'{m.name}_bucket{{le="+Inf"}} {_fmt(cum)}')
+            lines.append(f"{m.name}_sum {_fmt(m.sum)}")
+            lines.append(f"{m.name}_count {_fmt(cum)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def parse_prometheus(text: str) -> dict[str, dict]:
+    """Parse a :func:`to_prometheus` exposition back into
+    ``{name: {"type": ..., "value": ...}}`` for counters/gauges and
+    ``{"type": "histogram", "buckets": [(le, cumulative), ...],
+    "sum": ..., "count": ...}`` for histograms. Supports exactly the
+    subset this module emits (no labels beyond ``le``)."""
+    out: dict[str, dict] = {}
+
+    def entry(name: str) -> dict:
+        return out.setdefault(name, {})
+
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(None, 3)
+            entry(name)["type"] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        series, _, value = line.rpartition(" ")
+        v = float(value)
+        if '{le="' in series:
+            base = series[:series.index("{")]
+            le = series[series.index('le="') + 4:series.rindex('"')]
+            name = base[:-len("_bucket")]
+            entry(name).setdefault("buckets", []).append(
+                (float("inf") if le == "+Inf" else float(le), v))
+        elif series.endswith("_sum") and series[:-4] in out \
+                and out[series[:-4]].get("type") == "histogram":
+            entry(series[:-4])["sum"] = v
+        elif series.endswith("_count") and series[:-6] in out \
+                and out[series[:-6]].get("type") == "histogram":
+            entry(series[:-6])["count"] = v
+        else:
+            entry(series)["value"] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trace JSONL.
+# ---------------------------------------------------------------------------
+
+def write_trace_jsonl(events: Union[TraceBuffer, Iterable[TraceEvent]],
+                      path: Union[str, Path]) -> int:
+    """One JSON object per line, emission order; returns lines written."""
+    if isinstance(events, TraceBuffer):
+        events = events.events()
+    n = 0
+    with open(path, "w", encoding="utf-8") as f:
+        for ev in events:
+            f.write(json.dumps(ev.to_json(), separators=(",", ":")))
+            f.write("\n")
+            n += 1
+    return n
+
+
+def read_trace_jsonl(path: Union[str, Path]) -> list[TraceEvent]:
+    events: list[TraceEvent] = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(TraceEvent.from_json(json.loads(line)))
+    return events

@@ -1,0 +1,279 @@
+"""Hardware-health timelines: per-slot drift/trim/retirement over time.
+
+Consumes the trace bus's silicon events (``drift_probe``, ``retrim``,
+``retire``, ``recal``, ``silicon_refresh``) and reconstructs what the
+end-of-run ``DriftStatus`` log cannot show: *when* each tile slot's
+offset residue grew, *which* probe tripped the alarm, which slots the
+tiered re-trim pushed onto the coarse DAC and which it retired, and what
+every recalibration cost in reload bits / nJ. The per-slot matrices are
+available only when the bus was installed with ``detail=True`` (the
+engine ships per-slot residue/tier vectors in those payloads); the
+scalar trajectory (rel-L2, SQNR, clip ratio, alarm/recal marks) is
+always reconstructable.
+
+This is the substrate ROADMAP item 1 (multi-tenant fleets) builds
+per-tenant accounting on, and what makes the collaborative macros'
+6-12 dB SQNR yield floor debuggable: a slot-tier heatmap over service
+age shows *where* in the fleet the floor comes from.
+"""
+# repro-lint: module=observability
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.obs.trace import TraceEvent
+
+# Tier encoding shared with repro.silicon.instance.retrim_comparators.
+TIER_FINE, TIER_COARSE, TIER_RETIRED, TIER_UNKNOWN = 0, 1, 2, -1
+_TIER_GLYPHS = {TIER_UNKNOWN: " ", TIER_FINE: ".", TIER_COARSE: "o",
+                TIER_RETIRED: "#"}
+
+
+def rel_l2_to_sqnr_db(rel_l2: float) -> float:
+    """Probe rel-L2 → SQNR in dB (the macro-zoo yield metric)."""
+    if rel_l2 <= 0.0:
+        return math.inf
+    return -20.0 * math.log10(rel_l2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbePoint:
+    """One drift probe on the scalar health trajectory."""
+
+    stream: int
+    rel_l2: float
+    sqnr_db: float
+    max_clip_ratio: float
+    alarm: bool
+    recalibrated: bool
+
+
+@dataclasses.dataclass
+class FleetHealthTimeline:
+    """Everything the silicon events say about one engine's fleet."""
+
+    probes: list[ProbePoint]
+    recal_streams: list[int]
+    recal_reload_bits: list[int]
+    recal_energy_nj: list[float]
+    # (n_retrims, n_slots) int8 tier verdicts per retrim event, and the
+    # probe residue matrix (n_probes, n_slots) in full-scale fractions —
+    # empty (0, 0) when the bus carried no detail payloads.
+    tier_streams: list[int]
+    tiers: np.ndarray
+    residue_fs: np.ndarray
+
+    @property
+    def alarms(self) -> list[int]:
+        return [p.stream for p in self.probes if p.alarm]
+
+    @property
+    def retired_now(self) -> int:
+        """Slots retired as of the LAST retrim (a level)."""
+        if self.tiers.size == 0:
+            return 0
+        return int((self.tiers[-1] == TIER_RETIRED).sum())
+
+    @property
+    def coarse_now(self) -> int:
+        if self.tiers.size == 0:
+            return 0
+        return int((self.tiers[-1] == TIER_COARSE).sum())
+
+
+def _ordered(events: Iterable[TraceEvent]) -> list[TraceEvent]:
+    return sorted(events, key=lambda e: e.seq)
+
+
+def from_events(events: Iterable[TraceEvent],
+                engine: Optional[int] = None) -> FleetHealthTimeline:
+    """Reconstruct the health timeline from a trace (bus events or a
+    re-read JSONL export); ``engine`` filters a multi-engine trace."""
+    probes: list[ProbePoint] = []
+    recal_streams: list[int] = []
+    recal_bits: list[int] = []
+    recal_nj: list[float] = []
+    tier_streams: list[int] = []
+    tier_rows: list[np.ndarray] = []
+    residue_rows: list[np.ndarray] = []
+    for ev in _ordered(events):
+        if engine is not None and ev.engine is not None \
+                and ev.engine != engine:
+            continue
+        if ev.kind == "drift_probe":
+            d = ev.data
+            rel = float(d.get("rel_l2", math.nan))
+            probes.append(ProbePoint(
+                stream=int(ev.stream or 0), rel_l2=rel,
+                sqnr_db=rel_l2_to_sqnr_db(rel) if rel == rel else math.nan,
+                max_clip_ratio=float(d.get("max_clip_ratio", math.nan)),
+                alarm=bool(d.get("alarm", False)),
+                recalibrated=bool(d.get("recalibrated", False))))
+            if "residue_fs" in d:
+                residue_rows.append(np.asarray(d["residue_fs"],
+                                               np.float32))
+        elif ev.kind == "recal":
+            recal_streams.append(int(ev.stream or 0))
+            recal_bits.append(int(ev.data.get("reload_bits", 0)))
+            recal_nj.append(float(ev.data.get("energy_nj", 0.0)))
+        elif ev.kind == "retrim":
+            tier_streams.append(int(ev.stream or 0))
+            if "tiers" in ev.data:
+                tier_rows.append(np.asarray(ev.data["tiers"], np.int8))
+    return FleetHealthTimeline(
+        probes=probes, recal_streams=recal_streams,
+        recal_reload_bits=recal_bits, recal_energy_nj=recal_nj,
+        tier_streams=tier_streams,
+        tiers=(np.stack(tier_rows) if tier_rows
+               else np.zeros((0, 0), np.int8)),
+        residue_fs=(np.stack(residue_rows) if residue_rows
+                    else np.zeros((0, 0), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Fleet heatmap.
+# ---------------------------------------------------------------------------
+
+def _downsample_slots(mat: np.ndarray, max_slots: int) -> np.ndarray:
+    """Max-pool the slot axis (worst tier wins a bucket — a heatmap that
+    hides a retired slot would be lying)."""
+    n = mat.shape[1]
+    if n <= max_slots:
+        return mat
+    bounds = np.linspace(0, n, max_slots + 1, dtype=int)
+    return np.stack([mat[:, a:b].max(axis=1)
+                     for a, b in zip(bounds, bounds[1:]) if b > a], axis=1)
+
+
+def fleet_heatmap(timeline: FleetHealthTimeline, *,
+                  max_slots: int = 64) -> dict:
+    """Slot-tier heatmap over retrim events (rows = retrims in time
+    order, cols = slot buckets, cell = worst tier in the bucket), plus
+    an ASCII render (``.`` fine / ``o`` coarse / ``#`` retired). JSON-
+    safe — this is the ``BENCH_obs.json`` fleet-health panel."""
+    tiers = timeline.tiers
+    if tiers.size == 0:
+        return {"rows": 0, "slots": 0, "grid": [], "render": [],
+                "legend": ". fine / o coarse / # retired"}
+    grid = _downsample_slots(tiers, max_slots)
+    render = ["".join(_TIER_GLYPHS.get(int(t), "?") for t in row)
+              for row in grid]
+    return {
+        "rows": int(grid.shape[0]),
+        "slots": int(tiers.shape[1]),
+        "slot_buckets": int(grid.shape[1]),
+        "streams": list(timeline.tier_streams),
+        "grid": grid.astype(int).tolist(),
+        "render": render,
+        "legend": ". fine / o coarse / # retired",
+        "retired_now": timeline.retired_now,
+        "coarse_now": timeline.coarse_now,
+    }
+
+
+# ---------------------------------------------------------------------------
+# The drift-alarm → recal → retire story (the bench's end-to-end gate).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DriftStory:
+    """The reconstructed maintenance narrative of one trace."""
+
+    steps: list[dict]             # ordered {stream, kind, summary}
+    alarm_stream: Optional[int]
+    recal_stream: Optional[int]
+    retire_stream: Optional[int]
+
+    @property
+    def complete(self) -> bool:
+        """Alarm observed, and the maintenance it triggered produced
+        both a retirement/coarse-tier verdict and a completed
+        recalibration at (or after) the alarm stream — the full
+        hardware-maintenance causal chain. The retrim/retire verdicts
+        land INSIDE the recalibration transaction (seq order:
+        drift_probe → retrim → retire → program → recal), so they are
+        ordered against the alarm, not the recal-complete event."""
+        return (self.alarm_stream is not None
+                and self.recal_stream is not None
+                and self.retire_stream is not None
+                and self.alarm_stream <= self.recal_stream
+                and self.alarm_stream <= self.retire_stream)
+
+
+def drift_story(events: Iterable[TraceEvent],
+                engine: Optional[int] = None) -> DriftStory:
+    """Walk a trace and reconstruct the first complete alarm → recal →
+    retire/retrim sequence (bench gate: a maintenance incident must be
+    fully explainable from the exported trace alone)."""
+    steps: list[dict] = []
+    alarm = recal = retire = None
+    for ev in _ordered(events):
+        if engine is not None and ev.engine is not None \
+                and ev.engine != engine:
+            continue
+        s = int(ev.stream or 0)
+        if ev.kind == "drift_probe" and ev.data.get("alarm"):
+            if alarm is None:
+                alarm = s
+            steps.append({
+                "stream": s, "kind": "drift_alarm",
+                "summary": (f"rel_l2 {ev.data.get('rel_l2', 0.0):.4f} "
+                            f"({', '.join(ev.data.get('reasons', []))})")})
+        elif ev.kind == "recal":
+            if recal is None and alarm is not None:
+                recal = s
+            steps.append({
+                "stream": s, "kind": "recal",
+                "summary": (f"reload {ev.data.get('reload_bits', 0)} bits"
+                            f" / {ev.data.get('energy_nj', 0.0):.1f} nJ, "
+                            f"post rel_l2 "
+                            f"{ev.data.get('post_rel_l2', 0.0):.4f}")})
+        elif ev.kind == "retrim":
+            n_ret = int(ev.data.get("retired", 0))
+            n_coarse = int(ev.data.get("coarse", 0))
+            if retire is None and alarm is not None \
+                    and (n_ret > 0 or n_coarse > 0):
+                retire = s
+            steps.append({
+                "stream": s, "kind": "retrim",
+                "summary": (f"{n_coarse} slot(s) to coarse tier, "
+                            f"{n_ret} retired")})
+        elif ev.kind == "retire":
+            if retire is None and alarm is not None:
+                retire = s
+            steps.append({
+                "stream": s, "kind": "retire",
+                "summary": f"{ev.data.get('retired', 0)} slot(s) retired"})
+    return DriftStory(steps=steps, alarm_stream=alarm,
+                      recal_stream=recal, retire_stream=retire)
+
+
+def slot_timelines(timeline: FleetHealthTimeline,
+                   slots: Optional[Sequence[int]] = None
+                   ) -> dict[int, list[dict]]:
+    """Per-slot event lists (stream-ordered) from the detail matrices:
+    residue at each probe, tier at each retrim. Empty when the trace
+    carried no detail payloads."""
+    out: dict[int, list[dict]] = {}
+    n_slots = max(
+        timeline.residue_fs.shape[1] if timeline.residue_fs.size else 0,
+        timeline.tiers.shape[1] if timeline.tiers.size else 0)
+    wanted = range(n_slots) if slots is None else slots
+    for s in wanted:
+        points: list[dict] = []
+        if timeline.residue_fs.size:
+            for p, row in zip(timeline.probes, timeline.residue_fs):
+                points.append({"stream": p.stream, "kind": "probe",
+                               "residue_fs": float(row[s])})
+        if timeline.tiers.size:
+            for st, row in zip(timeline.tier_streams, timeline.tiers):
+                points.append({"stream": st, "kind": "retrim",
+                               "tier": int(row[s])})
+        points.sort(key=lambda d: d["stream"])
+        out[int(s)] = points
+    return out

@@ -1,0 +1,259 @@
+"""Typed metrics registry: counters, gauges, fixed-bucket histograms.
+
+The serving stack's end-of-run reports (``ServeReport``,
+``TrafficReport``) are *views over this registry*: the engine and the
+batcher increment named metrics as events happen, report builders read
+cumulative values (or window deltas via :meth:`MetricsRegistry.snapshot`
+/ :meth:`MetricsRegistry.delta`), and nothing is counted in two places —
+the invariant that makes windowed reports sum to run totals even when a
+recalibration or an eviction straddles a window boundary.
+
+Conventions (Prometheus-compatible, see ``repro.obs.export``):
+
+* **Counter** — monotonically non-decreasing float. Windowed views take
+  deltas between snapshots; deltas over disjoint windows sum exactly to
+  the full-run delta.
+* **Gauge** — a level (current queue depth, retired slots NOW). Levels
+  are never summed across windows.
+* **Histogram** — fixed, immutable bucket edges chosen at registration;
+  observations land in ``counts`` (len(edges) + 1, the last bucket is
+  +inf) plus ``sum``/``count`` scalars. ``merge`` is commutative and
+  associative (element-wise adds), so shard-parallel collection is
+  order-invariant — the same discipline as the calibration lab's
+  observers.
+
+Metric names: ``[a-zA-Z_:][a-zA-Z0-9_:]*`` (the Prometheus charset), so
+every registered metric can be exposed verbatim.
+"""
+# repro-lint: module=observability
+
+from __future__ import annotations
+
+import re
+from typing import Iterable, Optional, Union
+
+import numpy as np
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+# Default latency-style edges (seconds): 1 ms .. 100 s, log-ish.
+LATENCY_EDGES_S = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0)
+
+
+class Counter:
+    """Monotonic cumulative count (float-valued; token/bit totals fit)."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        if n < 0:
+            raise ValueError(
+                f"counter {self.name}: negative increment {n} — use a "
+                f"gauge for values that go down")
+        self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """A level: set to the current value, read at report time."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def set(self, v: Union[int, float]) -> None:
+        self._value = float(v)
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        self._value += n
+
+    def dec(self, n: Union[int, float] = 1) -> None:
+        self._value -= n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Fixed-bucket histogram with order-invariant merge.
+
+    ``edges`` are the inclusive upper bounds of the finite buckets
+    (strictly ascending); one overflow bucket catches everything above
+    the last edge. ``counts`` is a float64 array so a histogram is a
+    valid fixed-shape pytree leaf wherever one is needed.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, edges: Iterable[float], help: str = ""):
+        self.name = name
+        self.help = help
+        e = tuple(float(x) for x in edges)
+        if len(e) < 1 or any(b <= a for a, b in zip(e, e[1:])):
+            raise ValueError(
+                f"histogram {name}: edges must be non-empty and strictly "
+                f"ascending, got {e}")
+        self.edges = e
+        self.counts = np.zeros((len(e) + 1,), np.float64)
+        self.sum = 0.0
+
+    @property
+    def count(self) -> float:
+        return float(self.counts.sum())
+
+    def observe(self, x: Union[int, float]) -> None:
+        x = float(x)
+        self.counts[np.searchsorted(self.edges, x, side="left")] += 1.0
+        self.sum += x
+
+    def observe_many(self, xs) -> None:
+        xs = np.asarray(xs, np.float64).ravel()
+        if xs.size == 0:
+            return
+        idx = np.searchsorted(self.edges, xs, side="left")
+        np.add.at(self.counts, idx, 1.0)
+        self.sum += float(xs.sum())
+
+    def merge(self, other: "Histogram") -> None:
+        """Fold ``other`` in (element-wise adds: commutative/associative,
+        so any merge order yields the identical state)."""
+        if other.edges != self.edges:
+            raise ValueError(
+                f"histogram {self.name}: merging incompatible edges "
+                f"{other.edges} into {self.edges}")
+        self.counts += other.counts
+        self.sum += other.sum
+
+    def quantile(self, q: float) -> float:
+        """Deterministic bucket-interpolated quantile estimate (q in
+        [0, 1]): linear within the bucket the rank falls in, clamped to
+        the last finite edge for overflow-bucket ranks. An *estimate* —
+        exact report percentiles come from the raw samples
+        (``repro.traffic.report.percentile``); this is the dashboard
+        view over merged, sample-free histogram state."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q={q} outside [0, 1]")
+        total = self.counts.sum()
+        if total == 0:
+            return float("nan")
+        rank = q * total
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, rank, side="left"))
+        if i >= len(self.edges):          # overflow bucket: clamp
+            return self.edges[-1]
+        lo = 0.0 if i == 0 else self.edges[i - 1]
+        hi = self.edges[i]
+        prev = 0.0 if i == 0 else float(cum[i - 1])
+        inb = float(self.counts[i])
+        frac = (rank - prev) / inb if inb > 0 else 0.0
+        return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Name-keyed metric store with get-or-create registration.
+
+    Re-registering an existing name returns the existing metric when the
+    type (and histogram edges) agree and raises otherwise — two call
+    sites can never silently count into differently-shaped state.
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, Metric] = {}
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __getitem__(self, name: str) -> Metric:
+        return self._metrics[name]
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def metrics(self) -> list[Metric]:
+        return [self._metrics[n] for n in self.names()]
+
+    def _register(self, name: str, make, check) -> Metric:
+        if not _NAME_RE.match(name):
+            raise ValueError(
+                f"metric name {name!r} is not Prometheus-exposable "
+                f"([a-zA-Z_:][a-zA-Z0-9_:]*)")
+        existing = self._metrics.get(name)
+        if existing is not None:
+            check(existing)
+            return existing
+        m = make()
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        def check(m):
+            if not isinstance(m, Counter):
+                raise ValueError(f"{name} is already a {m.kind}")
+        return self._register(name, lambda: Counter(name, help), check)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        def check(m):
+            if not isinstance(m, Gauge):
+                raise ValueError(f"{name} is already a {m.kind}")
+        return self._register(name, lambda: Gauge(name, help), check)
+
+    def histogram(self, name: str, edges: Iterable[float],
+                  help: str = "") -> Histogram:
+        edges = tuple(float(x) for x in edges)
+
+        def check(m):
+            if not isinstance(m, Histogram):
+                raise ValueError(f"{name} is already a {m.kind}")
+            if m.edges != edges:
+                raise ValueError(
+                    f"{name} is already registered with edges {m.edges}, "
+                    f"re-registration asked for {edges}")
+        return self._register(name, lambda: Histogram(name, edges, help),
+                              check)
+
+    # -- windowed views ------------------------------------------------
+
+    def snapshot(self) -> dict[str, float]:
+        """Scalar state of every metric (histograms contribute their
+        ``_sum`` / ``_count`` scalars) — feed to :meth:`delta` after a
+        serving window for exact windowed counters."""
+        out: dict[str, float] = {}
+        for m in self.metrics():
+            if isinstance(m, Histogram):
+                out[f"{m.name}_sum"] = m.sum
+                out[f"{m.name}_count"] = m.count
+            else:
+                out[m.name] = m.value
+        return out
+
+    def delta(self, before: Optional[dict[str, float]] = None
+              ) -> dict[str, float]:
+        """Counter/histogram-scalar deltas since ``before`` (gauges are
+        levels: reported as-is, never differenced). Metrics registered
+        after ``before`` was taken difference against zero."""
+        now = self.snapshot()
+        before = before or {}
+        out: dict[str, float] = {}
+        for name, v in now.items():
+            base = self._metrics.get(name)
+            if isinstance(base, Gauge):
+                out[name] = v
+            else:
+                out[name] = v - before.get(name, 0.0)
+        return out

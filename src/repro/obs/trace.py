@@ -1,0 +1,245 @@
+"""Process-local span/event bus: structured tracing for the serving stack.
+
+End-of-run snapshots (``ServeReport`` / ``TrafficReport`` /
+``DriftStatus``) say *how much* happened; the trace says *when*, on which
+slot/tenant/request, and *why*. Every event is a :class:`TraceEvent` —
+a kind from the serving taxonomy (``program``, ``reload``, ``recal``,
+``retrim``, ``drift_probe``, ``admit`` / ``shed`` / ``evict``,
+``prefill_wave``, ``decode_tick``, ``sanitize``, ...), a monotonic
+timestamp, the engine's input-stream index, optional slot / request /
+layer coordinates, and a JSON-safe payload (nJ / bits figures pulled
+from the Eq. 4 roll-up, drift residues, queue depths).
+
+Design constraints, in order:
+
+1. **Zero cost when off, bounded cost when on.** Host-side emitters are
+   one ``None`` check; the in-jit decode-tick emitter is staged into a
+   SEPARATE compiled twin of the decode step that exists only when the
+   engine was constructed with tracing enabled — a tracing-off engine
+   compiles exactly the program it compiles today and its decoded
+   tokens are BITWISE identical (gated in ``benchmarks/obs_report.py``).
+   Because any host callback in a jitted program forfeits the C++
+   fast-dispatch path (milliseconds per call on CPU), a tracing engine
+   dispatches the traced twin on a sampling cadence
+   (``trace_tick_interval``, default every 128th tick) and the pure
+   program otherwise — ``decode_tick`` events are a sampled timeline
+   (each names its stream index, so gaps are explicit), while the
+   metrics counters remain tick-exact. The overhead gate (<= 5% decode
+   tok/s, same bench) holds at the default cadence.
+2. **No retracing.** The in-jit emitter follows the calibration tap's
+   ``io_callback`` discipline (unordered, staged at trace time, routed
+   through a module-global read at FIRE time): the jitted decode step is
+   traced once per shape whether or not a bus is installed, and
+   installing / swapping a bus between runs never invalidates the cache.
+3. **Bounded memory.** The bus is a ring buffer: the newest ``capacity``
+   events win, ``dropped`` counts what the ring evicted, so a week-long
+   serve cannot OOM the host.
+
+The bus is process-local and deliberately global (one serving process =
+one timeline); concurrent engines tag events with their ``engine`` field
+and readers filter. Not thread-safe beyond CPython list-append atomicity
+— the serving loop is single-threaded, and unordered ``io_callback``s
+fire on the main thread between dispatches.
+"""
+# repro-lint: module=observability
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from contextlib import contextmanager
+from typing import Any, Iterator, Optional
+
+# Events whose payloads may carry large per-slot arrays (drift residue /
+# tier vectors). They are emitted only when the installed bus asks for
+# detail — the fleet heatmap needs them, steady-state tracing does not.
+DETAIL_KINDS = frozenset({"drift_probe", "retrim"})
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One structured event on the bus (JSON-safe by construction)."""
+
+    kind: str
+    t_ns: int                      # monotonic nanoseconds (host clock)
+    seq: int                       # bus-wide emission index (total order)
+    stream: Optional[int] = None   # engine input-stream counter
+    slot: Optional[int] = None     # fleet tile slot / cache slot
+    rid: Optional[Any] = None      # request id
+    layer: Optional[str] = None    # projection / layer name
+    engine: Optional[int] = None   # emitting engine's id() tag
+    data: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        out = {"kind": self.kind, "t_ns": self.t_ns, "seq": self.seq}
+        for f in ("stream", "slot", "rid", "layer", "engine"):
+            v = getattr(self, f)
+            if v is not None:
+                out[f] = v
+        if self.data:
+            out["data"] = self.data
+        return out
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "TraceEvent":
+        return cls(kind=obj["kind"], t_ns=int(obj["t_ns"]),
+                   seq=int(obj["seq"]), stream=obj.get("stream"),
+                   slot=obj.get("slot"), rid=obj.get("rid"),
+                   layer=obj.get("layer"), engine=obj.get("engine"),
+                   data=obj.get("data", {}))
+
+
+class TraceBuffer:
+    """Fixed-capacity ring of :class:`TraceEvent`; newest events win."""
+
+    def __init__(self, capacity: int = 65536, detail: bool = False):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.detail = detail          # ship per-slot arrays in payloads
+        self._ring: list[Optional[TraceEvent]] = [None] * capacity
+        self._next = 0                # next write position
+        self.total = 0                # events ever appended
+        self.dropped = 0              # events the ring evicted
+
+    def append(self, ev: TraceEvent) -> None:
+        if self._ring[self._next] is not None:
+            self.dropped += 1
+        self._ring[self._next] = ev
+        self._next = (self._next + 1) % self.capacity
+        self.total += 1
+
+    def __len__(self) -> int:
+        return min(self.total, self.capacity)
+
+    def events(self) -> list[TraceEvent]:
+        """Retained events in emission order (oldest surviving first)."""
+        if self.total <= self.capacity:
+            return [e for e in self._ring[:self._next] if e is not None]
+        return ([e for e in self._ring[self._next:] if e is not None]
+                + [e for e in self._ring[:self._next] if e is not None])
+
+    def by_kind(self, *kinds: str) -> list[TraceEvent]:
+        want = frozenset(kinds)
+        return [e for e in self.events() if e.kind in want]
+
+    def clear(self) -> None:
+        self._ring = [None] * self.capacity
+        self._next = 0
+        self.total = 0
+        self.dropped = 0
+
+
+# ---------------------------------------------------------------------------
+# The process-local bus.
+# ---------------------------------------------------------------------------
+
+_BUS: Optional[TraceBuffer] = None
+_SEQ = 0
+
+
+def bus() -> Optional[TraceBuffer]:
+    """The currently installed bus (None = tracing off)."""
+    return _BUS
+
+
+def enabled() -> bool:
+    return _BUS is not None
+
+
+def detail_enabled() -> bool:
+    return _BUS is not None and _BUS.detail
+
+
+def install(capacity: int = 65536, detail: bool = False) -> TraceBuffer:
+    """Install (and return) a fresh process-local bus."""
+    global _BUS
+    _BUS = TraceBuffer(capacity, detail=detail)
+    return _BUS
+
+
+def uninstall() -> None:
+    global _BUS
+    _BUS = None
+
+
+@contextmanager
+def tracing(capacity: int = 65536,
+            detail: bool = False) -> Iterator[TraceBuffer]:
+    """Scoped bus: install for the block, restore the previous one after.
+
+    The buffer stays readable after the block — exports and health
+    timelines are typically built from it once serving finished.
+    """
+    global _BUS
+    prev, _BUS = _BUS, TraceBuffer(capacity, detail=detail)
+    try:
+        yield _BUS
+    finally:
+        _BUS = prev
+
+
+def emit(kind: str, *, stream: Optional[int] = None,
+         slot: Optional[int] = None, rid: Optional[Any] = None,
+         layer: Optional[str] = None, engine: Optional[int] = None,
+         **data: Any) -> None:
+    """Host-side emit: one dict-build + list-append when a bus is
+    installed, one global read when not."""
+    if _BUS is None:
+        return
+    global _SEQ
+    _SEQ += 1
+    _BUS.append(TraceEvent(kind=kind, t_ns=time.monotonic_ns(), seq=_SEQ,
+                           stream=stream, slot=slot, rid=rid, layer=layer,
+                           engine=engine, data=data))
+
+
+@contextmanager
+def span(kind: str, **fields: Any) -> Iterator[None]:
+    """Emit ``kind`` once on exit with the block's duration in ``dur_ns``
+    (single-event spans: cheap, and ring-eviction cannot orphan a
+    begin/end pair)."""
+    if _BUS is None:
+        yield
+        return
+    t0 = time.monotonic_ns()
+    try:
+        yield
+    finally:
+        emit(kind, dur_ns=time.monotonic_ns() - t0, **fields)
+
+
+# ---------------------------------------------------------------------------
+# In-jit emission (the calib-tap io_callback pattern).
+# ---------------------------------------------------------------------------
+
+def emit_decode_tick(step, tokens, active,
+                     engine: Optional[int] = None) -> None:
+    """Stage one unordered ``io_callback`` emitting a ``decode_tick``
+    event per execution of the enclosing jitted program.
+
+    Call ONLY under trace, and only when the engine decided at
+    construction that this compiled program is a traced one — the
+    callback routes through the module-global bus at fire time, so the
+    staged program keeps working (or cheaply no-ops) as buses come and
+    go, without retracing. ``step`` is the engine's input-stream counter,
+    ``tokens`` the sampled next-token vector, ``active`` the number of
+    occupied slots this tick; ``engine`` is a small static tag captured
+    into the compiled program (NOT a traced operand).
+    """
+    from functools import partial
+
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    io_callback(partial(_decode_tick_host, engine), None,
+                jnp.asarray(step, jnp.int32),
+                jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(active, jnp.int32), ordered=False)
+
+
+def _decode_tick_host(engine, step, tokens, active) -> None:
+    if _BUS is None:
+        return
+    emit("decode_tick", stream=int(step), engine=engine,
+         active=int(active), tokens=[int(t) for t in tokens])

@@ -47,6 +47,7 @@ datapath, re-programs every macro, and charges the rewrite in the
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from functools import partial
 from typing import Callable, Optional
@@ -57,21 +58,36 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+
+# Monotonic engine tags for trace events (``TraceEvent.engine``): small,
+# stable, and human-readable where ``id()`` is neither.
+_ENGINE_TAGS = itertools.count(1)
 
 
-def make_serve_step(cfg: ModelConfig, pctx=None,
-                    temperature: float = 0.0) -> Callable:
+def make_serve_step(cfg: ModelConfig, pctx=None, temperature: float = 0.0,
+                    trace_tag: Optional[int] = None) -> Callable:
     """(params, cache, tokens, rng, step) -> (next_tokens, logits, cache).
 
     ``step`` is the engine's input-stream counter (decode steps + prefill
     calls), threaded through :func:`repro.core.cim.conversion_clock` so
     per-conversion thermal dither decorrelates across stream steps. It is
     unused (and free) when the exec tree carries no thermal silicon.
+
+    ``trace_tag`` (an engine's trace id) stages a ``decode_tick`` trace
+    emission into the compiled program — an unordered ``io_callback``
+    that routes through :mod:`repro.obs.trace`'s module-global bus at
+    FIRE time, so buses come and go without retracing, and a program
+    built with ``trace_tag=None`` is exactly today's program (the
+    bitwise-parity gate of ``benchmarks/obs_report.py``). Traced
+    programs take one extra operand, ``active`` (occupied slots this
+    tick), which rides the event payload.
     """
     pctx = pctx or T.ParallelContext()
     from repro.core import cim
 
-    def serve_step(params, cache, tokens, rng, step=0):
+    def serve_step(params, cache, tokens, rng, step=0, active=0):
         with cim.conversion_clock(step):
             logits, new_cache = T.lm_decode_step(params, cache, tokens,
                                                  cfg, pctx)
@@ -79,7 +95,10 @@ def make_serve_step(cfg: ModelConfig, pctx=None,
             nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
         else:
             nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32), logits, new_cache
+        nxt = nxt.astype(jnp.int32)
+        if trace_tag is not None:
+            obs_trace.emit_decode_tick(step, nxt, active, engine=trace_tag)
+        return nxt, logits, new_cache
 
     return serve_step
 
@@ -140,6 +159,9 @@ class ServeReport:
     # per-window delta): screened for retirement — their residue can no
     # longer be trimmed and only grows with further drift.
     retired_slots: int = 0
+    # Generated tokens discarded by slot evictions this window (deadline
+    # shedding): work the fleet paid for that no caller received.
+    evicted_tokens: int = 0
 
     @property
     def streams(self) -> int:
@@ -159,7 +181,8 @@ class ServeEngine:
                  temperature: float = 0.0, eos_id: Optional[int] = None,
                  seed: int = 0, program: bool = True, calibration=None,
                  fleet=None, batched_prefill: Optional[bool] = None,
-                 silicon=None, silicon_key=None, drift=None):
+                 silicon=None, silicon_key=None, drift=None,
+                 tracing: bool = False, trace_tick_interval: int = 128):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -183,7 +206,64 @@ class ServeEngine:
         # ``drift`` (a repro.silicon.drift DriftPolicy) probes the live
         # datapath against the calibration baseline every
         # ``check_interval`` streams and auto-recalibrates on alarm.
+        # ``tracing=True`` compiles a SECOND decode program with the
+        # in-jit ``decode_tick`` emission staged (see ``make_serve_step``
+        # — the ONLY observability decision baked into a compiled
+        # program; host-side events and metrics are always live and cost
+        # one global read when no bus/reader is attached). Any host
+        # callback in a jitted program costs the C++ fast-dispatch path
+        # (milliseconds per call on CPU), so the traced program runs on a
+        # SAMPLING CADENCE: every ``trace_tick_interval``-th decode tick
+        # dispatches it (and emits), every other tick runs the pure
+        # program. ``decode_tick`` events are therefore a sampled
+        # timeline; the metrics counters stay tick-exact. Interval 1
+        # traces every tick (tests; short diagnostic runs).
         self._exec_params = params
+        self.tracing = bool(tracing)
+        if trace_tick_interval < 1:
+            raise ValueError(
+                f"trace_tick_interval must be >= 1, "
+                f"got {trace_tick_interval}")
+        self.trace_tick_interval = int(trace_tick_interval)
+        self.trace_tag = next(_ENGINE_TAGS)
+        # The metrics registry every stream/health counter lives in:
+        # ``ServeReport`` (and the traffic lab's ``TrafficReport``) are
+        # views over this registry — counters are monotonic so windowed
+        # reports difference snapshots and disjoint windows sum exactly;
+        # the retrim-tier numbers are gauges (fleet-health LEVELS).
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._c_decode_steps = m.counter(
+            "serve_decode_steps_total", "engine decode ticks")
+        self._c_decode_tokens = m.counter(
+            "serve_decode_tokens_total", "tokens generated")
+        self._c_prefill_calls = m.counter(
+            "serve_prefill_calls_total", "batched-prefill waves")
+        self._c_prefill_tokens = m.counter(
+            "serve_prefill_tokens_total", "prompt tokens ingested")
+        self._c_drift_checks = m.counter(
+            "serve_drift_checks_total", "drift probes run")
+        self._c_drift_alarms = m.counter(
+            "serve_drift_alarms_total", "drift probes that alarmed")
+        self._c_recals = m.counter(
+            "serve_recalibrations_total", "auto-recalibration events")
+        self._c_recal_bits = m.counter(
+            "serve_recal_reload_bits_total",
+            "uArray weight bits rewritten by recalibrations")
+        self._c_evictions = m.counter(
+            "serve_evictions_total", "slots reclaimed before completion")
+        self._c_evicted_tokens = m.counter(
+            "serve_evicted_tokens_total",
+            "generated tokens discarded by evictions")
+        self._g_coarse = m.gauge(
+            "fleet_coarse_slots",
+            "slots on the coarse trim tier NOW (level)")
+        self._g_retired = m.gauge(
+            "fleet_retired_slots",
+            "slots screened for retirement NOW (level)")
+        # Per-stream Eq. 4 reload payload for "reload" trace events
+        # (None = pinned or fleet-less: nothing is reloaded per stream).
+        self._stream_reload_payload = None
         self.programmed = False
         self.calibration = None
         self.fleet = fleet
@@ -262,7 +342,14 @@ class ServeEngine:
             self._program(scales)
             self.programmed = True
         self.cache = T.lm_init_cache(cfg, slots, max_len)
-        self.step_fn = jax.jit(make_serve_step(cfg, temperature=temperature))
+        # The pure program (exactly today's); compiled lazily on first
+        # untraced tick, so an interval-1 tracing engine never pays for
+        # it. The traced twin exists only when tracing is on.
+        self.step_fn = jax.jit(make_serve_step(cfg,
+                                               temperature=temperature))
+        self._traced_step_fn = jax.jit(make_serve_step(
+            cfg, temperature=temperature,
+            trace_tag=self.trace_tag)) if self.tracing else None
         self.requests: list[Optional[Request]] = [None] * slots
         self._feed = np.zeros((slots,), np.int32)       # next token to feed
         self._prompt_left = np.zeros((slots,), np.int64)
@@ -293,20 +380,6 @@ class ServeEngine:
         # rebuilds self._exec_params (drift refresh, recalibration) —
         # mesh sharding (repro.traffic.shard) re-places the new tree.
         self.exec_refresh_hooks: list[Callable] = []
-        # Stream counters feeding the per-run ServeReport.
-        self._decode_steps = 0
-        self._decode_tokens = 0
-        self._prefill_calls = 0
-        self._prefill_tokens = 0
-        self._drift_checks = 0
-        self._drift_alarms = 0
-        self._recals = 0
-        self._recal_bits = 0
-        # Tiered-retrim fleet health, refreshed at every recalibration:
-        # levels (how many slots are coarse-trimmed / retired NOW), not
-        # cumulative event counts.
-        self._retrim_coarse = 0
-        self._retired_slots = 0
         self.last_report: Optional[ServeReport] = None
         # Runtime sanitizer (REPRO_SANITIZE=1): shadow-execute every
         # decode tick through the reference einsum datapath and assert
@@ -324,6 +397,11 @@ class ServeEngine:
             # post-recalibration measurement is judged against.
             self._monitor.record_baseline(self._exec_params)
 
+    def _emit(self, kind: str, **kw) -> None:
+        """Host-side trace emission tagged with this engine (a no-op
+        global read when no bus is installed)."""
+        obs_trace.emit(kind, engine=self.trace_tag, **kw)
+
     def _program(self, scales) -> None:
         """(Re-)program every macro from the base tree, then overlay the
         current silicon state. Plane-level (bit-packed) state is forced
@@ -337,6 +415,19 @@ class ServeEngine:
         self._programmed_params = program_weights(
             self._base_params, self.cfg.mf.cim, scales=scales,
             swap=self._swap_map, prefer_lossless=self.silicon is None)
+        if obs_trace.enabled():
+            data = {"calibrated": scales is not None,
+                    "reprogram": self.programmed}
+            if self.schedule is not None:
+                from repro.compiler.cost import serve_reload_cost
+                data.update(
+                    pinned=self.schedule.pinned,
+                    tiles=self.schedule.total_tiles,
+                    weight_bits=(self.schedule.total_tiles
+                                 * self.fleet.tile_weight_bits),
+                    per_stream=serve_reload_cost(self.schedule,
+                                                 1).to_payload())
+            self._emit("program", stream=self.stream_index, **data)
         self._refresh_silicon()
 
     def _refresh_silicon(self) -> None:
@@ -385,6 +476,12 @@ class ServeEngine:
         self._fleet_utilization = model_cost(self.schedule)[1].utilization
         if self.schedule.pinned:
             return None
+        # Round-interleaved serving replays this reload charge on every
+        # input stream — cache the Eq. 4 payload once for the per-stream
+        # "reload" trace events.
+        from repro.compiler.cost import serve_reload_cost
+        self._stream_reload_payload = \
+            serve_reload_cost(self.schedule, 1).to_payload()
         not_linear = [g.name for g in groups if g.kind != "linear"]
         if not_linear:
             raise NotImplementedError(
@@ -407,7 +504,7 @@ class ServeEngine:
         """The engine's input-stream counter (decode steps + prefill
         calls) — the conversion clock threaded into the jitted forwards
         and the age clock of the silicon lab."""
-        return self._decode_steps + self._prefill_calls
+        return int(self._c_decode_steps.value + self._c_prefill_calls.value)
 
     def evict(self, slot: int) -> Request:
         """Reclaim an occupied slot before its request finishes (deadline-
@@ -415,12 +512,23 @@ class ServeEngine:
         SLO). The request is marked ``evicted`` and returned with its
         partial output; the slot is free for the next admission wave —
         whose `_reset_slots` scatter zeroes the cache positions, so no
-        state leaks to the next occupant."""
+        state leaks to the next occupant.
+
+        The freed slot's in-flight work is made visible: the generated
+        tokens the eviction discards feed ``serve_evicted_tokens_total``
+        (surfacing as ``ServeReport.evicted_tokens`` and the traffic
+        lab's ``TrafficReport.evicted_tokens``) and ride the ``evict``
+        trace event next to the un-ingested prompt remainder."""
         req = self.requests[slot]
         if req is None:
             raise ValueError(f"slot {slot} is not occupied")
         req.evicted = True
         self.requests[slot] = None
+        freed = len(req.out)
+        self._c_evictions.inc()
+        self._c_evicted_tokens.inc(freed)
+        self._emit("evict", stream=self.stream_index, slot=slot,
+                   tokens=freed, prompt_left=int(self._prompt_left[slot]))
         return req
 
     def submit_many(self, reqs: list[Request]) -> int:
@@ -450,6 +558,9 @@ class ServeEngine:
         pad = np.full((self.slots,), sel[0], np.int32)
         pad[:len(sel)] = sel
         self.cache = _reset_slots(self.cache, jnp.asarray(pad))
+        if obs_trace.enabled():
+            self._emit("admit", stream=self.stream_index, slots=len(sel),
+                       prompt_tokens=sum(len(r.prompt) for r in take))
         for hook in self.admission_hooks:
             hook(list(zip(sel, take)))
         if self.batched_prefill:
@@ -476,12 +587,15 @@ class ServeEngine:
             valid[s] = n
             self._feed[s] = req.prompt[n]
             self._prompt_left[s] = 0
+        stream = self.stream_index
         self.cache = self._prefill_fn(self._exec_params, self.cache,
                                       jnp.asarray(tokens),
                                       jnp.asarray(valid),
-                                      jnp.int32(self.stream_index))
-        self._prefill_calls += 1
-        self._prefill_tokens += int(valid.sum())
+                                      jnp.int32(stream))
+        self._c_prefill_calls.inc()
+        self._c_prefill_tokens.inc(int(valid.sum()))
+        self._emit("prefill_wave", stream=stream, slots=len(wave),
+                   tokens=int(valid.sum()), bucket=t_b)
         self._after_stream()
 
     def _validate(self, reqs: list[Request]) -> None:
@@ -508,13 +622,27 @@ class ServeEngine:
         tokens = jnp.asarray(self._feed)
         step_idx = jnp.int32(self.stream_index)
         cache_before = self.cache if self._sanitizer is not None else None
-        nxt, logits, self.cache = self.step_fn(self._exec_params,
-                                               self.cache, tokens, sub,
-                                               step_idx)
+        if self.tracing and \
+                int(self._c_decode_steps.value) \
+                % self.trace_tick_interval == 0:
+            # Sampled tick: dispatch the traced twin program. One extra
+            # int32 operand (occupied slots) rides the staged decode_tick
+            # emission. Same jaxpr every sampled tick — the operand is an
+            # array, not a Python constant — so the twin is traced once
+            # and the cadence never recompiles anything.
+            active = jnp.int32(
+                sum(r is not None for r in self.requests))
+            nxt, logits, self.cache = self._traced_step_fn(
+                self._exec_params, self.cache, tokens, sub, step_idx,
+                active)
+        else:
+            nxt, logits, self.cache = self.step_fn(self._exec_params,
+                                                   self.cache, tokens,
+                                                   sub, step_idx)
         if self._sanitizer is not None:
             self._sanitizer.check_step(self, cache_before, tokens, sub,
                                        step_idx, nxt, logits)
-        self._decode_steps += 1
+        self._c_decode_steps.inc()
         nxt = np.asarray(nxt)
         for s, req in enumerate(self.requests):
             if req is None:
@@ -527,7 +655,7 @@ class ServeEngine:
                 continue
             tok = int(nxt[s])
             req.out.append(tok)
-            self._decode_tokens += 1
+            self._c_decode_tokens.inc()
             self._feed[s] = tok
             if (self.eos_id is not None and tok == self.eos_id) or \
                     len(req.out) >= req.max_new_tokens:
@@ -542,11 +670,16 @@ class ServeEngine:
     _SILICON_UPDATE_DEFAULT = 8
 
     def _after_stream(self) -> None:
-        """Per-input-stream hook: age the silicon, refresh the drifted
+        """Per-input-stream hook: charge the stream's reload trace event
+        (non-pinned schedules), age the silicon, refresh the drifted
         views on cadence, run the drift probe on cadence."""
+        if (self._stream_reload_payload is not None
+                and obs_trace.enabled()):
+            self._emit("reload", stream=self.stream_index,
+                       **self._stream_reload_payload)
         if self.silicon is None and self._monitor is None:
             return
-        streams = self._decode_steps + self._prefill_calls
+        streams = self.stream_index
         if self.silicon is not None and self._drifting:
             # A fleet with zero drift sigmas never changes with age, so
             # static-silicon engines skip the per-token aging entirely.
@@ -562,16 +695,30 @@ class ServeEngine:
             self._drift_check(streams)
 
     def _drift_check(self, streams: int) -> None:
-        self._drift_checks += 1
+        self._c_drift_checks.inc()
         status = self._monitor.check(self._exec_params, streams)
+        # Emit the probe BEFORE any recalibration it triggers, so the
+        # trace's seq order reads causally: drift_probe(alarm) →
+        # retrim → retire → program → recal.
+        if obs_trace.enabled():
+            data = dict(rel_l2=float(status.rel_l2),
+                        baseline_rel_l2=float(status.baseline_rel_l2),
+                        max_clip_ratio=float(status.max_clip_ratio),
+                        alarm=bool(status.alarm),
+                        reasons=list(status.reasons))
+            if obs_trace.detail_enabled() and self.silicon is not None:
+                off = np.asarray(
+                    self.macro.effective_offsets(self.silicon))
+                data["residue_fs"] = [round(float(x), 6) for x in off]
+            self._emit("drift_probe", stream=streams, **data)
         if status.alarm:
-            self._drift_alarms += 1
+            self._c_drift_alarms.inc()
             if self.drift.auto_recalibrate:
                 post = self._recalibrate(streams)
                 status = dataclasses.replace(
                     status, recalibrated=True, post_rel_l2=post,
-                    retrim_coarse_slots=self._retrim_coarse,
-                    retired_slots=self._retired_slots)
+                    retrim_coarse_slots=int(self._g_coarse.value),
+                    retired_slots=int(self._g_retired.value))
         self.drift_log.append(status)
         self.last_drift_status = status
 
@@ -587,11 +734,22 @@ class ServeEngine:
         from repro.calib.artifact import CalibrationArtifact
         from repro.calib.corpus import scales_from_stats
         if self.silicon is not None:
+            prev_retired = int(self._g_retired.value)
             self.silicon, tiers = self.macro.retrim(self.silicon)
             tiers = np.asarray(tiers)
-            self._retrim_coarse = int((tiers == 1).sum())
-            self._retired_slots = int((tiers == 2).sum())
+            coarse = int((tiers == 1).sum())
+            retired = int((tiers == 2).sum())
+            self._g_coarse.set(coarse)
+            self._g_retired.set(retired)
             self._refresh_silicon()
+            if obs_trace.enabled():
+                data = dict(coarse=coarse, retired=retired)
+                if obs_trace.detail_enabled():
+                    data["tiers"] = [int(t) for t in tiers]
+                self._emit("retrim", stream=streams, **data)
+                if retired > prev_retired:
+                    self._emit("retire", stream=streams, retired=retired,
+                               newly=retired - prev_retired)
         # One probe replay on the healed datapath measures the live
         # activation statistics (the monitor's observe forward is
         # compiled once; re-attachment changes leaf values only).
@@ -606,30 +764,44 @@ class ServeEngine:
             scales=scales,
             meta=dict(self.calibration.meta,
                       recalibrated_at_stream=streams))
-        self._recals += 1
+        self._c_recals.inc()
+        bits = 0
         if self.schedule is not None:
-            self._recal_bits += (self.schedule.total_tiles
-                                 * self.fleet.tile_weight_bits)
+            bits = self.schedule.total_tiles * self.fleet.tile_weight_bits
+            self._c_recal_bits.inc(bits)
         post = self._monitor.rel_l2(self._exec_params)
         # Future drift is judged against the healed datapath, not day
         # zero — the re-programmed scales shifted the noise floor.
         self._monitor.rebaseline(post)
+        if obs_trace.enabled():
+            nj = (bits * self.fleet.reload_j_per_bit * 1e9
+                  if self.schedule is not None else 0.0)
+            self._emit("recal", stream=streams, reload_bits=bits,
+                       energy_nj=nj, post_rel_l2=float(post))
         return post
 
     def counters(self) -> dict:
-        """Snapshot of the engine's cumulative stream counters. Take one
-        before a serving window and hand it to :meth:`report_since` after
-        — how external schedulers (``repro.traffic``) get per-window
-        :class:`ServeReport`s without going through :meth:`run`."""
-        return dict(decode_steps=self._decode_steps,
-                    decode_tokens=self._decode_tokens,
-                    prefill_calls=self._prefill_calls,
-                    prefill_tokens=self._prefill_tokens,
-                    drift_checks=self._drift_checks,
-                    drift_alarms=self._drift_alarms,
-                    recals=self._recals, recal_bits=self._recal_bits,
-                    retired_slots=self._retired_slots,
-                    retrim_coarse_slots=self._retrim_coarse)
+        """Snapshot of the engine's cumulative stream counters (a view
+        over ``self.metrics``). Take one before a serving window and hand
+        it to :meth:`report_since` after — how external schedulers
+        (``repro.traffic``) get per-window :class:`ServeReport`s without
+        going through :meth:`run`. Every entry except the two fleet-
+        health LEVELS (``retired_slots`` / ``retrim_coarse_slots``) is a
+        monotonic counter, so deltas over disjoint windows sum exactly to
+        the full-run totals — no event (a recalibration straddling a
+        window boundary included) is ever counted twice."""
+        return dict(decode_steps=int(self._c_decode_steps.value),
+                    decode_tokens=int(self._c_decode_tokens.value),
+                    prefill_calls=int(self._c_prefill_calls.value),
+                    prefill_tokens=int(self._c_prefill_tokens.value),
+                    drift_checks=int(self._c_drift_checks.value),
+                    drift_alarms=int(self._c_drift_alarms.value),
+                    recals=int(self._c_recals.value),
+                    recal_bits=int(self._c_recal_bits.value),
+                    evictions=int(self._c_evictions.value),
+                    evicted_tokens=int(self._c_evicted_tokens.value),
+                    retired_slots=int(self._g_retired.value),
+                    retrim_coarse_slots=int(self._g_coarse.value))
 
     def report_since(self, before: dict, elapsed_s: float) -> ServeReport:
         """Eq. 4-charged :class:`ServeReport` of the window between a
@@ -648,7 +820,11 @@ class ServeEngine:
             recal_reload_bits=now["recal_bits"] - before["recal_bits"],
             # A fleet-health level as of the last recalibration, not a
             # windowed delta — retirement is a standing condition.
-            retired_slots=now["retired_slots"])
+            retired_slots=now["retired_slots"],
+            # .get: snapshots predating the telemetry counters lack the
+            # key (saved-to-JSON benchmark baselines).
+            evicted_tokens=(now["evicted_tokens"]
+                            - before.get("evicted_tokens", 0)))
         return self.last_report
 
     def run(self, reqs: list[Request], max_ticks: int = 10_000
@@ -703,8 +879,8 @@ class ServeEngine:
                       prefill_calls: int, prefill_tokens: int,
                       elapsed_s: float, drift_checks: int = 0,
                       drift_alarms: int = 0, recalibrations: int = 0,
-                      recal_reload_bits: int = 0,
-                      retired_slots: int = 0) -> ServeReport:
+                      recal_reload_bits: int = 0, retired_slots: int = 0,
+                      evicted_tokens: int = 0) -> ServeReport:
         pinned = None
         rounds_max = 0
         utilization = 0.0
@@ -737,7 +913,8 @@ class ServeEngine:
             utilization=utilization, drift_checks=drift_checks,
             drift_alarms=drift_alarms, recalibrations=recalibrations,
             recal_reload_bits=recal_reload_bits, recal_energy_j=recal_j,
-            recal_s=recal_s, retired_slots=retired_slots)
+            recal_s=recal_s, retired_slots=retired_slots,
+            evicted_tokens=evicted_tokens)
 
 
 def _check_calibration_names(params, calibration) -> None:

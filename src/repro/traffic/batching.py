@@ -29,6 +29,8 @@ import dataclasses
 import time
 from typing import Optional
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import LATENCY_EDGES_S
 from repro.serve.engine import Request
 from repro.traffic.workload import TrafficRequest
 
@@ -112,6 +114,23 @@ class ContinuousBatcher:
         self._slot_map: dict[int, TrafficRequest] = {}
         self._by_serve: dict[int, TrafficRequest] = {}
         engine.admission_hooks.append(self._on_wave)
+        # Scheduler-side telemetry rides the ENGINE's metrics registry —
+        # one registry per serving process, one Prometheus exposition.
+        # Latencies are in clock seconds (virtual or wall, whichever
+        # clock drives this batcher).
+        m = engine.metrics
+        self._g_queue = m.gauge(
+            "traffic_queue_depth", "queued requests NOW (level)")
+        self._c_shed = m.counter(
+            "traffic_shed_total", "requests rejected or shed")
+        self._c_completed = m.counter(
+            "traffic_completed_total", "requests served to completion")
+        self._h_ttft = m.histogram(
+            "traffic_ttft_s", LATENCY_EDGES_S,
+            "time to first token, completed requests (clock seconds)")
+        self._h_latency = m.histogram(
+            "traffic_latency_s", LATENCY_EDGES_S,
+            "arrival-to-done latency, completed requests (clock seconds)")
 
     # -- engine admission hook ------------------------------------------
 
@@ -123,9 +142,13 @@ class ContinuousBatcher:
 
     # -- queue policy ---------------------------------------------------
 
-    def _reject(self, tr: TrafficRequest, now: float) -> None:
+    def _reject(self, tr: TrafficRequest, now: float,
+                reason: str = "inadmissible") -> None:
         tr.state = "rejected"
         tr.t_done_s = now
+        self._c_shed.inc()
+        obs_trace.emit("shed", rid=tr.rid, engine=self.engine.trace_tag,
+                       reason=reason)
 
     def _admissible(self, tr: TrafficRequest) -> bool:
         """Cache-fit check — rejection, not an exception: under open-loop
@@ -161,7 +184,10 @@ class ContinuousBatcher:
                 tr = arrivals[i]
                 i += 1
                 if len(queue) >= adm.max_queue or not self._admissible(tr):
-                    self._reject(tr, now)
+                    self._reject(tr, now,
+                                 "queue_full"
+                                 if len(queue) >= adm.max_queue
+                                 else "inadmissible")
                     continue
                 tr.state = "queued"
                 queue.append(tr)
@@ -175,12 +201,18 @@ class ContinuousBatcher:
                 late = [t for t in queue if now > t.ttft_deadline_s]
                 for tr in late:
                     queue.remove(tr)
-                    self._reject(tr, now)
+                    self._reject(tr, now, "ttft_slo")
             # 4) evict in-flight requests past their completion deadline
             if adm.evict_past_deadline:
                 for slot, tr in list(self._slot_map.items()):
                     if now > tr.deadline_s and not tr.serve.done:
+                        # engine.evict emits the slot-side "evict" event
+                        # (freed tokens); this one joins it to the rid.
                         eng.evict(slot)
+                        obs_trace.emit("evict_sched", rid=tr.rid,
+                                       slot=slot,
+                                       engine=eng.trace_tag,
+                                       reason="deadline")
                         del self._slot_map[slot]
                         tr.state = "evicted"
                         tr.t_done_s = now
@@ -207,6 +239,7 @@ class ContinuousBatcher:
             # 6) one decode tick for every occupied slot
             occupied.append(len(self._slot_map))
             queue_depth.append(len(queue))
+            self._g_queue.set(len(queue))
             eng.step()
             clock.on_decode()
             ticks += 1
@@ -218,6 +251,10 @@ class ContinuousBatcher:
                 if tr.serve.done:
                     tr.state = "completed"
                     tr.t_done_s = now
+                    self._c_completed.inc()
+                    if tr.ttft_s is not None:
+                        self._h_ttft.observe(tr.ttft_s)
+                    self._h_latency.observe(tr.latency_s)
                     del self._slot_map[slot]
 
         # drain bookkeeping for anything still alive at the tick budget
@@ -226,13 +263,15 @@ class ContinuousBatcher:
         now = clock.now
         for slot, tr in list(self._slot_map.items()):
             eng.evict(slot)
+            obs_trace.emit("evict_sched", rid=tr.rid, slot=slot,
+                           engine=eng.trace_tag, reason="out_of_ticks")
             tr.state = "evicted"
             tr.t_done_s = now
         self._slot_map.clear()
         for tr in queue:
-            self._reject(tr, now)
+            self._reject(tr, now, "out_of_ticks")
         for tr in arrivals[i:]:
-            self._reject(tr, now)
+            self._reject(tr, now, "out_of_ticks")
         self._by_serve.clear()
         elapsed = clock.now - t_start
         report = eng.report_since(counters0, elapsed)

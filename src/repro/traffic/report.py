@@ -19,7 +19,18 @@ from repro.traffic.batching import TrafficRunLog
 
 def percentile(xs: Sequence[float], q: float) -> float:
     """Deterministic linear-interpolation percentile (q in [0, 100]) —
-    no numpy dtype surprises in JSON-bound report fields."""
+    no numpy dtype surprises in JSON-bound report fields.
+
+    Method (pinned by ``tests/test_traffic.py``): Hyndman–Fan type 7,
+    the numpy/Excel default. Sort the n samples, place q at fractional
+    rank ``pos = (n - 1) * q / 100`` and linearly interpolate between
+    the two neighbouring order statistics; ``pos`` past the last index
+    clamps to the maximum. Consequences worth knowing when reading
+    small-sample tails: p99/p999 of fewer than ~100/~1000 samples sit
+    between the two largest samples (n >= 2) or AT the maximum — they
+    never extrapolate beyond observed data, and adding one large sample
+    moves them deterministically. Empty input returns NaN rather than
+    raising: a load point where nothing completed still reports."""
     if not xs:
         return float("nan")
     if not 0.0 <= q <= 100.0:
@@ -45,6 +56,9 @@ class TrafficReport:
     completed: int
     rejected: int                 # shed at admission or past-TTFT in queue
     evicted: int                  # reclaimed in flight past deadline
+    evicted_tokens: int           # generated tokens those evictions threw
+    # away (single-sourced from the engine's eviction counter, so a
+    # window report and the run report can never disagree)
     slo_attainment: float         # fraction of OFFERED requests slo_met
     # -- throughput ----------------------------------------------------
     tok_s: float                  # generated tokens / clock elapsed
@@ -118,7 +132,7 @@ def from_run(log: TrafficRunLog, engine) -> TrafficReport:
         offered_rps=(n - 1) / span if span > 0 else float("inf"),
         n_requests=n,
         completed=len(completed), rejected=int(rejected),
-        evicted=int(evicted),
+        evicted=int(evicted), evicted_tokens=int(sr.evicted_tokens),
         slo_attainment=sum(r.slo_met for r in reqs) / n if n else 0.0,
         tok_s=sr.decode_tokens / log.elapsed_s if log.elapsed_s > 0
         else 0.0,

@@ -158,6 +158,22 @@ class TestClockAndPercentile:
         with pytest.raises(ValueError, match="outside"):
             percentile(xs, 101)
 
+    def test_small_sample_tail_percentiles(self):
+        # Hyndman-Fan type 7 (the documented method): with n samples the
+        # tail sits at fractional rank (n-1)*q/100 BETWEEN the two
+        # largest order statistics — never extrapolated past the max.
+        xs = [1.0, 2.0, 3.0, 4.0]
+        assert percentile(xs, 99) == pytest.approx(3.97)
+        assert percentile(xs, 99.9) == pytest.approx(3.997)
+        assert percentile(xs, 99) <= max(xs)
+        # Adding one large sample moves the tail deterministically: the
+        # p99 rank (4*0.99 = 3.96) now interpolates into the new max.
+        assert percentile(xs + [40.0], 99) == pytest.approx(
+            4.0 + 0.96 * 36.0)
+        # Degenerate sizes: n=1 clamps to the sample, n=2 interpolates.
+        assert percentile([7.0], 99.9) == 7.0
+        assert percentile([1.0, 2.0], 99) == pytest.approx(1.99)
+
     def test_virtual_clock(self):
         c = VirtualClock(0.25, prefill_s=1.0)
         c.on_decode()
@@ -237,6 +253,25 @@ class TestAdmissionInvariants:
         assert a.state == "evicted" and a.t_done_s < 2.0
         assert b.state == "completed" and not a.slo_met and b.slo_met
         assert not eng.occupied_slots
+
+    def test_eviction_surfaces_freed_token_count(self):
+        from repro import obs
+        eng = _engine(slots=1, max_len=64)
+        a = _req(0, 0.0, [7], 20, ttft_dl=1.0, dl=1.2)
+        b = _req(1, 2.0, [8], 2, ttft_dl=1e9, dl=1e9)
+        bat = ContinuousBatcher(eng, clock=VirtualClock(0.1))
+        with obs.tracing() as buf:
+            rep = from_run(bat.run([a, b]), eng)
+        # The deadline eviction threw away A's in-flight decode output;
+        # that count must flow engine counter -> report -> trace event.
+        freed = len(a.serve.out)
+        assert a.state == "evicted" and freed > 0
+        assert rep.evicted == 1
+        assert rep.evicted_tokens == freed
+        assert eng.counters()["evicted_tokens"] == freed
+        (ev,) = buf.by_kind("evict")
+        assert ev.data["tokens"] == freed
+        assert rep.to_json()["evicted_tokens"] == freed
 
     def test_drop_late_sheds_queued_past_ttft(self):
         def run(drop):
